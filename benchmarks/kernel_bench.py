@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks (CPU wall-clock of the jnp refs; the Pallas paths
+run interpret=True so their wall-times are *not* TPU-indicative — the TPU
+performance story lives in the dry-run roofline, EXPERIMENTS.md §Roofline).
+
+Reported: us_per_call of the jitted oracle path at production-ish shapes,
+plus the derived routing throughput (the paper's headline metric is ops/s
+through the coordination layer).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as C
+from repro.kernels.range_match.ops import range_match
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.ssd_chunk.ops import ssd_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_range_match():
+    rows = []
+    for B in (4096, 65536):
+        for R in (128, 1024):
+            d = C.make_directory(R, 16, 3)
+            keys = jnp.asarray(RNG.integers(0, 2**32 - 2, B), jnp.uint32)
+            ops = jnp.asarray(RNG.integers(0, 2, B), jnp.int32)
+            fn = jax.jit(lambda dd, kk, oo: range_match(dd, kk, oo, use_pallas=False))
+            us = _time(fn, d, keys, ops)
+            rows.append((f"range_match/B{B}/R{R}", us, f"{B / us:.1f}Mops_s"))
+    return rows
+
+
+def bench_decode_attn():
+    rows = []
+    for (B, S, Hq, Hkv, D) in [(8, 4096, 32, 8, 128), (32, 2048, 8, 2, 64)]:
+        q = jnp.asarray(RNG.normal(size=(B, Hq, D)), jnp.bfloat16)
+        k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+        v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+        lengths = jnp.full((B,), S, jnp.int32)
+        fn = jax.jit(lambda *a: decode_attn(*a, use_pallas=False))
+        us = _time(fn, q, k, v, lengths)
+        flops = 2 * 2 * B * Hq * S * D  # qk + pv
+        rows.append((f"decode_attn/B{B}S{S}H{Hq}", us, f"{flops / us / 1e3:.1f}GFLOPs"))
+    return rows
+
+
+def bench_ssd():
+    rows = []
+    for (B, T, H, P, N, chunk) in [(2, 2048, 32, 64, 128, 128)]:
+        x = jnp.asarray(RNG.normal(size=(B, T, H, P)), jnp.float32)
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, T, H)), jnp.float32)
+        A = jnp.asarray(-RNG.uniform(0.5, 2.0, H), jnp.float32)
+        Bm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+        Cm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+        fn = jax.jit(lambda *a: ssd_scan(*a, chunk=chunk, use_pallas=False))
+        us = _time(fn, x, dt, A, Bm, Cm, iters=5)
+        rows.append((f"ssd_scan/B{B}T{T}H{H}", us, f"chunk{chunk}"))
+    return rows

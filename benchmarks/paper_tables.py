@@ -1,0 +1,190 @@
+"""Reproductions of the paper's tables/figures (BMV2 testbed -> JAX sim).
+
+Setup mirrors §8: 16 storage nodes, 128-record index table, chain length 3,
+range partitioning, YCSB workloads (16-byte keys -> uint32 matching values,
+128-byte values -> 32 f32 words).  Absolute times are abstract ticks (the
+paper's milliseconds are a Mininet artifact); the reproduced quantities are
+the *ratios* between coordination models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as C
+from repro.data.ycsb import WorkloadConfig, load_phase, run_phase
+
+N_NODES = 16
+N_RANGES = 128
+REPLICATION = 3
+
+
+@dataclasses.dataclass
+class BenchResult:
+    mode: str
+    throughput: float          # ops / tick
+    read_mean: float
+    read_p50: float
+    read_p99: float
+    write_mean: float
+    write_p50: float
+    write_p99: float
+    scan_mean: float
+    scan_p50: float
+    scan_p99: float
+
+
+def _percentiles(lat, mask):
+    lat = np.asarray(lat)[np.asarray(mask)]
+    if lat.size == 0:
+        return (float("nan"),) * 3
+    return float(lat.mean()), float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def run_workload(wcfg: WorkloadConfig, mode: str, *, seed: int = 0,
+                 run_store_ops: bool = False) -> BenchResult:
+    """Route + (optionally) execute a YCSB stream, then simulate timing."""
+    d = C.make_directory(N_RANGES, N_NODES, REPLICATION)
+    opcodes, keys, end_keys, values, arrivals = run_phase(wcfg)
+
+    q = C.make_queries(jnp.asarray(keys), jnp.asarray(opcodes),
+                       jnp.asarray(values), jnp.asarray(end_keys))
+    dec, d = C.route(d, q)
+
+    if run_store_ops:  # functional execution (correctness-coupled timing)
+        store = C.make_store(N_NODES, capacity=wcfg.n_records, value_dim=wcfg.value_dim)
+        lk, lv = load_phase(wcfg)
+        ql = C.make_queries(jnp.asarray(lk), jnp.full((len(lk),), C.OP_PUT), jnp.asarray(lv))
+        dl, d = C.route(d, ql)
+        store, _ = C.apply_routed(store, ql, dl)
+        store, _ = C.apply_routed(store, q, dec)
+
+    plan = C.plan_hops(q, dec, mode, C.LatencyModel(),
+                       rng=jax.random.PRNGKey(seed), num_nodes=N_NODES)
+    # closed-loop, 4 sequential client hosts — exactly the paper's testbed
+    # (h17..h20 replaying YCSB streams, §8)
+    lat, makespan = C.simulate_closed_loop(plan, n_clients=4, num_nodes=N_NODES)
+    lat = np.asarray(lat)
+
+    is_read = opcodes == C.OP_GET
+    is_write = opcodes == C.OP_PUT
+    is_scan = opcodes == C.OP_SCAN
+    rm, r50, r99 = _percentiles(lat, is_read)
+    wm, w50, w99 = _percentiles(lat, is_write)
+    sm, s50, s99 = _percentiles(lat, is_scan)
+    return BenchResult(mode, wcfg.n_ops / float(makespan),
+                       rm, r50, r99, wm, w50, w99, sm, s50, s99)
+
+
+# ---------------------------------------------------------------------------
+# Figure 13(a): throughput vs skewness, read-only
+# ---------------------------------------------------------------------------
+
+
+def fig13a_throughput_vs_skew(n_ops: int = 8192):
+    rows = []
+    for dist, theta in [("uniform", 0.0), ("zipf", 0.9), ("zipf", 0.95),
+                        ("zipf", 0.99), ("zipf", 1.2)]:
+        wcfg = WorkloadConfig(distribution=dist, zipf_theta=theta,
+                              n_ops=n_ops, read_ratio=1.0, update_ratio=0.0)
+        label = "uniform" if dist == "uniform" else f"zipf-{theta}"
+        for mode in C.MODES:
+            r = run_workload(wcfg, mode)
+            rows.append((label, mode, r.throughput))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 13(b,c): throughput vs write ratio (uniform / zipf-0.95)
+# ---------------------------------------------------------------------------
+
+
+def fig13bc_throughput_vs_write_ratio(n_ops: int = 8192):
+    rows = []
+    for dist, theta in [("uniform", 0.0), ("zipf", 0.95)]:
+        for wr in (0.0, 0.1, 0.3, 0.5, 0.7, 0.9):
+            wcfg = WorkloadConfig(distribution=dist, zipf_theta=theta, n_ops=n_ops,
+                                  read_ratio=1 - wr, update_ratio=wr)
+            label = "uniform" if dist == "uniform" else f"zipf-{theta}"
+            for mode in C.MODES:
+                r = run_workload(wcfg, mode)
+                rows.append((label, wr, mode, r.throughput))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Tables 1 & 2: latency analysis (uniform / zipf-1.2), mixed ops incl. scans
+# ---------------------------------------------------------------------------
+
+
+def tables12_latency(n_ops: int = 8192):
+    out = {}
+    for dist, theta, name in [("uniform", 0.0, "uniform"), ("zipf", 1.2, "zipf-1.2")]:
+        wcfg = WorkloadConfig(distribution=dist, zipf_theta=theta, n_ops=n_ops,
+                              read_ratio=0.45, update_ratio=0.45, scan_ratio=0.10)
+        out[name] = {mode: run_workload(wcfg, mode) for mode in C.MODES}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §5.1: load-balancing migration effect under skew
+# ---------------------------------------------------------------------------
+
+
+def load_balance_effect(n_ops: int = 8192, theta: float = 1.2):
+    d = C.make_directory(N_RANGES, N_NODES, REPLICATION)
+    wcfg = WorkloadConfig(distribution="zipf", zipf_theta=theta, n_ops=n_ops,
+                          read_ratio=0.9, update_ratio=0.1)
+    opcodes, keys, end_keys, values, arrivals = run_phase(wcfg)
+    q = C.make_queries(jnp.asarray(keys), jnp.asarray(opcodes),
+                       jnp.asarray(values), jnp.asarray(end_keys))
+
+    # period 1: observe load
+    dec, d = C.route(d, q)
+    report, d = C.pull_report(d, 0)
+    before = report.node_load
+    imb_before = before.max() / max(before.mean(), 1e-9)
+
+    # controller balances; same workload again (stationary popularity)
+    ctl = C.Controller(d, C.ControllerConfig(imbalance_threshold=1.1,
+                                             max_moves_per_round=16))
+    ops = ctl.balance(report)
+    d = ctl.directory()
+    dec2, d = C.route(d, q)
+    report2, d = C.pull_report(d, 1)
+    after = report2.node_load
+    imb_after = after.max() / max(after.mean(), 1e-9)
+    return {
+        "imbalance_before": float(imb_before),
+        "imbalance_after": float(imb_after),
+        "migrations": len(ops),
+        "max_load_before": float(before.max()),
+        "max_load_after": float(after.max()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# §6: hierarchical (multi-rack) routing — pod-crossing fraction
+# ---------------------------------------------------------------------------
+
+
+def hierarchy_stats(n_ops: int = 8192, n_pods: int = 2):
+    d = C.make_directory(N_RANGES, N_NODES, REPLICATION, num_pods=n_pods)
+    table = C.derive_pod_table(d, n_pods)
+    wcfg = WorkloadConfig(n_ops=n_ops, read_ratio=0.5, update_ratio=0.5)
+    opcodes, keys, end_keys, values, arrivals = run_phase(wcfg)
+    q = C.make_queries(jnp.asarray(keys), jnp.asarray(opcodes), jnp.asarray(values))
+    pods = np.asarray(C.route_pod(table, d, q))
+    # clients uniformly spread over pods: crossing = target pod != client pod
+    rng = np.random.default_rng(0)
+    client_pod = rng.integers(0, n_pods, size=len(pods))
+    crossing = float((pods != client_pod).mean())
+    dec, d = C.route(d, q)
+    # every routed target agrees with the pod-level direction (consistency)
+    node_pods = np.asarray(d.node_addr[:, 0])
+    agree = float((node_pods[np.asarray(dec.target)] == pods).mean())
+    return {"pod_crossing_fraction": crossing, "pod_table_agreement": agree}

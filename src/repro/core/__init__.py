@@ -1,0 +1,41 @@
+"""TurboKV core: in-mesh coordination for distributed key-value state.
+
+The paper's contribution (in-switch coordination, chain replication,
+statistics-driven migration, hierarchical indexing) as a composable JAX
+library.  See DESIGN.md for the P4-switch -> TPU-mesh mapping.
+"""
+
+from repro.core import keys
+from repro.core.keys import OP_GET, OP_PUT, OP_DEL, OP_SCAN, hash_key
+from repro.core.directory import Directory, make_directory, lookup_range, node_load
+from repro.core.routing import QueryBatch, RoutingDecision, route, expand_scans, make_queries
+from repro.core.store import StoreState, Responses, make_store, apply_routed, store_fill
+from repro.core.coordination import (
+    LatencyModel,
+    HopPlan,
+    plan_hops,
+    simulate,
+    simulate_closed_loop,
+    IN_SWITCH,
+    CLIENT_DRIVEN,
+    SERVER_DRIVEN,
+    MODES,
+)
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.migration import MigrationOp, execute as execute_migrations
+from repro.core.stats import StatsReport, pull_report, make_sketch, sketch_update, sketch_query
+from repro.core.hierarchy import PodTable, derive_pod_table, route_pod
+from repro.core.dist_store import DistConfig, make_dist_apply
+
+__all__ = [
+    "keys", "OP_GET", "OP_PUT", "OP_DEL", "OP_SCAN", "hash_key",
+    "Directory", "make_directory", "lookup_range", "node_load",
+    "QueryBatch", "RoutingDecision", "route", "expand_scans", "make_queries",
+    "StoreState", "Responses", "make_store", "apply_routed", "store_fill",
+    "LatencyModel", "HopPlan", "plan_hops", "simulate", "simulate_closed_loop",
+    "IN_SWITCH", "CLIENT_DRIVEN", "SERVER_DRIVEN", "MODES",
+    "Controller", "ControllerConfig", "MigrationOp", "execute_migrations",
+    "StatsReport", "pull_report", "make_sketch", "sketch_update", "sketch_query",
+    "PodTable", "derive_pod_table", "route_pod",
+    "DistConfig", "make_dist_apply",
+]

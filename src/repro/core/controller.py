@@ -1,0 +1,212 @@
+"""The TurboKV controller (control plane, paper §3 / §5).
+
+A logically centralized, host-side process that (a) balances load by
+migrating hot sub-ranges to under-utilized nodes based on the data-plane
+statistics reports, (b) splices failed nodes out of every chain and restores
+the replication factor, and (c) splits sub-ranges on capacity overflow.  It
+mutates the directory with plain numpy (this *is* the control plane — it is
+deliberately off the jitted hot path, exactly as the paper's Python/Thrift
+controller sits off the P4 data plane) and emits
+:class:`~repro.core.migration.MigrationOp` plans for the data movers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as K
+from repro.core.directory import Directory, NO_NODE
+from repro.core.migration import MigrationOp
+from repro.core.stats import StatsReport
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    # migrate when max node load exceeds mean load by this factor
+    imbalance_threshold: float = 1.5
+    # cap on migrations per balancing round (greedy, hottest-first)
+    max_moves_per_round: int = 4
+    # split a sub-range when a shard reports overflow
+    split_on_overflow: bool = True
+
+
+class Controller:
+    """Host-side control plane over a (Directory, StoreState) pair."""
+
+    def __init__(self, directory: Directory, config: ControllerConfig | None = None):
+        self.config = config or ControllerConfig()
+        self._dir = _to_numpy(directory)
+        self.hash_partitioned = directory.hash_partitioned
+        self.failed: set[int] = set()
+        self.log: list[str] = []
+
+    # -- directory snapshot back to device arrays -------------------------
+    def directory(self) -> Directory:
+        d = self._dir
+        return Directory(
+            bounds=jnp.asarray(d["bounds"]),
+            chains=jnp.asarray(d["chains"]),
+            chain_len=jnp.asarray(d["chain_len"]),
+            node_addr=jnp.asarray(d["node_addr"]),
+            read_count=jnp.asarray(d["read_count"]),
+            write_count=jnp.asarray(d["write_count"]),
+            hash_partitioned=self.hash_partitioned,
+        )
+
+    @property
+    def num_nodes(self) -> int:
+        return self._dir["node_addr"].shape[0]
+
+    @property
+    def num_ranges(self) -> int:
+        return self._dir["chains"].shape[0]
+
+    # ------------------------------------------------------------------
+    # load balancing (paper §5.1): greedy hottest-range -> coolest-node
+    # ------------------------------------------------------------------
+    def balance(self, report: StatsReport) -> list[MigrationOp]:
+        cfg = self.config
+        d = self._dir
+        load = report.node_load.astype(np.float64).copy()
+        live = np.array([n not in self.failed for n in range(self.num_nodes)])
+        ops: list[MigrationOp] = []
+        heat = (report.read_count + report.write_count).astype(np.float64)
+
+        for _ in range(cfg.max_moves_per_round):
+            mean = load[live].mean() if live.any() else 0.0
+            hot_node = int(np.where(live, load, -np.inf).argmax())
+            if mean <= 0 or load[hot_node] <= cfg.imbalance_threshold * mean:
+                break
+            cold_node = int(np.where(live, load, np.inf).argmin())
+            if cold_node == hot_node:
+                break
+            # hottest sub-range served by the hot node (any chain position)
+            served = (d["chains"] == hot_node).any(axis=1)
+            if not served.any():
+                break
+            ridx = int(np.where(served, heat, -1.0).argmax())
+            if heat[ridx] <= 0:
+                break
+            chain = d["chains"][ridx]
+            if cold_node in chain:
+                heat[ridx] = 0.0  # nothing to gain; try another range
+                continue
+            pos = int(np.where(chain == hot_node)[0][0])
+            lo, hi = self._range_span(ridx)
+            ops.append(MigrationOp(lo=lo, hi=hi, src=hot_node, dst=cold_node, kind="move"))
+            d["chains"][ridx, pos] = cold_node
+            moved = heat[ridx]
+            load[hot_node] -= moved
+            load[cold_node] += moved
+            heat[ridx] = 0.0
+            self.log.append(f"balance: range {ridx} pos {pos}: node {hot_node} -> {cold_node}")
+        return ops
+
+    # ------------------------------------------------------------------
+    # failure handling (paper §5.2): splice, then restore replication
+    # ------------------------------------------------------------------
+    def handle_node_failure(self, node: int, node_load: np.ndarray | None = None) -> list[MigrationOp]:
+        d = self._dir
+        self.failed.add(node)
+        ops: list[MigrationOp] = []
+        load = (
+            node_load.astype(np.float64).copy()
+            if node_load is not None
+            else np.zeros(self.num_nodes)
+        )
+        live_nodes = [n for n in range(self.num_nodes) if n not in self.failed]
+        if not live_nodes:
+            raise RuntimeError("all storage nodes failed")
+
+        for ridx in range(self.num_ranges):
+            chain = d["chains"][ridx]
+            clen = int(d["chain_len"][ridx])
+            pos = np.where(chain[:clen] == node)[0]
+            if pos.size == 0:
+                continue
+            p = int(pos[0])
+            # splice: predecessor now feeds the successor (chain shrinks by 1)
+            chain[p : clen - 1] = chain[p + 1 : clen]
+            chain[clen - 1] = NO_NODE
+            d["chain_len"][ridx] = clen - 1
+            self.log.append(f"failure: spliced node {node} from range {ridx} (pos {p})")
+
+            # restore replication: append the least-loaded live node not in
+            # the chain; repair-copy the range from a surviving replica.
+            current = set(int(c) for c in chain[: clen - 1])
+            candidates = [n for n in live_nodes if n not in current]
+            if candidates and clen - 1 >= 1:
+                newcomer = min(candidates, key=lambda n: load[n])
+                chain[clen - 1] = newcomer
+                d["chain_len"][ridx] = clen
+                survivor = int(chain[0])
+                lo, hi = self._range_span(ridx)
+                ops.append(MigrationOp(lo=lo, hi=hi, src=survivor, dst=newcomer, kind="copy"))
+                load[newcomer] += 1.0
+                self.log.append(f"failure: range {ridx} re-replicated on node {newcomer}")
+        return ops
+
+    def handle_switch_failure(self, rack_nodes: list[int]) -> list[MigrationOp]:
+        """Paper §5.2: a failed switch makes its whole rack unreachable —
+        treat every node behind it as failed."""
+        ops: list[MigrationOp] = []
+        for n in rack_nodes:
+            ops.extend(self.handle_node_failure(n))
+        return ops
+
+    def recover_node(self, node: int) -> None:
+        """A rebooted/replaced node rejoins empty; the balancer will use it."""
+        self.failed.discard(node)
+        self.log.append(f"recover: node {node} back in service")
+
+    # ------------------------------------------------------------------
+    # capacity overflow (paper §4.1.1): split the sub-range, migrate half
+    # ------------------------------------------------------------------
+    def split_overflowed(self, ridx: int, node_load: np.ndarray) -> list[MigrationOp]:
+        d = self._dir
+        lo, hi = self._range_span(ridx)
+        if hi - lo < 2:
+            return []
+        mid = lo + (hi - lo) // 2
+        # insert a boundary at mid: range ridx becomes [lo, mid], new range
+        # ridx+1 is (mid, hi] and initially inherits the chain
+        d["bounds"] = np.insert(d["bounds"], ridx + 1, np.uint32(mid + 1))
+        d["chains"] = np.insert(d["chains"], ridx + 1, d["chains"][ridx], axis=0)
+        d["chain_len"] = np.insert(d["chain_len"], ridx + 1, d["chain_len"][ridx])
+        d["read_count"] = np.insert(d["read_count"], ridx + 1, 0)
+        d["write_count"] = np.insert(d["write_count"], ridx + 1, 0)
+
+        # move the upper half's head to the least-loaded node with space
+        live = [n for n in range(self.num_nodes) if n not in self.failed]
+        old_head = int(d["chains"][ridx + 1, 0])
+        target = min((n for n in live if n != old_head), key=lambda n: node_load[n], default=None)
+        ops: list[MigrationOp] = []
+        if target is not None:
+            d["chains"][ridx + 1, 0] = target
+            ops.append(MigrationOp(lo=mid + 1, hi=hi, src=old_head, dst=target, kind="move"))
+            self.log.append(f"split: range {ridx} at {mid}; upper half head {old_head} -> {target}")
+        return ops
+
+    # ------------------------------------------------------------------
+    def _range_span(self, ridx: int) -> tuple[int, int]:
+        """Inclusive [lo, hi] key span of record ridx."""
+        b = self._dir["bounds"]
+        lo = int(b[ridx])
+        hi = int(b[ridx + 1]) - 1 if ridx + 1 < len(b) - 1 else int(K.MAX_KEY)
+        if ridx + 1 == len(b) - 1:
+            hi = int(b[ridx + 1])  # final boundary is stored inclusive
+        return lo, hi
+
+
+def _to_numpy(directory: Directory) -> dict[str, np.ndarray]:
+    return {
+        "bounds": np.asarray(directory.bounds).copy(),
+        "chains": np.asarray(directory.chains).copy(),
+        "chain_len": np.asarray(directory.chain_len).copy(),
+        "node_addr": np.asarray(directory.node_addr).copy(),
+        "read_count": np.asarray(directory.read_count).copy(),
+        "write_count": np.asarray(directory.write_count).copy(),
+    }

@@ -1,0 +1,201 @@
+"""The TurboKV directory: match-action tables as device-resident arrays.
+
+Paper §4.1.3: each switch stores a partition-management match-action table
+whose records are ``[sub-range] -> (chain of replica node indices)`` plus two
+register arrays holding per-node forwarding info (IP / egress port), and two
+counter register arrays (read / update hits per record).
+
+On a TPU mesh the "switch memory" is replicated device memory: the directory
+lives as small arrays carried through the jitted step (DESIGN.md §2).  The
+``bounds``/``chains`` pair is the match-action table, ``node_addr`` is the
+forwarding-register pair (pod, device-within-pod), and ``read_count`` /
+``write_count`` are the statistics registers the controller harvests.
+
+All lookups are branch-free and batched: a vectorized binary search
+(``searchsorted``) replaces the TCAM range match.  The hot path has a Pallas
+kernel twin in ``repro.kernels.range_match``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as K
+
+NO_NODE = -1  # chain slot sentinel (spliced-out / absent replica)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("bounds", "chains", "chain_len", "node_addr", "read_count", "write_count"),
+    meta_fields=("hash_partitioned",),
+)
+@dataclasses.dataclass(frozen=True)
+class Directory:
+    """Match-action table + forwarding registers + statistics registers.
+
+    bounds:      (R + 1,) uint32, ascending; sub-range i covers
+                 [bounds[i], bounds[i+1]).  bounds[0] == 0 and
+                 bounds[R] == MAX_KEY + 1 is represented by saturation:
+                 the last boundary is stored as 0xFFFFFFFF and the final
+                 range is inclusive of MAX_KEY.
+    chains:      (R, r_max) int32 node ids; position 0 is the chain head,
+                 position chain_len-1 the tail; NO_NODE marks empty slots.
+    chain_len:   (R,) int32 live chain length (<= r_max).
+    node_addr:   (N, 2) int32 forwarding registers: (pod, device) per node —
+                 the paper's node-IP / node-port register arrays.
+    read_count:  (R,) uint32 per-record read-hit counter.
+    write_count: (R,) uint32 per-record update-hit counter.
+    """
+
+    bounds: jnp.ndarray
+    chains: jnp.ndarray
+    chain_len: jnp.ndarray
+    node_addr: jnp.ndarray
+    read_count: jnp.ndarray
+    write_count: jnp.ndarray
+    hash_partitioned: bool = False
+
+    @property
+    def num_ranges(self) -> int:
+        return self.chains.shape[0]
+
+    @property
+    def r_max(self) -> int:
+        return self.chains.shape[1]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.node_addr.shape[0]
+
+    def head(self) -> jnp.ndarray:
+        """(R,) head node of each chain (write target)."""
+        return self.chains[:, 0]
+
+    def tail(self) -> jnp.ndarray:
+        """(R,) tail node of each chain (read target)."""
+        idx = jnp.maximum(self.chain_len - 1, 0)
+        return jnp.take_along_axis(self.chains, idx[:, None], axis=1)[:, 0]
+
+
+def make_directory(
+    num_ranges: int,
+    num_nodes: int,
+    replication: int = 3,
+    *,
+    hash_partitioned: bool = False,
+    num_pods: int = 1,
+    seed: int = 0,
+) -> Directory:
+    """Build the initial directory (host side; the controller owns layout).
+
+    Layout mirrors the paper's experimental setup (§8): the key span is
+    divided into ``num_ranges`` equal sub-ranges; chains are placed so each
+    node appears at every chain position equally often (node i is head of
+    R/N ranges, mid replica of R/N, tail of R/N, ...), which is the paper's
+    24-sub-range-per-node arrangement generalized.
+    """
+    if replication > num_nodes:
+        raise ValueError(f"replication {replication} > num_nodes {num_nodes}")
+    # Equal sub-ranges over the full uint32 matching-value space.
+    edges = np.linspace(0, K.KEY_SPACE, num_ranges + 1)
+    bounds = np.minimum(np.round(edges), K.KEY_SPACE - 1).astype(np.uint32)
+    bounds[0] = 0
+    bounds[-1] = np.uint32(K.MAX_KEY)
+
+    # Chain placement: stride the replica list so chain position p of range i
+    # is node (i + p * stride) % N — every node serves every position.
+    stride = max(1, num_nodes // replication)
+    chains = np.full((num_ranges, replication), NO_NODE, dtype=np.int32)
+    for i in range(num_ranges):
+        for p in range(replication):
+            chains[i, p] = (i + p * stride) % num_nodes
+        # guard: distinct replicas (possible collision when N < r * stride)
+        seen: set[int] = set()
+        for p in range(replication):
+            n = int(chains[i, p])
+            while n in seen:
+                n = (n + 1) % num_nodes
+            chains[i, p] = n
+            seen.add(n)
+
+    nodes_per_pod = max(1, num_nodes // num_pods)
+    node_addr = np.stack(
+        [np.arange(num_nodes) // nodes_per_pod, np.arange(num_nodes) % nodes_per_pod],
+        axis=1,
+    ).astype(np.int32)
+
+    return Directory(
+        bounds=jnp.asarray(bounds),
+        chains=jnp.asarray(chains),
+        chain_len=jnp.full((num_ranges,), replication, dtype=jnp.int32),
+        node_addr=jnp.asarray(node_addr),
+        read_count=jnp.zeros((num_ranges,), dtype=jnp.uint32),
+        write_count=jnp.zeros((num_ranges,), dtype=jnp.uint32),
+        hash_partitioned=hash_partitioned,
+    )
+
+
+def lookup_range(directory: Directory, mvals: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized range match (the switch TCAM lookup, paper §4.2).
+
+    Returns the sub-range index of each matching value.  Every matching
+    value hits exactly one record because the table covers the whole space.
+    """
+    # sub-range i covers [bounds[i], bounds[i+1]); searchsorted over the
+    # interior boundaries gives the record index directly.
+    interior = directory.bounds[1:-1]
+    idx = jnp.searchsorted(interior, mvals.astype(jnp.uint32), side="right")
+    return idx.astype(jnp.int32)
+
+
+def chain_for(directory: Directory, ridx: jnp.ndarray):
+    """Fetch (chain, chain_len) action data for matched records."""
+    return directory.chains[ridx], directory.chain_len[ridx]
+
+
+def bump_counters(directory: Directory, ridx: jnp.ndarray, is_write: jnp.ndarray) -> Directory:
+    """Data-plane statistics update (paper §5.1): one hit per matched record.
+
+    ``ridx``: (B,) matched record per query; ``is_write``: (B,) bool.
+    """
+    ones = jnp.ones_like(ridx, dtype=jnp.uint32)
+    reads = jnp.zeros_like(directory.read_count).at[ridx].add(jnp.where(is_write, 0, ones))
+    writes = jnp.zeros_like(directory.write_count).at[ridx].add(jnp.where(is_write, ones, 0))
+    return dataclasses.replace(
+        directory,
+        read_count=directory.read_count + reads,
+        write_count=directory.write_count + writes,
+    )
+
+
+def reset_counters(directory: Directory) -> Directory:
+    """Controller resets the statistics registers each reporting period."""
+    z = jnp.zeros_like(directory.read_count)
+    return dataclasses.replace(directory, read_count=z, write_count=z)
+
+
+def node_load(directory: Directory) -> jnp.ndarray:
+    """Estimated per-node load from the statistics registers (paper §5.1).
+
+    Reads are served by the tail only; writes touch every chain member.
+    Returns (N,) float32 load units.
+    """
+    R, r_max = directory.chains.shape
+    n = directory.num_nodes
+    member = jnp.arange(r_max)[None, :] < directory.chain_len[:, None]  # (R, r)
+    valid = member & (directory.chains != NO_NODE)
+    safe = jnp.where(valid, directory.chains, 0)
+    # writes: every live chain member takes one unit per write hit
+    w = jnp.zeros((n,), jnp.float32).at[safe.reshape(-1)].add(
+        jnp.where(valid, directory.write_count[:, None].astype(jnp.float32), 0.0).reshape(-1)
+    )
+    # reads: tail only
+    tail = directory.tail()
+    r = jnp.zeros((n,), jnp.float32).at[tail].add(directory.read_count.astype(jnp.float32))
+    return w + r

@@ -1,0 +1,288 @@
+"""The distributed data plane: TurboKV over a JAX device mesh (shard_map).
+
+This is the in-mesh coordination path (DESIGN.md §2): the store is sharded
+one storage node per device along a mesh axis; the directory is replicated
+(every "switch" holds the same match-action table, like every ToR on the
+query path); queries are injected sharded (each device fronts a slice of the
+client aggregation servers) and are *routed by key* to the owning shard with
+collectives standing in for switch hops.
+
+Two routing strategies, both bit-identical to the single-program oracle
+(``store.apply_routed``):
+
+  * ``allgather`` — every shard sees the whole batch and filters what it
+    owns (one all-gather + one psum).  Simple, collective-heavy; the
+    faithful baseline whose cost mirrors "replicate the directory lookup
+    everywhere".
+  * ``bucket_a2a`` — each source buckets queries by target shard into
+    bounded per-target queues and a single ``all_to_all`` delivers them
+    (then the inverse all_to_all returns replies).  Bounded buckets model
+    switch queue capacity: overflowing queries are dropped and counted, the
+    client retries — this is also the straggler bound (no shard can be
+    handed more than ``N * cap`` ops per step).  Writes propagate along the
+    replica chain in ``r`` sequential all_to_all rounds — the literal chain
+    replication dataflow of paper Fig 9(a).
+
+The serving engine reuses ``bucket_a2a`` for KV-cache page routing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import keys as K
+from repro.core import routing as R
+from repro.core.directory import Directory
+from repro.core.store import StoreState, Responses, shard_apply
+
+DROP = -1  # bucket slot for dead/overflowed queries
+
+
+# ---------------------------------------------------------------------------
+# bounded bucketing (per-device helper, runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def bucketize(target: jnp.ndarray, n_shards: int, cap: int):
+    """Group local queries by target shard into (n_shards, cap) slots.
+
+    target: (Bl,) int32 in [0, n_shards) or DROP for dead queries.
+    Returns (slot (Bl,) flat bucket slot or DROP, overflow_count).
+    Deterministic: earlier queries (in batch order) win bucket slots.
+    """
+    Bl = target.shape[0]
+    valid = (target >= 0) & (target < n_shards)
+    tkey = jnp.where(valid, target, n_shards)  # dead queries sort last
+    order = jnp.argsort(tkey, stable=True)
+    sorted_t = tkey[order]
+    group_start = jnp.searchsorted(sorted_t, jnp.arange(n_shards + 1), side="left")
+    pos_in_group = jnp.arange(Bl) - group_start[jnp.minimum(sorted_t, n_shards)]
+    keep = (sorted_t < n_shards) & (pos_in_group < cap)
+    slot_sorted = jnp.where(keep, sorted_t * cap + pos_in_group, DROP)
+    # map back to original order
+    slot = jnp.zeros((Bl,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+    overflow = jnp.sum((sorted_t < n_shards) & (pos_in_group >= cap))
+    return slot, overflow
+
+
+def scatter_to_buckets(slot: jnp.ndarray, payload: jnp.ndarray, n_slots: int, fill):
+    """payload (Bl, ...) -> buckets (n_slots, ...); DROP slots are discarded
+    (out-of-bounds scatter indices drop in JAX)."""
+    idx = jnp.where(slot >= 0, slot, n_slots)  # OOB -> dropped by scatter
+    out = jnp.full((n_slots,) + payload.shape[1:], fill, payload.dtype)
+    return out.at[idx].set(payload, mode="drop")
+
+
+def gather_from_buckets(slot: jnp.ndarray, buckets: jnp.ndarray, fill):
+    """Inverse of scatter: fetch each query's reply from its bucket slot."""
+    idx = jnp.maximum(slot, 0)
+    out = buckets[idx]
+    dead = slot < 0
+    return jnp.where(jnp.reshape(dead, dead.shape + (1,) * (out.ndim - 1)), fill, out)
+
+
+# ---------------------------------------------------------------------------
+# the distributed apply
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    axis: str = "data"          # mesh axis carrying the storage nodes
+    strategy: str = "bucket_a2a"  # or "allgather"
+    bucket_cap: int = 64          # per-(source,target) queue bound
+    max_scan_results: int = 8
+
+
+def _local_slab(store: StoreState):
+    return store.keys[0], store.values[0]
+
+
+def _a2a(x: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+    """(n, cap, ...) buckets -> transposed across the mesh axis."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
+    """Build the jitted distributed batch-apply.
+
+    Signature of the returned fn:
+      (store_sharded, directory_replicated, q_sharded)
+        -> (store, responses_sharded, directory', metrics)
+    """
+    n_shards = mesh.shape[cfg.axis]
+    axis = cfg.axis
+
+    def per_device(store: StoreState, directory: Directory, q: R.QueryBatch):
+        me = jax.lax.axis_index(axis)
+        slab_keys, slab_vals = _local_slab(store)
+
+        if cfg.strategy == "allgather":
+            gq = jax.tree.map(lambda x: _ag(x, axis), q)
+            decision, directory = R.route(directory, gq)
+            new_keys, new_vals, dropped, resp = _apply_full(
+                slab_keys, slab_vals, gq, decision, me, cfg.max_scan_results
+            )
+            # each read answered by exactly one shard -> psum combines
+            resp = jax.tree.map(lambda x: jax.lax.psum(_mask_resp(x), axis), resp)
+            resp = Responses(
+                value=resp.value,
+                found=resp.found > 0,
+                scan_values=resp.scan_values,
+                scan_keys=resp.scan_keys.astype(jnp.uint32),
+                scan_count=resp.scan_count.astype(jnp.int32),
+            )
+            # return this device's slice of the replies
+            Bl = q.opcode.shape[0]
+            resp = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, me * Bl, Bl, axis=0), resp
+            )
+            overflow = jnp.zeros((), jnp.int32)
+            new_store = StoreState(
+                keys=new_keys[None], values=new_vals[None], overflow=store.overflow + dropped
+            )
+            # counters were bumped identically everywhere; keep one copy
+            return new_store, resp, directory, {
+                "bucket_overflow": overflow,
+                "a2a_rounds": jnp.zeros((), jnp.int32),
+            }
+
+        # ---- bucket_a2a ----
+        base_dir = directory
+        decision, directory = R.route(directory, q)
+        # counters were bumped from the *local* slice only; make the
+        # statistics registers globally consistent (replicated out_spec)
+        directory = dataclasses.replace(
+            directory,
+            read_count=base_dir.read_count
+            + jax.lax.psum(directory.read_count - base_dir.read_count, axis),
+            write_count=base_dir.write_count
+            + jax.lax.psum(directory.write_count - base_dir.write_count, axis),
+        )
+        is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+        Bl = q.opcode.shape[0]
+        cap = cfg.bucket_cap
+        n_slots = n_shards * cap
+
+        # --- reads: one a2a round to the tail, replies via inverse a2a ---
+        read_target = jnp.where(~is_write & (q.key != K.EMPTY_KEY), decision.target, DROP)
+        slot, ovf_r = bucketize(read_target, n_shards, cap)
+        bkeys = scatter_to_buckets(slot, q.key, n_slots, K.EMPTY_KEY)
+        bop = scatter_to_buckets(slot, q.opcode, n_slots, jnp.int32(K.OP_GET))
+        bend = scatter_to_buckets(slot, q.end_key, n_slots, jnp.uint32(0))
+        bkeys, bop, bend = (_a2a(x, axis, n_shards) for x in (bkeys, bop, bend))
+
+        inbound = R.QueryBatch(
+            opcode=bop, key=bkeys, end_key=bend,
+            value=jnp.zeros((n_slots, q.value.shape[1]), q.value.dtype),
+        )
+        read_mine = (inbound.opcode == K.OP_GET) | (inbound.opcode == K.OP_SCAN)
+        read_mine &= inbound.key != K.EMPTY_KEY
+        slab_keys, slab_vals, _, resp_in = shard_apply(
+            slab_keys, slab_vals, inbound, read_mine,
+            jnp.zeros_like(read_mine),  # no writes in the read round
+            max_scan_results=cfg.max_scan_results,
+        )
+        # replies travel back through the inverse all_to_all
+        back = jax.tree.map(lambda x: _a2a(x, axis, n_shards), resp_in)
+        resp = Responses(
+            value=gather_from_buckets(slot, back.value, 0.0),
+            found=gather_from_buckets(slot, back.found, False),
+            scan_values=gather_from_buckets(slot, back.scan_values, 0.0),
+            scan_keys=gather_from_buckets(slot, back.scan_keys, K.EMPTY_KEY),
+            scan_count=gather_from_buckets(slot, back.scan_count, jnp.int32(0)),
+        )
+
+        # --- writes: r sequential a2a rounds along the chain (Fig 9a) ---
+        ovf_w = jnp.zeros((), ovf_r.dtype)
+        r_max = decision.chain.shape[1]
+        for pos in range(r_max):
+            live = is_write & (pos < decision.chain_len) & (q.key != K.EMPTY_KEY)
+            wt = jnp.where(live, decision.chain[:, pos], DROP)
+            wslot, ovf = bucketize(wt, n_shards, cap)
+            ovf_w += ovf
+            wkeys = scatter_to_buckets(wslot, q.key, n_slots, K.EMPTY_KEY)
+            wop = scatter_to_buckets(wslot, q.opcode, n_slots, jnp.int32(K.OP_GET))
+            wval = scatter_to_buckets(wslot, q.value, n_slots, 0.0)
+            wkeys, wop, wval = (_a2a(x, axis, n_shards) for x in (wkeys, wop, wval))
+            wq = R.QueryBatch(
+                opcode=wop, key=wkeys, end_key=jnp.zeros_like(wkeys), value=wval
+            )
+            write_mine = ((wq.opcode == K.OP_PUT) | (wq.opcode == K.OP_DEL)) & (
+                wq.key != K.EMPTY_KEY
+            )
+            slab_keys, slab_vals, dropped, wresp = shard_apply(
+                slab_keys, slab_vals, wq, jnp.zeros_like(write_mine), write_mine,
+                max_scan_results=1,
+            )
+            if pos == 0:
+                put_dropped = dropped
+            else:
+                put_dropped = put_dropped + dropped
+            # tail replies: DEL found flag returns from the last chain pos
+            wback = _a2a(wresp.found, axis, n_shards)
+            at_tail = is_write & (pos == decision.chain_len - 1)
+            got = gather_from_buckets(wslot, wback, False)
+            resp = dataclasses.replace(resp, found=jnp.where(at_tail, got, resp.found))
+
+        new_store = StoreState(
+            keys=slab_keys[None], values=slab_vals[None],
+            overflow=store.overflow + put_dropped,
+        )
+        metrics = {
+            "bucket_overflow": (ovf_r + ovf_w).astype(jnp.int32),
+            "a2a_rounds": jnp.int32(1 + r_max),
+        }
+        return new_store, resp, directory, metrics
+
+    def _ag(x, ax):
+        return jax.lax.all_gather(x, ax, axis=0, tiled=True)
+
+    def _mask_resp(x):
+        if x.dtype == jnp.uint32:  # scan_keys sentinel: use min so EMPTY loses
+            return x
+        return x.astype(jnp.float32) if x.dtype == jnp.bool_ else x
+
+    def _apply_full(slab_keys, slab_vals, gq, decision, me, max_scan):
+        is_write = (gq.opcode == K.OP_PUT) | (gq.opcode == K.OP_DEL)
+        r_max = decision.chain.shape[1]
+        member_live = jnp.arange(r_max)[None, :] < decision.chain_len[:, None]
+        read_mine = (decision.target == me) & ~is_write
+        write_mine = is_write & jnp.any((decision.chain == me) & member_live, axis=1)
+        new_keys, new_vals, dropped, resp = shard_apply(
+            slab_keys, slab_vals, gq, read_mine, write_mine, max_scan_results=max_scan
+        )
+        # zero out non-owned replies so psum combines cleanly; keys use min
+        owner = read_mine
+        resp = Responses(
+            value=jnp.where(owner[:, None], resp.value, 0.0),
+            found=jnp.where(owner, resp.found, False),
+            scan_values=jnp.where(owner[:, None, None], resp.scan_values, 0.0),
+            scan_keys=jnp.where(owner[:, None], resp.scan_keys, 0).astype(jnp.uint32),
+            scan_count=jnp.where(owner, resp.scan_count, 0),
+        )
+        return new_keys, new_vals, dropped, resp
+
+    in_specs = (
+        StoreState(keys=P(axis), values=P(axis), overflow=P(axis)),
+        jax.tree.map(lambda _: P(), directory_template),
+        R.QueryBatch(opcode=P(axis), key=P(axis), end_key=P(axis), value=P(axis)),
+    )
+    out_specs = (
+        StoreState(keys=P(axis), values=P(axis), overflow=P(axis)),
+        Responses(
+            value=P(axis), found=P(axis), scan_values=P(axis),
+            scan_keys=P(axis), scan_count=P(axis),
+        ),
+        jax.tree.map(lambda _: P(), directory_template),
+        {"bucket_overflow": P(), "a2a_rounds": P()},
+    )
+
+    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    return jax.jit(fn)

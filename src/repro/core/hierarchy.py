@@ -1,0 +1,75 @@
+"""Hierarchical indexing: scaling the coordinator beyond one rack (paper §6).
+
+In the paper, ToR switches hold full `[sub-range -> chain]` records for their
+rack, while AGG/Core switches hold *reduced* records — only the egress port
+toward the chain head (writes) or tail (reads), with no chain data.  A packet
+descends Core -> AGG -> ToR, and only the ToR injects the chain header.
+
+On the production mesh the hierarchy maps onto mesh axes (DESIGN.md §2):
+
+  Core/AGG table  ->  pod-level table: sub-range -> (head_pod, tail_pod)
+  ToR table       ->  the per-pod Directory (full chains)
+
+so multi-pod routing is a two-stage collective: an ``all_to_all`` over the
+``"pod"`` axis (descend through Core/AGG), then the in-pod routed store op
+(the ToR hop).  The pod-level table is *derived state*: the controller
+recomputes it from the leaf directory's ``node_addr`` registers after every
+reconfiguration, which mirrors the paper's controller installing matching
+records at every level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core.directory import Directory, lookup_range
+from repro.core.routing import QueryBatch
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("head_pod", "tail_pod"),
+    meta_fields=("num_pods",),
+)
+@dataclasses.dataclass(frozen=True)
+class PodTable:
+    """The AGG/Core reduced match-action table (per-record pod directions)."""
+
+    head_pod: jnp.ndarray  # (R,) pod of each chain head (write direction)
+    tail_pod: jnp.ndarray  # (R,) pod of each chain tail (read direction)
+    num_pods: int
+
+
+def derive_pod_table(directory: Directory, num_pods: int) -> PodTable:
+    """Recompute the upper-level tables from the leaf directory."""
+    head_nodes = directory.head()
+    tail_nodes = directory.tail()
+    pods = directory.node_addr[:, 0]
+    return PodTable(
+        head_pod=pods[head_nodes].astype(jnp.int32),
+        tail_pod=pods[tail_nodes].astype(jnp.int32),
+        num_pods=num_pods,
+    )
+
+
+def route_pod(table: PodTable, directory: Directory, q: QueryBatch) -> jnp.ndarray:
+    """Stage-1 routing at the AGG/Core level: matching value -> pod id.
+
+    No chain header is attached here — exactly the paper's reduced records.
+    """
+    mval = K.matching_value(q.key, hash_partitioned=directory.hash_partitioned)
+    ridx = lookup_range(directory, mval)
+    is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+    return jnp.where(is_write, table.head_pod[ridx], table.tail_pod[ridx])
+
+
+def pod_local_view(directory: Directory, pod: int) -> jnp.ndarray:
+    """(R,) mask of records whose head or tail lives in this pod — the ToR
+    working set (used by tests to check the hierarchy is consistent)."""
+    pods = directory.node_addr[:, 0]
+    return (pods[directory.head()] == pod) | (pods[directory.tail()] == pod)

@@ -1,0 +1,60 @@
+"""Key spaces and hashing for TurboKV.
+
+The paper hashes keys with RIPEMD-160 into a 20-byte digest and treats the
+digest space as the partitionable key space (consistent-hashing variant).
+On TPU we need a vectorizable, branch-free mixer rather than a cryptographic
+hash; uniformity is the property the paper relies on, not pre-image
+resistance (DESIGN.md §2).  We use a 32-bit avalanche mixer (two rounds of
+the murmur3/splitmix finalizer) over uint32 keys; the hashed key space is
+``[0, 2**32)``.
+
+Range partitioning uses the raw key itself as the matching value, hash
+partitioning uses ``hash_key(key)`` — exactly the paper's two modes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# The full matching-value space is [0, KEY_SPACE) for both modes.
+KEY_BITS = 32
+KEY_SPACE = 1 << KEY_BITS          # exclusive upper bound (python int)
+MAX_KEY = KEY_SPACE - 1            # largest representable matching value
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)  # slab sentinel: slot is unoccupied
+
+# Key-value operation codes (paper: OpCode field of the TurboKV header).
+OP_GET = 0
+OP_PUT = 1
+OP_DEL = 2
+OP_SCAN = 3  # paper: "Range"
+
+OP_NAMES = {OP_GET: "GET", OP_PUT: "PUT", OP_DEL: "DEL", OP_SCAN: "SCAN"}
+
+
+def hash_key(key: jnp.ndarray) -> jnp.ndarray:
+    """Avalanche-mix a uint32 key into the hashed key space.
+
+    Stand-in for the paper's RIPEMD-160 digest (DESIGN.md §2): two rounds of
+    the murmur3 fmix32 finalizer, which passes avalanche tests and is fully
+    vectorizable on the VPU.
+    """
+    x = key.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    # second round for extra avalanche quality on structured key patterns
+    x *= jnp.uint32(0x9E3779B1)
+    x ^= x >> 16
+    return x
+
+
+def matching_value(keys: jnp.ndarray, *, hash_partitioned: bool) -> jnp.ndarray:
+    """The value the switch matches against the table (paper §4.1.3).
+
+    Range partitioning matches on the key itself; hash partitioning on the
+    hashed key (carried in the ``endKey/hashedKey`` header field).
+    """
+    keys = keys.astype(jnp.uint32)
+    return hash_key(keys) if hash_partitioned else keys

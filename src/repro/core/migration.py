@@ -1,0 +1,70 @@
+"""Data-plane execution of controller migration decisions (paper §5.1).
+
+The controller (control plane) decides *what* moves; this module is the
+shim-layer data mover (paper §3 "handling TurboKV controller's data
+migration requests between the storage nodes").  All movers are jittable,
+static-shape array programs over :class:`~repro.core.store.StoreState`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core.store import StoreState, slab_put, slab_delete
+
+EMPTY = K.EMPTY_KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationOp:
+    """One controller decision: move/copy [lo, hi] from src to dst.
+
+    kind: 'move' (migration — delete at src afterwards) or
+          'copy' (replica repair — src keeps its data).
+    """
+
+    lo: int
+    hi: int
+    src: int
+    dst: int
+    kind: str = "move"
+
+
+def _extract_range(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, lo, hi):
+    """All entries with key in [lo, hi], EMPTY-padded to capacity."""
+    in_range = (slab_keys >= lo) & (slab_keys <= hi) & (slab_keys != EMPTY)
+    ex_keys = jnp.where(in_range, slab_keys, EMPTY)
+    ex_vals = jnp.where(in_range[:, None], slab_vals, 0.0)
+    perm = jnp.argsort(ex_keys)
+    return ex_keys[perm], ex_vals[perm]
+
+
+def apply_migration(store: StoreState, lo, hi, src: jnp.ndarray, dst: jnp.ndarray, *, move: bool) -> StoreState:
+    """Execute one migration/copy op (jittable; src/dst may be traced)."""
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    ex_keys, ex_vals = _extract_range(store.keys[src], store.values[src], lo, hi)
+
+    dst_keys, dst_vals, dropped = slab_put(store.keys[dst], store.values[dst], ex_keys, ex_vals)
+    keys = store.keys.at[dst].set(dst_keys)
+    values = store.values.at[dst].set(dst_vals)
+
+    if move:
+        src_keys, src_vals = slab_delete(keys[src], values[src], ex_keys)
+        keys = keys.at[src].set(src_keys)
+        values = values.at[src].set(src_vals)
+
+    return StoreState(keys=keys, values=values, overflow=store.overflow.at[dst].add(dropped))
+
+
+def execute(store: StoreState, ops: list[MigrationOp]) -> StoreState:
+    """Run a controller migration plan (host loop over jitted movers)."""
+    for op in ops:
+        store = apply_migration(
+            store, op.lo, op.hi, jnp.int32(op.src), jnp.int32(op.dst), move=(op.kind == "move")
+        )
+    return store

@@ -1,0 +1,178 @@
+"""Key-based routing: the switch ingress/egress pipeline (paper §4.2, §4.3).
+
+Given a batch of TurboKV "packets" — ``(opcode, key, end_key)`` triples —
+the router:
+
+  1. computes the matching value (key or hashed key, per partitioning mode),
+  2. range-matches it against the directory (the match-action lookup),
+  3. fetches the action data (replica chain) from the registers,
+  4. picks the target node by opcode: chain *tail* for GET/SCAN, chain
+     *head* for PUT/DEL (chain replication §4.1.2),
+  5. bumps the per-record statistics counters,
+  6. for SCAN packets spanning several sub-ranges, performs the paper's
+     clone-and-circulate expansion (§4.3 Algorithm 1) as a static-fanout
+     unroll — JAX cannot materialize dynamic packet counts, so the fanout
+     bound ``max_scan_fanout`` plays the role of the circulate loop bound.
+
+The hot path (steps 1–4 for GET/PUT) has a Pallas twin in
+``repro.kernels.range_match``; this module is the always-available jnp
+implementation and the oracle for that kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core import directory as D
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("opcode", "key", "end_key", "value"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class QueryBatch:
+    """A batch of TurboKV packets (the client library's output, §3).
+
+    opcode:  (B,) int32 in {OP_GET, OP_PUT, OP_DEL, OP_SCAN}
+    key:     (B,) uint32
+    end_key: (B,) uint32 — scan end (inclusive range start..end) or 0
+    value:   (B, V) payload for PUT (zeros otherwise)
+    """
+
+    opcode: jnp.ndarray
+    key: jnp.ndarray
+    end_key: jnp.ndarray
+    value: jnp.ndarray
+
+    @property
+    def batch(self) -> int:
+        return self.opcode.shape[0]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("ridx", "target", "chain", "chain_len", "clength"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class RoutingDecision:
+    """Per-packet output of the key-based routing action.
+
+    ridx:      (B,) matched sub-range record
+    target:    (B,) node id the packet is forwarded to (head or tail)
+    chain:     (B, r_max) the injected chain header (node ids, head first)
+    chain_len: (B,) live chain length (paper: CLength, sans client hop)
+    clength:   (B,) hops the packet will traverse to be fully served
+    """
+
+    ridx: jnp.ndarray
+    target: jnp.ndarray
+    chain: jnp.ndarray
+    chain_len: jnp.ndarray
+    clength: jnp.ndarray
+
+
+def route(directory: D.Directory, q: QueryBatch) -> tuple[RoutingDecision, D.Directory]:
+    """Run the key-based routing action for a packet batch.
+
+    Returns the routing decision and the directory with bumped counters
+    (the data-plane statistics module, §5.1).
+    """
+    mval = K.matching_value(q.key, hash_partitioned=directory.hash_partitioned)
+    ridx = D.lookup_range(directory, mval)
+    chain, clen = D.chain_for(directory, ridx)
+
+    is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+    head = chain[:, 0]
+    tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[:, None], axis=1)[:, 0]
+    target = jnp.where(is_write, head, tail)
+
+    # Writes traverse the whole chain then reply (clen hops + 1);
+    # reads go to the tail and reply (2 hops). Paper Fig 9.
+    clength = jnp.where(is_write, clen + 1, 2)
+
+    directory = D.bump_counters(directory, ridx, is_write)
+    return RoutingDecision(ridx=ridx, target=target, chain=chain, chain_len=clen, clength=clength), directory
+
+
+def expand_scans(
+    directory: D.Directory, q: QueryBatch, *, max_scan_fanout: int
+) -> QueryBatch:
+    """Clone-and-circulate for range queries (paper §4.3, Algorithm 1).
+
+    A SCAN whose [key, end_key] span covers k sub-ranges is expanded into k
+    per-sub-range SCAN packets, each handled like an independent read.  The
+    switch does this by cloning the packet and recirculating the remainder;
+    with static shapes we unroll to ``max_scan_fanout`` clones — clone j of
+    packet i covers the j-th sub-range intersecting the span (or is a
+    dead no-op clone masked to a GET on the original key when j exceeds the
+    span).  Output batch is (B * max_scan_fanout).
+
+    Only valid for range partitioning (the paper: hash partitioning cannot
+    serve scans).
+    """
+    if directory.hash_partitioned:
+        raise ValueError("scans are not supported under hash partitioning (paper §4.1.1)")
+    F = max_scan_fanout
+    B = q.batch
+    is_scan = q.opcode == K.OP_SCAN
+
+    start_r = D.lookup_range(directory, q.key)          # (B,)
+    end_r = D.lookup_range(directory, jnp.maximum(q.end_key, q.key))
+    span = jnp.where(is_scan, end_r - start_r + 1, 1)   # sub-ranges covered
+
+    j = jnp.arange(F, dtype=jnp.int32)                  # clone index
+    ridx_j = jnp.minimum(start_r[:, None] + j[None, :], end_r[:, None])  # (B, F)
+    live = (j[None, :] < span[:, None])                  # clone exists
+
+    # Clone j covers [max(key, bounds[r_j]), min(end, bounds[r_j + 1] - 1)].
+    lo = directory.bounds[ridx_j]
+    hi_edge = directory.bounds[ridx_j + 1]
+    sub_key = jnp.maximum(q.key[:, None], lo)
+    sub_end = jnp.minimum(q.end_key[:, None], hi_edge - 1)
+
+    opcode = jnp.where(
+        live,
+        jnp.where(is_scan[:, None], K.OP_SCAN, q.opcode[:, None]),
+        jnp.int32(K.OP_GET),  # dead clones: masked GET of the original key
+    )
+    key = jnp.where(live, jnp.where(is_scan[:, None], sub_key, q.key[:, None]), q.key[:, None])
+    end_key = jnp.where(live & is_scan[:, None], sub_end, jnp.zeros_like(sub_end))
+    # dead clones must not perturb the store: mark with the EMPTY sentinel key
+    key = jnp.where(live, key, K.EMPTY_KEY)
+
+    value = jnp.broadcast_to(q.value[:, None, :], (B, F, q.value.shape[-1]))
+    return QueryBatch(
+        opcode=opcode.reshape(B * F),
+        key=key.reshape(B * F).astype(jnp.uint32),
+        end_key=end_key.reshape(B * F).astype(jnp.uint32),
+        value=value.reshape(B * F, q.value.shape[-1]),
+    )
+
+
+def make_queries(
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    values: jnp.ndarray | None = None,
+    end_keys: jnp.ndarray | None = None,
+    value_dim: int = 1,
+) -> QueryBatch:
+    """Convenience constructor (the client library, paper §3)."""
+    B = keys.shape[0]
+    if values is None:
+        values = jnp.zeros((B, value_dim), dtype=jnp.float32)
+    if end_keys is None:
+        end_keys = jnp.zeros((B,), dtype=jnp.uint32)
+    return QueryBatch(
+        opcode=opcodes.astype(jnp.int32),
+        key=keys.astype(jnp.uint32),
+        end_key=end_keys.astype(jnp.uint32),
+        value=values,
+    )

@@ -1,0 +1,82 @@
+"""Query-statistics module (paper §5.1, data-plane side).
+
+The switch data plane keeps one read counter and one update counter per
+match-action record (two register arrays in the prototype, §7).  Here the
+counters live on the :class:`~repro.core.directory.Directory` itself and are
+bumped inside the jitted step by ``routing.route``; this module packages the
+periodic report the controller pulls, plus an optional count-min sketch used
+by the beyond-paper memory optimization (DESIGN.md §7) for very large range
+counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import directory as D
+from repro.core import keys as K
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsReport:
+    """Host-side snapshot the controller consumes (numpy, off the hot path)."""
+
+    read_count: np.ndarray     # (R,)
+    write_count: np.ndarray    # (R,)
+    node_load: np.ndarray      # (N,)
+    period: int
+
+    @property
+    def total_ops(self) -> int:
+        return int(self.read_count.sum() + self.write_count.sum())
+
+
+def pull_report(directory: D.Directory, period: int) -> tuple[StatsReport, D.Directory]:
+    """Harvest and reset the data-plane counters (controller pull, §5.1)."""
+    report = StatsReport(
+        read_count=np.asarray(directory.read_count),
+        write_count=np.asarray(directory.write_count),
+        node_load=np.asarray(D.node_load(directory)),
+        period=period,
+    )
+    return report, D.reset_counters(directory)
+
+
+# ---------------------------------------------------------------------------
+# count-min sketch (beyond-paper): O(w*d) memory for per-KEY popularity,
+# used when the controller wants key-level (not range-level) heat to pick
+# *which subset* of a hot range to migrate (paper migrates "a subset of the
+# hot data in a sub-range").
+# ---------------------------------------------------------------------------
+
+_SKETCH_SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
+
+
+def make_sketch(width: int = 1024, depth: int = 4) -> jnp.ndarray:
+    if depth > len(_SKETCH_SALTS):
+        raise ValueError(f"depth <= {len(_SKETCH_SALTS)}")
+    return jnp.zeros((depth, width), dtype=jnp.uint32)
+
+
+def sketch_update(sketch: jnp.ndarray, qkeys: jnp.ndarray) -> jnp.ndarray:
+    """Count-min update for a key batch (EMPTY keys ignored)."""
+    depth, width = sketch.shape
+    live = (qkeys != K.EMPTY_KEY).astype(jnp.uint32)
+    for d in range(depth):
+        h = K.hash_key(qkeys ^ jnp.uint32(_SKETCH_SALTS[d])) % jnp.uint32(width)
+        sketch = sketch.at[d].add(jnp.zeros((width,), jnp.uint32).at[h].add(live))
+    return sketch
+
+
+def sketch_query(sketch: jnp.ndarray, qkeys: jnp.ndarray) -> jnp.ndarray:
+    """Point estimate: min over rows (classic CM upper-bound estimate)."""
+    depth, width = sketch.shape
+    ests = []
+    for d in range(depth):
+        h = K.hash_key(qkeys ^ jnp.uint32(_SKETCH_SALTS[d])) % jnp.uint32(width)
+        ests.append(sketch[d][h])
+    return jnp.min(jnp.stack(ests, axis=0), axis=0)

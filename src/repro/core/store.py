@@ -1,0 +1,308 @@
+"""The storage-node layer: a sorted-slab key-value store in pure JAX.
+
+Paper §3/§4.1.1: each storage node runs LevelDB (range mode: keys sorted in
+SSTs) or a hash table (hash mode) behind a thin shim that turns TurboKV
+packets into store API calls.  The JAX-native stand-in (DESIGN.md §2) is a
+**sorted slab**: each shard holds a fixed-capacity array of keys kept in
+ascending order (``EMPTY_KEY = 0xFFFFFFFF`` padding at the tail) plus a
+parallel value array.  Sorted order gives O(log C) batched lookups
+(``searchsorted``), natural range scans, and static-shape insert/delete via
+sort-and-truncate — the moral equivalent of an SST memtable merge.
+
+Batch semantics: GET/SCAN observe the *pre-batch* state; DELs apply next;
+PUTs apply last (a PUT and DEL of the same key in one batch resolves to the
+PUT).  Within the PUT set, the last write in batch order wins.  Queries in
+one batch are independent YCSB ops, so this is the natural vectorization.
+
+Capacity overflow (more live keys than ``capacity`` after a PUT batch) drops
+the largest keys of the slab and reports a per-shard ``overflow`` count —
+the controller reacts by splitting the hot sub-range and migrating half of
+it (paper §4.1.1 "divided into two smaller sub-ranges").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core.routing import QueryBatch, RoutingDecision
+
+EMPTY = K.EMPTY_KEY
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("keys", "values", "overflow"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class StoreState:
+    """All shards' slabs, leading axis = storage node (shardable).
+
+    keys:     (N, C) uint32, ascending per shard, EMPTY-padded
+    values:   (N, C, V) float32
+    overflow: (N,) int32 cumulative dropped-entry count (capacity pressure)
+    """
+
+    keys: jnp.ndarray
+    values: jnp.ndarray
+    overflow: jnp.ndarray
+
+    @property
+    def num_shards(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def value_dim(self) -> int:
+        return self.values.shape[2]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("value", "found", "scan_values", "scan_keys", "scan_count"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class Responses:
+    """Per-query replies (the payload of the node->client packet).
+
+    value:       (B, V) GET result (zeros if miss)
+    found:       (B,) bool GET/DEL hit
+    scan_values: (B, S, V) SCAN results
+    scan_keys:   (B, S) uint32 keys of SCAN results (EMPTY beyond count)
+    scan_count:  (B,) int32 number of live SCAN results
+    """
+
+    value: jnp.ndarray
+    found: jnp.ndarray
+    scan_values: jnp.ndarray
+    scan_keys: jnp.ndarray
+    scan_count: jnp.ndarray
+
+
+def make_store(num_shards: int, capacity: int, value_dim: int) -> StoreState:
+    return StoreState(
+        keys=jnp.full((num_shards, capacity), EMPTY, dtype=jnp.uint32),
+        values=jnp.zeros((num_shards, capacity, value_dim), dtype=jnp.float32),
+        overflow=jnp.zeros((num_shards,), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-shard slab primitives (operate on one (C,)/(C,V) slab)
+# ---------------------------------------------------------------------------
+
+
+def _dedupe_last_write(qkeys: jnp.ndarray, qvals: jnp.ndarray):
+    """Sort a PUT batch by key; last write in batch order wins.
+
+    Returns (sorted_keys, sorted_vals) with duplicate keys' earlier writes
+    replaced by EMPTY (then re-sorted so live entries are a sorted prefix).
+    """
+    B = qkeys.shape[0]
+    # primary: key asc; secondary: original index desc (later writes first)
+    perm = jnp.lexsort((-jnp.arange(B, dtype=jnp.int32), qkeys))
+    sk, sv = qkeys[perm], qvals[perm]
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    sk = jnp.where(first, sk, EMPTY)
+    p2 = jnp.argsort(sk)
+    return sk[p2], sv[p2]
+
+
+def _member_sorted(sorted_keys: jnp.ndarray, probe: jnp.ndarray) -> jnp.ndarray:
+    """probe ∈ sorted_keys (EMPTY never matches)."""
+    pos = jnp.searchsorted(sorted_keys, probe)
+    pos = jnp.minimum(pos, sorted_keys.shape[0] - 1)
+    return (sorted_keys[pos] == probe) & (probe != EMPTY)
+
+
+def slab_get(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, qkeys: jnp.ndarray):
+    """Batched point lookup. Returns (values (B,V), found (B,))."""
+    pos = jnp.searchsorted(slab_keys, qkeys)
+    pos = jnp.minimum(pos, slab_keys.shape[0] - 1)
+    found = (slab_keys[pos] == qkeys) & (qkeys != EMPTY)
+    vals = jnp.where(found[:, None], slab_vals[pos], 0.0)
+    return vals, found
+
+
+def slab_scan(
+    slab_keys: jnp.ndarray,
+    slab_vals: jnp.ndarray,
+    k0: jnp.ndarray,
+    k1: jnp.ndarray,
+    max_results: int,
+):
+    """Batched range scan of [k0, k1] (inclusive), up to ``max_results`` each.
+
+    Returns (keys (B,S), values (B,S,V), count (B,)).
+    """
+    C = slab_keys.shape[0]
+    lo = jnp.searchsorted(slab_keys, k0)                      # (B,)
+    hi = jnp.searchsorted(slab_keys, k1, side="right")
+    count = jnp.minimum(hi - lo, max_results).astype(jnp.int32)
+
+    def one(lo_i, cnt_i):
+        ks = jax.lax.dynamic_slice(slab_keys, (jnp.minimum(lo_i, C - 1),), (max_results,))
+        vs = jax.lax.dynamic_slice(
+            slab_vals, (jnp.minimum(lo_i, C - 1), 0), (max_results, slab_vals.shape[1])
+        )
+        live = jnp.arange(max_results) < cnt_i
+        return jnp.where(live, ks, EMPTY), jnp.where(live[:, None], vs, 0.0)
+
+    # pad the slab so dynamic_slice near the end stays in bounds
+    pad_k = jnp.concatenate([slab_keys, jnp.full((max_results,), EMPTY, slab_keys.dtype)])
+    pad_v = jnp.concatenate([slab_vals, jnp.zeros((max_results, slab_vals.shape[1]), slab_vals.dtype)])
+
+    def one_padded(lo_i, cnt_i):
+        ks = jax.lax.dynamic_slice(pad_k, (lo_i,), (max_results,))
+        vs = jax.lax.dynamic_slice(pad_v, (lo_i, 0), (max_results, slab_vals.shape[1]))
+        live = jnp.arange(max_results) < cnt_i
+        return jnp.where(live, ks, EMPTY), jnp.where(live[:, None], vs, 0.0)
+
+    del one
+    ks, vs = jax.vmap(one_padded)(lo, count)
+    return ks, vs, count
+
+
+def slab_delete(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, del_keys: jnp.ndarray):
+    """Delete a key set (del_keys need not be sorted; EMPTY entries ignored)."""
+    sorted_del = jnp.sort(del_keys)
+    hit = _member_sorted(sorted_del, slab_keys)
+    new_keys = jnp.where(hit, EMPTY, slab_keys)
+    perm = jnp.argsort(new_keys)  # stable: pushes EMPTY to the tail
+    return new_keys[perm], slab_vals[perm]
+
+
+def slab_put(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, put_keys: jnp.ndarray, put_vals: jnp.ndarray):
+    """Insert/overwrite a batch. Returns (keys, vals, dropped_count)."""
+    C = slab_keys.shape[0]
+    pk, pv = _dedupe_last_write(put_keys, put_vals)
+    # evict slab entries being overwritten
+    overwritten = _member_sorted(pk, slab_keys)
+    base_keys = jnp.where(overwritten, EMPTY, slab_keys)
+    # merge, sort, truncate (SST-style memtable merge)
+    all_keys = jnp.concatenate([base_keys, pk])
+    all_vals = jnp.concatenate([slab_vals, pv])
+    perm = jnp.argsort(all_keys)
+    all_keys, all_vals = all_keys[perm], all_vals[perm]
+    live = jnp.sum((all_keys != EMPTY).astype(jnp.int32))
+    dropped = jnp.maximum(live - C, 0)
+    return all_keys[:C], all_vals[:C], dropped
+
+
+# ---------------------------------------------------------------------------
+# shard-level mixed-opcode batch application
+# ---------------------------------------------------------------------------
+
+
+def shard_apply(
+    slab_keys: jnp.ndarray,
+    slab_vals: jnp.ndarray,
+    q: QueryBatch,
+    read_mine: jnp.ndarray,
+    write_mine: jnp.ndarray,
+    *,
+    max_scan_results: int,
+):
+    """Apply the batch slice owned by one shard.
+
+    read_mine:  (B,) this shard serves the GET/SCAN (it is the chain tail)
+    write_mine: (B,) this shard applies the PUT/DEL (it is a chain member)
+    """
+    is_get = (q.opcode == K.OP_GET) & read_mine
+    is_scan = (q.opcode == K.OP_SCAN) & read_mine
+    is_del = (q.opcode == K.OP_DEL) & write_mine
+    is_put = (q.opcode == K.OP_PUT) & write_mine
+
+    # --- reads against pre-batch state ---
+    get_vals, get_found = slab_get(slab_keys, slab_vals, jnp.where(is_get, q.key, EMPTY))
+    sk, sv, scount = slab_scan(
+        slab_keys,
+        slab_vals,
+        jnp.where(is_scan, q.key, EMPTY),
+        jnp.where(is_scan, q.end_key, jnp.zeros_like(q.end_key)),
+        max_scan_results,
+    )
+    scount = jnp.where(is_scan, scount, 0)
+    sk = jnp.where(is_scan[:, None], sk, EMPTY)
+    sv = jnp.where(is_scan[:, None, None], sv, 0.0)
+
+    # --- deletes ---
+    del_found = _member_sorted(slab_keys, jnp.where(is_del, q.key, EMPTY))
+    slab_keys, slab_vals = slab_delete(slab_keys, slab_vals, jnp.where(is_del, q.key, EMPTY))
+
+    # --- puts ---
+    slab_keys, slab_vals, dropped = slab_put(
+        slab_keys, slab_vals, jnp.where(is_put, q.key, EMPTY), jnp.where(is_put[:, None], q.value, 0.0)
+    )
+
+    resp = Responses(
+        value=get_vals,
+        found=get_found | (del_found & is_del),
+        scan_values=sv,
+        scan_keys=sk,
+        scan_count=scount,
+    )
+    return slab_keys, slab_vals, dropped, resp
+
+
+def apply_routed(
+    store: StoreState,
+    q: QueryBatch,
+    decision: RoutingDecision,
+    *,
+    max_scan_results: int = 8,
+) -> tuple[StoreState, Responses]:
+    """Apply a routed batch to every shard (single-program simulation path).
+
+    The distributed twin lives in ``repro.core.dist_store`` (shard_map); this
+    vmapped form is bit-identical and is the oracle for it.  Reads are served
+    by the routed target (the chain tail); writes are applied by every live
+    chain member — the end state chain replication converges to (§4.1.2).
+    """
+    N = store.num_shards
+    is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+    r_max = decision.chain.shape[1]
+    member_live = jnp.arange(r_max)[None, :] < decision.chain_len[:, None]  # (B, r)
+
+    shard_ids = jnp.arange(N, dtype=jnp.int32)
+
+    def one_shard(slab_keys, slab_vals, shard_id):
+        read_mine = (decision.target == shard_id) & ~is_write
+        write_mine = is_write & jnp.any((decision.chain == shard_id) & member_live, axis=1)
+        return shard_apply(
+            slab_keys, slab_vals, q, read_mine, write_mine, max_scan_results=max_scan_results
+        )
+
+    new_keys, new_vals, dropped, resps = jax.vmap(one_shard)(store.keys, store.values, shard_ids)
+
+    # combine per-shard responses: each read is answered by exactly one shard
+    owner = jax.nn.one_hot(decision.target, N, dtype=jnp.float32)  # (B, N)
+    value = jnp.einsum("nbv,bn->bv", resps.value, owner)
+    found = jnp.einsum("nb,bn->b", resps.found.astype(jnp.float32), owner) > 0
+    scan_values = jnp.einsum("nbsv,bn->bsv", resps.scan_values, owner)
+    scan_count = jnp.einsum("nb,bn->b", resps.scan_count.astype(jnp.float32), owner).astype(jnp.int32)
+    # keys: pick via argmax owner (uint gather, einsum would mangle the sentinel)
+    scan_keys = jnp.take_along_axis(
+        resps.scan_keys, decision.target[None, :, None].astype(jnp.int32), axis=0
+    )[0]
+
+    new_store = StoreState(
+        keys=new_keys, values=new_vals, overflow=store.overflow + dropped
+    )
+    return new_store, Responses(
+        value=value, found=found, scan_values=scan_values, scan_keys=scan_keys, scan_count=scan_count
+    )
+
+
+def store_fill(store: StoreState) -> jnp.ndarray:
+    """(N,) live entries per shard (controller capacity signal)."""
+    return jnp.sum((store.keys != EMPTY).astype(jnp.int32), axis=1)

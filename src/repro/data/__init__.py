@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, make_batch, batch_iterator
+from repro.data.ycsb import WorkloadConfig, load_phase, run_phase

@@ -1,0 +1,97 @@
+"""Activation sharding constraints (perf iteration A1/B1, EXPERIMENTS §Perf).
+
+GSPMD left to its own devices reshards layer-scan intermediates (observed:
+8-way re-tilings of d_model plus "involuntary full rematerialization"
+gathers inside every layer iteration).  Pinning the hidden-state layout at
+layer boundaries with ``with_sharding_constraint`` removes the freedom to
+reshard mid-stack.
+
+The model code stays mesh-agnostic: it calls ``constrain(x, kind)`` through
+a contextvar-installed policy; the launcher installs a policy built from
+the actual mesh.  Default policy is identity (no constraints — the
+paper-faithful baseline).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+_POLICY: contextvars.ContextVar[Callable | None] = contextvars.ContextVar(
+    "activation_policy", default=None
+)
+
+
+def constrain(x, kind: str):
+    """Apply the installed activation-sharding policy (identity if none)."""
+    policy = _POLICY.get()
+    return x if policy is None else policy(x, kind)
+
+
+@contextlib.contextmanager
+def activation_policy(policy: Callable):
+    token = _POLICY.set(policy)
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def make_mesh_policy(mesh, dp_axes, model_axis: str = "model",
+                     seq_residual: bool = False, seq_attn: bool = False):
+    """Standard layout pins:
+
+    hidden  (B, T, D)      -> (dp, None, None)
+    ffn     (B, T, F)      -> (dp, None, model)
+    logits  (B, T, V)      -> (dp, None, model)
+    moe_in  (E, C, D)      -> (model, None, None)
+    tokens2d (N, D)        -> (dp, None)
+    """
+    dp = tuple(dp_axes) if not isinstance(dp_axes, str) else (dp_axes,)
+
+    specs = {
+        "hidden": P(dp, None, None),
+        "ffn": P(dp, None, model_axis),
+        "logits": P(dp, None, model_axis),
+        "moe_expert": P(model_axis, None, None),
+        "tokens2d": P(dp, None),
+    }
+    if seq_attn:
+        # sequence-parallel attention (Ulysses-style) — REFUTED for the
+        # qwen3 cell (EXPERIMENTS §Perf A2): the block-reshape inside flash
+        # fights the T-sharding and GSPMD reshards per block. Kept as an
+        # opt-in knob for archs where it may win.
+        specs.update({
+            "attn_q": P(dp, model_axis, None, None),
+            "attn_kv": P(dp, None, None, None),
+            "attn_out": P(dp, model_axis, None, None),
+        })
+
+    if seq_residual:
+        # residual stream itself sharded over T (Megatron sequence
+        # parallelism): norms run on local T slices; projections
+        # gather/reduce-scatter instead of all-reduce.
+        specs["hidden"] = P(dp, model_axis, None)
+
+    def policy(x, kind: str):
+        spec = specs.get(kind)
+        if spec is None or x.ndim != len(spec):
+            return x
+        # divisibility guard: constraint must be satisfiable
+        sizes = {**{a: mesh.shape[a] for a in mesh.axis_names}}
+        for dim, s in zip(x.shape, spec):
+            if s is None:
+                continue
+            names = s if isinstance(s, tuple) else (s,)
+            k = 1
+            for nm in names:
+                k *= sizes[nm]
+            if dim % k:
+                return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return policy

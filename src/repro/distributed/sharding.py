@@ -1,0 +1,225 @@
+"""Sharding rules: parameter / optimizer-state / activation / cache specs.
+
+Logical layout on the production mesh (DESIGN.md §5):
+
+  * "model"          — tensor parallel: attention head-dim columns, FFN
+                       hidden, expert axis (EP), vocab.
+  * ("pod", "data")  — data parallel (training batch; serving batch) and
+                       ZeRO partitioning of optimizer state.
+  * decode caches    — batch on DP axes; sequence axis on "model"
+                       (flash-decoding combine) or, for batch-1 long
+                       context, on *all* axes.
+
+Every rule checks divisibility against the actual mesh axis size and falls
+back to replication — a config can never fail to lower because of a rule.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+# leaves whose LAST axis is column-sharded on "model"
+_COL = {
+    "wq", "wk", "wv", "wg", "wu", "wi", "wuq", "wdq", "wdkv", "wukv",
+    "in_proj", "w1", "w2", "bq", "bk", "bv", "bi", "conv_w", "conv_b",
+    "norm_w",
+}
+# leaves whose second-to-last axis is row-sharded on "model"
+_ROW = {"wo", "out_proj"}
+_EMBED = {"embed"}
+_HEAD = {"lm_head"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+    return out
+
+
+def _mesh_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _spec_with(ndim: int, axis_idx: int, axis_name) -> P:
+    spec = [None] * ndim
+    spec[axis_idx] = axis_name
+    return P(*spec)
+
+
+def param_specs(abstract_params, mesh, *, model_axis: str = "model") -> Any:
+    """PartitionSpec pytree for parameters (matching abstract_params)."""
+    msize = _mesh_size(mesh, model_axis)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+
+        is_expert = "moe" in names and "shared" not in names and nd >= 3 and name in (
+            "wg", "wu", "wo"
+        )
+        if is_expert:  # (L, E, D, F): shard the expert axis
+            e_axis = nd - 3
+            if shape[e_axis] % msize == 0:
+                return _spec_with(nd, e_axis, model_axis)
+            return P(*([None] * nd))
+        if name in _EMBED and nd == 2:
+            return _spec_with(2, 0, model_axis) if shape[0] % msize == 0 else P(None, None)
+        if name in _HEAD and nd == 2:
+            return _spec_with(2, 1, model_axis) if shape[1] % msize == 0 else P(None, None)
+        if name in _COL and nd >= 1 and shape[-1] % msize == 0:
+            return _spec_with(nd, nd - 1, model_axis)
+        if name in _ROW and nd >= 2 and shape[-2] % msize == 0:
+            return _spec_with(nd, nd - 2, model_axis)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def zero_extend(specs, abstract, mesh, dp_axes) -> Any:
+    """ZeRO: additionally shard each leaf over the DP axes on the first
+    still-unsharded, divisible dimension (optimizer m/v and, optionally,
+    master params)."""
+    dsize = _mesh_size(mesh, dp_axes)
+    dp = dp_axes if isinstance(dp_axes, tuple) else (dp_axes,)
+
+    def rule(spec, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        # idempotent: leaves already carrying a DP axis are left untouched
+        for s in dims:
+            used = s if isinstance(s, tuple) else (s,)
+            if any(a in dp for a in used if a):
+                return P(*dims)
+        for i, (s, n) in enumerate(zip(dims, leaf.shape)):
+            if s is None and n > 0 and n % dsize == 0:
+                dims[i] = dp
+                break
+        return P(*dims)
+
+    return jax.tree.map(rule, specs, abstract,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes_per_device(abstract, specs, mesh) -> int:
+    """Per-device resident bytes under the given specs."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(abstract),
+                          jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        n = leaf.size * leaf.dtype.itemsize
+        for s in spec:
+            if s is None:
+                continue
+            for ax in (s if isinstance(s, tuple) else (s,)):
+                n //= mesh.shape[ax]
+        total += n
+    return total
+
+
+def state_specs(abstract_state, mesh, *, model_axis="model", dp_axes=("data",),
+                zero: bool = True, fsdp_params: bool = False) -> Any:
+    """Specs for the full train state {params, opt{m,v,step}, [err]}."""
+    p_specs = param_specs(abstract_state["params"], mesh, model_axis=model_axis)
+    if fsdp_params:
+        # ZeRO-3/FSDP: master params also sharded over the DP axes; the
+        # layer scan gathers one layer's slice at a time
+        p_specs = zero_extend(p_specs, abstract_state["params"], mesh, dp_axes)
+    out = {"params": p_specs}
+    opt = {}
+    for k, sub in abstract_state["opt"].items():
+        if k == "step":
+            opt[k] = P()
+        elif k == "f":  # adafactor factored state
+            f_specs = jax.tree.map(lambda l: P(*([None] * l.ndim)), sub)
+            opt[k] = f_specs
+        else:  # m / v mirror params (+ ZeRO over dp)
+            opt[k] = zero_extend(p_specs, sub, mesh, dp_axes) if zero else p_specs
+    out["opt"] = opt
+    if "err" in abstract_state:
+        out["err"] = p_specs
+    return out
+
+
+def batch_specs(abstract_batch, dp_axes) -> Any:
+    """Batch-leading activations sharded over the DP axes."""
+    dp = dp_axes if isinstance(dp_axes, tuple) else (dp_axes,)
+
+    def rule(leaf):
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, abstract_batch)
+
+
+def cache_specs(abstract_cache, mesh, *, dp_axes=("data",), model_axis="model",
+                seq_policy: str = "auto") -> Any:
+    """Decode-cache specs.
+
+    seq axis placement:
+      * batch divisible by DP -> batch on DP; seq on "model" if divisible
+        (flash-decoding combine across model shards).
+      * batch == 1 long context -> seq over (DP + model) jointly.
+    """
+    dp = dp_axes if isinstance(dp_axes, tuple) else (dp_axes,)
+    dsize = _mesh_size(mesh, dp)
+    msize = mesh.shape[model_axis]
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = leaf.ndim
+        if name == "length":
+            B = leaf.shape[0]
+            return P(dp) if B % dsize == 0 else P()
+        # state leaves (conv/ssm): (L, B, ...) — batch on dp only
+        dims = [None] * nd
+        B = leaf.shape[1] if nd >= 2 else 0
+        batch_on_dp = nd >= 2 and B % dsize == 0
+        if batch_on_dp:
+            dims[1] = dp
+        if name in ("k", "v", "ka", "va", "kb", "vb", "ckv", "krope"):
+            S = leaf.shape[2]
+            if batch_on_dp:
+                if (seq_policy == "heads" and nd >= 4
+                        and leaf.shape[3] % msize == 0):
+                    dims[3] = model_axis       # shard kv heads: local attention
+                elif S % msize == 0:
+                    dims[2] = model_axis
+            else:
+                # long-context batch-1: spread the sequence over everything
+                joint = dp + (model_axis,)
+                if S % (dsize * msize) == 0:
+                    dims[2] = joint
+                elif S % msize == 0:
+                    dims[2] = model_axis
+        elif name == "ssm" and nd >= 3:
+            H = leaf.shape[2]
+            if H % msize == 0:
+                dims[2] = model_axis
+        elif name == "conv" and nd >= 4:
+            C = leaf.shape[3]
+            if C % msize == 0:
+                dims[3] = model_axis
+        elif name in ("ck", "cv") and nd >= 3:  # whisper cross K/V
+            S = leaf.shape[2]
+            if S % msize == 0:
+                dims[2] = model_axis
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+def to_named(specs, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

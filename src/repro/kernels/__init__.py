@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+range_match  — the switch match-action data plane (paper's hot path)
+decode_attn  — flash-decoding GQA attention over the routed KV cache
+ssd_chunk    — Mamba-2 SSD chunked scan (mamba2/hymba archs)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper), ref.py (pure-jnp oracle).  Kernels are written for TPU
+(VMEM BlockSpecs, MXU-aligned tiles) and validated with interpret=True on
+CPU; tests sweep shapes/dtypes asserting allclose against the oracles.
+"""
+
+from repro.kernels.range_match.ops import range_match
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.ssd_chunk.ops import ssd_scan, ssd_decode_step
+
+__all__ = ["range_match", "decode_attn", "ssd_scan", "ssd_decode_step"]

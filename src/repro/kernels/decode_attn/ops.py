@@ -1,0 +1,44 @@
+"""Jitted public wrapper for decode attention (pads S, picks block size)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attn_pallas
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+def _pick_block(S: int) -> int:
+    for b in (512, 256, 128):
+        if S % b == 0:
+            return b
+    return 128
+
+
+@partial(jax.jit, static_argnames=("window", "use_pallas", "interpret"))
+def decode_attn(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window: int | None = None,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """GQA decode attention: q (B,Hq,D) over cache k/v (B,S,Hkv,D)."""
+    B, S = k.shape[0], k.shape[1]
+    if not use_pallas:
+        return decode_attn_ref(q, k, v, lengths, window=window)
+    block = _pick_block(S) if S >= 128 else S
+    Sp = ((S + block - 1) // block) * block
+    if Sp != S:
+        pad = Sp - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return decode_attn_pallas(
+        q, k, v, lengths, block_s=block, window=window, interpret=interpret
+    )

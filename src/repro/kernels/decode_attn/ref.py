@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for flash-decoding GQA attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def decode_attn_ref(
+    q: jnp.ndarray,        # (B, Hq, D)
+    k: jnp.ndarray,        # (B, S, Hkv, D)
+    v: jnp.ndarray,        # (B, S, Hkv, D)
+    lengths: jnp.ndarray,  # (B,)
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, group, D)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None, None, None] - window)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    p = _softmax(scores)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: the switch data-plane match-action stage.
+
+This is the paper's per-packet hot path (§4.2): match the matching value
+against the sub-range table, fetch the chain action data, pick head/tail by
+opcode.  A P4 switch does this in TCAM; the TPU-native formulation
+(DESIGN.md §2) is **compare-and-sum range matching** — for a table of R
+contiguous sub-ranges, the record index of value v is
+
+    ridx(v) = sum_i [ v >= interior_bound_i ]          (i < R-1)
+
+an O(R) broadcast-compare + reduce that is perfectly lane-parallel on the
+VPU and needs no gather (TPU gathers from dynamic vectors are slow; the
+bounds tile lives wholly in VMEM).  Chain fetch is a one-hot contraction
+against the chain table — an MXU matmul for free.
+
+Tiling: the packet batch is reshaped to (B/128, 128) and tiled (Bb, 128)
+rows per grid step; the bounds / chain tables are small (R <= few K) and are
+mapped whole into VMEM every step (grid-invariant index_map).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 8  # sublane-aligned f32/i32 tile height
+
+
+def _kernel(mvals_ref, opcodes_ref, bounds_ref, chains_ref, clen_ref,
+            ridx_ref, target_ref, chain_ref, *, num_ranges: int, r_max: int):
+    mvals = mvals_ref[...]            # (Bb, 128) uint32
+    opcodes = opcodes_ref[...]        # (Bb, 128) int32
+    bounds = bounds_ref[...]          # (1, Rpad) uint32 — interior bounds, MAX-padded
+    chains = chains_ref[...]          # (r_max, Rpad) int32
+    clen = clen_ref[...]              # (1, Rpad) int32
+
+    # --- compare-and-sum range match (vectorized searchsorted 'right') ---
+    # padding bounds are MAX_KEY: mvals < MAX so pads never increment.
+    ge = (mvals[:, :, None] >= bounds[0][None, None, :]).astype(jnp.int32)
+    ridx = jnp.sum(ge, axis=-1)       # (Bb, 128) in [0, R)
+
+    # --- one-hot chain fetch (action-data registers) ---
+    rpad = bounds.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, rpad), 2)
+    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)       # (Bb,128,Rpad)
+    # chain position p of each packet: sum(onehot * chains[p])
+    chain_cols = []
+    for p in range(r_max):
+        chain_cols.append(jnp.sum(onehot * chains[p][None, None, :], axis=-1))
+    chain = jnp.stack(chain_cols, axis=0)                       # (r, Bb, 128)
+    clen_b = jnp.sum(onehot * clen[0][None, None, :], axis=-1)  # (Bb, 128)
+
+    # --- opcode action: PUT/DEL -> head, GET/SCAN -> tail ---
+    is_write = (opcodes == 1) | (opcodes == 2)
+    head = chain[0]
+    # tail = chain[clen-1]: select over static positions (r_max small)
+    tail = chain[0]
+    for p in range(1, r_max):
+        tail = jnp.where(clen_b - 1 == p, chain[p], tail)
+    target = jnp.where(is_write, head, tail)
+
+    ridx_ref[...] = ridx
+    target_ref[...] = target
+    chain_ref[...] = chain
+
+
+def range_match_pallas(
+    mvals: jnp.ndarray,        # (B,) uint32 matching values
+    opcodes: jnp.ndarray,      # (B,) int32
+    interior_bounds: jnp.ndarray,  # (Rpad,) uint32, MAX-padded interior bounds
+    chains: jnp.ndarray,       # (r_max, Rpad) int32 (padded cols repeat last)
+    chain_len: jnp.ndarray,    # (Rpad,) int32
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Launch the match-action kernel.  B must be a multiple of 128*block_rows
+    (ops.py pads).  Returns (ridx (B,), target (B,), chain (r_max, B))."""
+    B = mvals.shape[0]
+    rows = B // LANES
+    r_max, rpad = chains.shape
+    num_ranges = rpad  # kernel only needs the padded extent
+
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_kernel, num_ranges=num_ranges, r_max=r_max)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),        # ridx
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),        # target
+        jax.ShapeDtypeStruct((r_max, rows, LANES), jnp.int32),  # chain
+    )
+    whole = lambda i: (0, 0)
+    ridx, target, chain = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, rpad), whole),
+            pl.BlockSpec((r_max, rpad), lambda i: (0, 0)),
+            pl.BlockSpec((1, rpad), whole),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((r_max, block_rows, LANES), lambda i: (0, i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        mvals.reshape(rows, LANES),
+        opcodes.reshape(rows, LANES),
+        interior_bounds.reshape(1, rpad),
+        chains,
+        chain_len.reshape(1, rpad),
+    )
+    return ridx.reshape(B), target.reshape(B), chain.reshape(r_max, B)

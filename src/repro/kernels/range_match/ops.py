@@ -1,0 +1,72 @@
+"""Jitted public wrapper for the range_match kernel.
+
+Handles padding (batch to 128*block_rows, table to a lane multiple) and
+adapts a :class:`repro.core.directory.Directory` into the kernel's padded
+table layout.  ``use_pallas=False`` falls back to the jnp oracle — the two
+paths are asserted identical in tests across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core.directory import Directory
+from repro.kernels.range_match.kernel import range_match_pallas, LANES, DEFAULT_BLOCK_ROWS
+from repro.kernels.range_match.ref import range_match_ref
+
+
+def pack_tables(directory: Directory):
+    """Directory -> (interior_bounds, chains, chain_len) padded for the kernel."""
+    interior = directory.bounds[1:-1]                      # (R-1,)
+    r = interior.shape[0]
+    rpad = max(LANES, ((r + LANES - 1) // LANES) * LANES)
+    pad = jnp.full((rpad - r,), K.EMPTY_KEY, jnp.uint32)   # MAX: never matches
+    interior_p = jnp.concatenate([interior, pad])
+
+    R, r_max = directory.chains.shape
+    chains_t = directory.chains.T                          # (r_max, R)
+    cpad = jnp.zeros((r_max, rpad - R), jnp.int32)
+    chains_p = jnp.concatenate([chains_t, cpad], axis=1)
+    clen_p = jnp.concatenate(
+        [directory.chain_len, jnp.ones((rpad - R,), jnp.int32)]
+    )
+    return interior_p, chains_p, clen_p
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_rows"))
+def range_match(
+    directory: Directory,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Route a packet batch: returns (ridx (B,), target (B,), chain (r_max,B)).
+
+    Identical semantics to ``core.routing.route`` (sans counter bumps).
+    """
+    B = keys.shape[0]
+    mvals = K.matching_value(keys, hash_partitioned=directory.hash_partitioned)
+    tile = LANES * block_rows
+    Bp = ((B + tile - 1) // tile) * tile
+    if Bp != B:
+        mvals = jnp.concatenate([mvals, jnp.zeros((Bp - B,), mvals.dtype)])
+        opcodes = jnp.concatenate([opcodes, jnp.zeros((Bp - B,), opcodes.dtype)])
+
+    bounds_p, chains_p, clen_p = pack_tables(directory)
+    if use_pallas:
+        ridx, target, chain = range_match_pallas(
+            mvals, opcodes.astype(jnp.int32), bounds_p, chains_p, clen_p,
+            block_rows=block_rows, interpret=interpret,
+        )
+    else:
+        ridx, target, chain = range_match_ref(
+            mvals, opcodes.astype(jnp.int32), bounds_p, chains_p, clen_p
+        )
+    return ridx[:B], target[:B], chain[:, :B]

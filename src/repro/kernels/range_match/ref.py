@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the range_match kernel (mirrors core.routing)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def range_match_ref(
+    mvals: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    interior_bounds: jnp.ndarray,
+    chains: jnp.ndarray,
+    chain_len: jnp.ndarray,
+):
+    """Same contract as kernel.range_match_pallas, computed with jnp.
+
+    interior_bounds: (Rpad,) uint32 MAX-padded; chains (r_max, Rpad);
+    chain_len (Rpad,).
+    """
+    ridx = jnp.sum(
+        (mvals[:, None] >= interior_bounds[None, :]).astype(jnp.int32), axis=-1
+    )
+    chain = chains[:, ridx]                     # (r_max, B)
+    clen = chain_len[ridx]                      # (B,)
+    head = chain[0]
+    tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[None, :], axis=0)[0]
+    is_write = (opcodes == 1) | (opcodes == 2)
+    target = jnp.where(is_write, head, tail)
+    return ridx, target, chain

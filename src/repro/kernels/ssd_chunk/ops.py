@@ -1,0 +1,70 @@
+"""Jitted public wrapper for the SSD chunk scan (padding + G>1 fallback)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_chunk.ref import ssd_chunked_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,        # (B, T, H, P)
+    dt: jnp.ndarray,       # (B, T, H) positive
+    A: jnp.ndarray,        # (H,) negative
+    Bm: jnp.ndarray,       # (B, T, N) or (B, T, G, N)
+    Cm: jnp.ndarray,
+    init_state: jnp.ndarray | None = None,  # (B, H, P, N)
+    *,
+    chunk: int = 128,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Run the SSD scan; returns (y (B,T,H,P), final_state (B,H,P,N)).
+
+    Padding: T is padded to a chunk multiple with dt=0 steps — dt=0 makes a
+    step an exact no-op on the state (decay exp(0)=1, input weight 0), so
+    padded outputs are trimmed without affecting the final state.
+    """
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    grouped = Bm.ndim == 4 and Bm.shape[2] > 1
+    Tp = ((T + chunk - 1) // chunk) * chunk
+    if Tp != T:
+        pad = Tp - T
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        pad_bc = ((0, 0), (0, pad)) + ((0, 0),) * (Bm.ndim - 2)
+        Bm = jnp.pad(Bm, pad_bc)
+        Cm = jnp.pad(Cm, pad_bc)
+
+    if use_pallas and not grouped:
+        b2 = Bm[:, :, 0, :] if Bm.ndim == 4 else Bm
+        c2 = Cm[:, :, 0, :] if Cm.ndim == 4 else Cm
+        y, fs = ssd_chunk_pallas(
+            x, dt, A, b2, c2, init_state, chunk=chunk, interpret=interpret
+        )
+    else:
+        y, fs = ssd_chunked_ref(x, dt, A, Bm, Cm, init_state, chunk=chunk)
+    return y[:, :T], fs
+
+
+def ssd_decode_step(x_t, dt_t, A, b_t, c_t, state):
+    """Single-token recurrence for serving (no kernel needed: O(H*P*N)).
+
+    x_t (B,H,P), dt_t (B,H), b_t/c_t (B,N), state (B,H,P,N).
+    Returns (y_t (B,H,P), new_state).
+    """
+    decay = jnp.exp(dt_t * A[None, :])                      # (B,H)
+    state = decay[:, :, None, None] * state + (
+        (dt_t[:, :, None] * x_t)[:, :, :, None] * b_t[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+    return y, state

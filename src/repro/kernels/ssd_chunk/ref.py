@@ -1,0 +1,89 @@
+"""Oracles for the SSD kernel: exact sequential recurrence + chunked jnp.
+
+``ssd_sequential_ref`` is the ground-truth recurrence (what the chunked
+algorithm must equal); ``ssd_chunked_ref`` is the same chunked math as the
+kernel in pure jnp (supports G > 1) and is what the mamba2 model layer uses
+when the Pallas path is off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm, init_state):
+    """Exact recurrence, scanned over time.
+
+    x (B,T,H,P), dt (B,T,H), A (H,), Bm/Cm (B,T,N), init_state (B,H,P,N).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+
+    def one_seq(x_s, dt_s, b_s, c_s, s0):
+        def step(S, inp):
+            x_t, dt_t, b_t, c_t = inp          # (H,P) (H,) (N,) (N,)
+            decay = jnp.exp(dt_t * A)          # (H,)
+            S = decay[:, None, None] * S + (dt_t[:, None] * x_t)[:, :, None] * b_t[None, None, :]
+            y = jnp.einsum("hpn,n->hp", S, c_t)
+            return S, y
+
+        S, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                             (x_s.astype(jnp.float32), dt_s.astype(jnp.float32),
+                              b_s.astype(jnp.float32), c_s.astype(jnp.float32)))
+        return ys, S
+
+    y, fs = jax.vmap(one_seq)(x, dt, Bm, Cm, init_state)
+    return y.astype(x.dtype), fs
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, init_state, *, chunk: int = 128):
+    """Chunked SSD in jnp; same math as the Pallas kernel, any G.
+
+    Bm/Cm may be (B,T,N) for G=1 or (B,T,G,N); heads are split evenly
+    across groups in the latter case.
+    """
+    B, T, H, P = x.shape
+    if Bm.ndim == 3:
+        Bm, Cm = Bm[:, :, None, :], Cm[:, :, None, :]
+    G = Bm.shape[2]
+    N = Bm.shape[3]
+    hg = H // G  # heads per group
+    assert T % chunk == 0
+
+    xf = x.astype(jnp.float32).reshape(B, T // chunk, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, T // chunk, chunk, H)
+    bf = Bm.astype(jnp.float32).reshape(B, T // chunk, chunk, G, N)
+    cf = Cm.astype(jnp.float32).reshape(B, T // chunk, chunk, G, N)
+    group_of_head = jnp.arange(H) // hg
+
+    # rematerialized in backward: per-chunk (Q,Q,H) semiseparable masks would
+    # otherwise be stacked across all T/Q chunks by the scan
+    @jax.checkpoint
+    def one_chunk(S, inp):
+        xc, dtc, bc, cc = inp                  # (Q,H,P) (Q,H) (Q,G,N) (Q,G,N)
+        a = dtc * A[None, :]
+        cum = jnp.cumsum(a, axis=0)
+        total = cum[-1]
+        CB = jnp.einsum("ign,jgn->ijg", cc, bc)          # (Q,Q,G)
+        CBh = CB[:, :, group_of_head]                    # (Q,Q,H)
+        # clamp before exp: i<j entries are masked below, but un-clamped
+        # they overflow to inf and the masked backward emits 0*inf = NaN
+        L = jnp.exp(jnp.minimum(cum[:, None, :] - cum[None, :, :], 0.0))
+        Q_ = xc.shape[0]
+        causal = (jnp.arange(Q_)[:, None] >= jnp.arange(Q_)[None, :])[:, :, None]
+        W = jnp.where(causal, CBh * L * dtc[None, :, :], 0.0)
+        y_intra = jnp.einsum("ijh,jhp->ihp", W, xc)
+        ch = cc[:, group_of_head, :]                     # (Q,H,N)
+        y_state = jnp.exp(cum)[:, :, None] * jnp.einsum("ihn,hpn->ihp", ch, S)
+        w = jnp.exp(total[None, :] - cum) * dtc
+        bh = bc[:, group_of_head, :]                     # (Q,H,N)
+        s_add = jnp.einsum("jhp,jhn->hpn", xc * w[:, :, None], bh)
+        S_new = jnp.exp(total)[:, None, None] * S + s_add
+        return S_new, y_intra + y_state
+
+    def one_seq(xs, dts, bs, cs, s0):
+        S, ys = jax.lax.scan(one_chunk, s0.astype(jnp.float32), (xs, dts, bs, cs))
+        return ys.reshape(T, H, P), S
+
+    y, fs = jax.vmap(one_seq)(xf, dtf, bf, cf, init_state)
+    return y.astype(x.dtype), fs

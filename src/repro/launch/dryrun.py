@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # The CPU backend emulates bf16 dots in f32; WLICM hoists the resulting
+    # bf16->f32 convert of remat-saved activation stacks out of the backward
+    # while-loop, materializing a phantom f32 copy (+2 bytes/elem) that a
+    # TPU build (native bf16 MXU) never allocates.  Disabling the pass makes
+    # memory_analysis() reflect the TPU-realistic footprint (DESIGN.md §5).
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the step function the shape dictates
+(train_step / prefill / decode_step), attaches in/out shardings from
+``distributed.sharding``, runs ``.lower().compile()`` against
+ShapeDtypeStruct inputs (no allocation), and records:
+
+  * memory_analysis()  — per-device argument/output/temp bytes (fits?),
+  * cost_analysis()    — per-device HLO FLOPs / bytes accessed,
+  * collective stats   — parsed from the post-SPMD HLO: per-op kind counts
+    and wire bytes (ring-model factors), feeding §Roofline.
+
+Results are cached incrementally into a JSON file; reruns skip completed
+cells.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out results.json
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.configs import SHAPES, ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh, dp_axes
+from repro.launch import input_specs as ISPEC
+from repro.distributed import sharding as SH
+from repro.models import model as MODEL
+from repro.training.step import TrainConfig, make_train_step, abstract_train_state
+from repro.training.optimizer import OptConfig
+
+DEFAULT_OUT = "dryrun_results.json"
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ring-model wire factors (bytes moved per device ~ factor * payload bytes)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt[:4] if dt.startswith("f8") else dt, 4)
+    return total
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[\'"\s:{]+n[\'"\s:]+(\d+)')
+_CALLS = re.compile(r"(?:calls|to_apply|condition)=%?([\w.\-]+)")
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-kind counts + wire-byte estimate from post-SPMD HLO.
+
+    Collectives inside while-loop bodies (layer scans, microbatch loops)
+    run once per iteration: bytes are multiplied by the loop's
+    known_trip_count, propagated through the computation call graph.
+    """
+    # --- parse computations, their collectives and call edges ---
+    comps: dict[str, dict] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        h = _COMP_HDR.match(s)
+        if h:
+            cur = h.group(2)
+            comps[cur] = {"coll": [], "edges": []}
+            if h.group(1):
+                entry = cur
+            continue
+        if cur is None or "=" not in s:
+            continue
+        _, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        matched = False
+        for kind in _COLLECTIVES:
+            m = re.match(rf"([^(]*?)\b{kind}(-start)?\(", rhs)
+            if m:
+                comps[cur]["coll"].append((kind, _shape_bytes(m.group(1))))
+                matched = True
+                break
+        if matched:
+            continue
+        wb = _WHILE_BODY.search(rhs)
+        if wb and "while(" in rhs:
+            t = _TRIP.search(rhs)
+            trip = int(t.group(1)) if t else 1
+            comps[cur]["edges"].append((wb.group(1), trip))
+            cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+            if cm:
+                comps[cur]["edges"].append((cm.group(1), trip))
+        else:
+            for callee in _CALLS.findall(rhs):
+                comps[cur]["edges"].append((callee, 1))
+
+    # --- propagate multipliers from ENTRY through the (acyclic) call graph ---
+    mult: dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for callee, w in comps[name]["edges"]:
+            visit(callee, m * w)
+
+    if entry:
+        visit(entry, 1)
+    else:  # fallback: flat count
+        for name in comps:
+            mult[name] = 1
+
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for name, info in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for kind, b in info["coll"]:
+            stats[kind]["count"] += m
+            stats[kind]["bytes"] += m * b
+    wire = sum(_WIRE_FACTOR[k] * v["bytes"] for k, v in stats.items())
+    stats["wire_bytes"] = int(wire)
+    return stats
+
+
+def pick_microbatches(cfg, shape, n_dp: int) -> int:
+    """Enough gradient accumulation that per-micro activations fit HBM.
+
+    Remat keeps ~L x tokens x d_model x 2B of saved layer inputs per
+    microbatch; target that at <= ~2 GiB/device.
+    """
+    local_b = max(1, shape.global_batch // n_dp)
+    big = cfg.d_model >= 4096 or cfg.n_experts >= 64
+    huge = cfg.d_model >= 6144 or (cfg.n_experts >= 64 and cfg.d_model >= 5120)
+    target_tokens = 4096 if huge else (2 * 4096 if big else 16 * 1024)
+    per_seq = shape.seq_len
+    seqs = max(1, target_tokens // per_seq)
+    m = max(1, local_b // seqs)
+    while local_b % m:
+        m -= 1
+    return m
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, microbatches: int | None = None,
+               zero: bool = True, remat: bool = True, donate_cache: bool = False,
+               cache_policy: str = "auto"):
+    """Returns (fn, args, in_shardings, out_shardings) ready to lower."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else pick_microbatches(cfg, shape, n_dp)
+        tcfg = TrainConfig(opt=OptConfig(), microbatches=mb, remat=remat)
+        step = make_train_step(cfg, tcfg)
+        state = abstract_train_state(cfg, tcfg)
+        batch = ISPEC.batch_specs_for(cfg, shape, with_labels=True)
+        p_only = SH.param_specs(state["params"], mesh)
+        fsdp = SH.sharded_bytes_per_device(state["params"], p_only, mesh) > 12 * 2**30
+        state_specs = SH.state_specs(state, mesh, dp_axes=dp, zero=zero,
+                                     fsdp_params=fsdp)
+        batch_sp = SH.batch_specs(batch, dp)
+        in_sh = (SH.to_named(state_specs, mesh), SH.to_named(batch_sp, mesh))
+        out_sh = (SH.to_named(state_specs, mesh), None)
+        return step, (state, batch), in_sh, out_sh, {"microbatches": mb,
+                                                      "fsdp_params": fsdp}
+
+    # serving weights are resident in the compute dtype (bf16), not the
+    # f32 training master copies
+    cdt = jnp.dtype(cfg.dtype)
+    cfg_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, cdt)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l,
+        MODEL.abstract_params(cfg),
+    )
+    p_specs = SH.param_specs(cfg_abs, mesh)
+    # serve weights that exceed HBM under model-only sharding get a second
+    # axis over DP (experts E on model x expert-hidden F on data, etc.)
+    if SH.sharded_bytes_per_device(cfg_abs, p_specs, mesh) > 12 * 2**30:
+        p_specs = SH.zero_extend(p_specs, cfg_abs, mesh, dp)
+
+    if shape.kind == "prefill":
+        batch = ISPEC.batch_specs_for(cfg, shape, with_labels=False)
+        batch_sp = SH.batch_specs(batch, dp)
+
+        def prefill_fn(params, b):
+            return MODEL.prefill(params, cfg, b, cache_len=shape.seq_len)
+
+        in_sh = (SH.to_named(p_specs, mesh), SH.to_named(batch_sp, mesh))
+        return prefill_fn, (cfg_abs, batch), in_sh, None, {}
+
+    # decode
+    spec = ISPEC.input_specs(cfg, shape)
+    cache_abs = spec["cache"]
+    cache_sp = SH.cache_specs(cache_abs, mesh, dp_axes=dp, seq_policy=cache_policy)
+    tok_spec = P(dp) if shape.global_batch % n_dp == 0 else P()
+
+    def decode_fn(params, tokens, cache):
+        return MODEL.decode_step(params, cfg, tokens, cache)
+
+    in_sh = (
+        SH.to_named(p_specs, mesh),
+        NamedSharding(mesh, tok_spec),
+        SH.to_named(cache_sp, mesh),
+    )
+    # cache layout must be stable across decode steps
+    out_sh = (None, SH.to_named(cache_sp, mesh))
+    extra = {"donate": (2,)} if donate_cache else {}
+    return decode_fn, (cfg_abs, spec["tokens"], cache_abs), in_sh, out_sh, extra
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             constrain_acts: bool = False, seq_residual: bool = False,
+             seq_attn: bool = False, **kw) -> dict:
+    cfg = get_config(arch)
+    why = cfg.skips(shape_name)
+    if why:
+        return {"status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, extra = build_cell(arch, shape_name, mesh, **kw)
+    donate = extra.pop("donate", ())
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    if constrain_acts:
+        from repro.distributed.constraints import activation_policy, make_mesh_policy
+        from repro.launch.mesh import dp_axes as _dpa
+        pol = make_mesh_policy(mesh, _dpa(mesh), seq_residual=seq_residual,
+                               seq_attn=seq_attn)
+        with activation_policy(pol):
+            lowered = jfn.lower(*args)
+    else:
+        lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    from repro.launch.hlo_stats import analyze_hlo
+    analytic = analyze_hlo(hlo)
+
+    n_dev = mesh.devices.size
+    result = {
+        "status": "ok",
+        "mesh": list(mesh.shape.values()) if hasattr(mesh.shape, "values") else list(mesh.devices.shape),
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "cost": {
+            # raw XLA numbers (while bodies counted ONCE — kept for
+            # reference; the analytic numbers below are trip-corrected)
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "analytic": analytic,
+        "collectives": coll,
+        **extra,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--tag", default="baseline", help="result namespace (perf iterations)")
+    ap.add_argument("--constrain-acts", action="store_true",
+                    help="pin activation shardings at layer boundaries (perf A1)")
+    ap.add_argument("--donate-cache", action="store_true",
+                    help="alias decode cache buffers in-place (perf C1)")
+    ap.add_argument("--cache-policy", choices=["auto", "heads"], default="auto",
+                    help="decode cache: seq-sharded (auto) or head-sharded (C2)")
+    ap.add_argument("--seq-residual", action="store_true",
+                    help="T-shard the residual stream (Megatron-SP, perf A3)")
+    ap.add_argument("--seq-attn", action="store_true",
+                    help="T-shard q/attention-out (Ulysses; refuted on A2)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = f"{args.tag}/{arch}/{shape_name}/{'multi' if multi else 'single'}"
+                if key in results and results[key].get("status") in ("ok", "skipped") and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    res = run_cell(
+                        arch, shape_name, multi,
+                        microbatches=args.microbatches,
+                        zero=not args.no_zero,
+                        remat=not args.no_remat,
+                        constrain_acts=args.constrain_acts,
+                        seq_residual=args.seq_residual,
+                        seq_attn=args.seq_attn,
+                        donate_cache=args.donate_cache,
+                        cache_policy=args.cache_policy,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = res
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = res["status"]
+                msg = res.get("reason") or res.get("error") or (
+                    f"compile {res.get('compile_s')}s temp "
+                    f"{res.get('memory', {}).get('temp_bytes', 0)/2**30:.2f} GiB/dev"
+                )
+                print(f"[{status}] {key}: {msg}", flush=True)
+
+    ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    sk = sum(1 for v in results.values() if v.get("status") == "skipped")
+    er = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"\ntotal: {ok} ok, {sk} skipped, {er} error -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the exact pytree the corresponding
+step function lowers against:
+
+  * train  -> {tokens, labels, [patches|frames]}
+  * prefill-> {tokens, [patches|frames]}
+  * decode -> (tokens (B,), cache pytree sized to seq_len)
+
+Modality stubs per the assignment: [vlm] provides precomputed patch
+embeddings, [audio] precomputed frame embeddings; text token counts are
+reduced so total sequence length equals the assigned seq_len.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as MODEL
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ArchConfig, shape: ShapeSpec, *, with_labels: bool):
+    B, T = shape.global_batch, shape.seq_len
+    t_text = T
+    out = {}
+    if cfg.family == "vlm":
+        t_text = T - cfg.n_patches
+        out["patches"] = _sds((B, cfg.n_patches, cfg.vit_embed_dim), jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.encoder_len, cfg.d_model), jnp.float32)
+    out["tokens"] = _sds((B, t_text), jnp.int32)
+    if with_labels:
+        out["labels"] = _sds((B, t_text), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Inputs for the step kind the shape dictates."""
+    if shape.kind == "train":
+        return {"batch": batch_specs_for(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs_for(cfg, shape, with_labels=False)}
+    # decode: one new token against a seq_len-sized cache
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: MODEL.empty_cache(cfg, B, shape.seq_len, length=0)
+    )
+    return {"tokens": _sds((B,), jnp.int32), "cache": cache}

@@ -1,0 +1,11 @@
+"""Model zoo: 10 assigned architectures as composable JAX modules."""
+
+from repro.models.model import (
+    init_params, loss_fn, prefill, decode_step, empty_cache,
+    param_count, param_bytes, abstract_params,
+)
+
+__all__ = [
+    "init_params", "loss_fn", "prefill", "decode_step", "empty_cache",
+    "param_count", "param_bytes", "abstract_params",
+]

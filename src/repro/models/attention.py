@@ -1,0 +1,258 @@
+"""Attention variants: GQA (qk-norm / bias / sliding-window) and MLA.
+
+Each variant exposes three paths:
+  * ``*_seq``    — full-sequence (train / prefill) via blockwise flash
+                   attention; prefill additionally returns the KV cache.
+  * ``*_decode`` — one token against a fixed-capacity cache (serving);
+                   MLA uses the absorbed low-rank form (scores and context
+                   computed directly against the compressed latent cache).
+
+Parameter leaves carry no layer axis here; the transformer stacks them
+(L, ...) and scans.  All projections compute in cfg.dtype; softmax/norms
+in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import rms_norm, apply_rope, dense_init, split_keys
+from repro.models.flash import flash_attention
+from repro.distributed.constraints import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ArchConfig, dtype):
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * Dh), dtype),
+        "wk": dense_init(ks[1], (D, Hkv * Dh), dtype),
+        "wv": dense_init(ks[2], (D, Hkv * Dh), dtype),
+        "wo": dense_init(ks[3], (Hq * Dh, D), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * Dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * Dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * Dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), dtype) if cfg.norm_plus_one else jnp.ones((Dh,), dtype)
+        p["k_norm"] = jnp.zeros((Dh,), dtype) if cfg.norm_plus_one else jnp.ones((Dh,), dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg: ArchConfig, positions):
+    B, T, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, Hq, Dh)
+    k = k.reshape(B, T, Hkv, Dh)
+    v = v.reshape(B, T, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_seq(x, p, cfg: ArchConfig, *, is_global=None, positions=None,
+            q_block=256, kv_block=512, return_kv=False):
+    """Full-sequence GQA.  positions default to arange(T)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+    window = cfg.sliding_window
+    ig = None
+    if window is not None:
+        ig = is_global if is_global is not None else jnp.asarray(False)
+    out = flash_attention(
+        q, k, v, causal=True, window=window, is_global=ig,
+        q_block=q_block, kv_block=kv_block,
+    )
+    out = constrain(out, "attn_out")
+    y = out.reshape(B, T, -1) @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(x_t, p, cfg: ArchConfig, k_cache, v_cache, length, *, is_global=None):
+    """One-token decode.  x_t (B,1,D); caches (B,S,Hkv,Dh); length (B,)."""
+    B = x_t.shape[0]
+    S = k_cache.shape[1]
+    positions = length[:, None]                       # (B,1) absolute position
+    q, k_t, v_t = _project_qkv(x_t, p, cfg, positions)
+
+    # append the new token's K/V at position `length`
+    k_cache = _write_at(k_cache, k_t[:, 0], length)
+    v_cache = _write_at(v_cache, v_t[:, 0], length)
+    new_len = length + 1
+
+    window = cfg.sliding_window
+    out = _decode_attend(q[:, 0], k_cache, v_cache, new_len,
+                         window=window, is_global=is_global)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, k_cache, v_cache
+
+
+def _write_at(cache, row, idx):
+    """cache (B,S,...) <- row (B,...) at per-example position idx (B,).
+
+    Implemented as a masked blend rather than a scatter: scatters with
+    per-example indices lower to f32 scatter + dtype converts (breaking
+    in-place aliasing of the scan-carried cache and forcing full-buffer
+    copies every layer — EXPERIMENTS §Perf C2); the blend stays in the
+    cache dtype, fuses, and keeps the carry aliasable.
+    """
+    S = cache.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    hit = pos[None, :] == idx[:, None]                 # (B, S)
+    hit = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(hit, row[:, None].astype(cache.dtype), cache)
+
+
+def _decode_attend(q, k, v, lengths, *, window=None, is_global=None, scale=None):
+    """jnp decode attention (B,Hq,D) x (B,S,Hkv,D); window may be overridden
+    per-layer by traced ``is_global`` (scanned layer stacks)."""
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    if window is not None:
+        in_win = pos >= (lengths[:, None, None, None] - window)
+        if is_global is not None:
+            in_win = in_win | is_global
+        valid &= in_win
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p_ = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bshd->bhgd", p_, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek lineage)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = split_keys(key, 5)
+    return {
+        "wdq": dense_init(ks[0], (D, qr), dtype),
+        "q_norm": jnp.ones((qr,), dtype),
+        "wuq": dense_init(ks[1], (qr, H * (nd + rd)), dtype),
+        "wdkv": dense_init(ks[2], (D, kvr + rd), dtype),
+        "kv_norm": jnp.ones((kvr,), dtype),
+        "wukv": dense_init(ks[3], (kvr, H * (nd + vd)), dtype),
+        "wo": dense_init(ks[4], (H * vd, D), dtype),
+    }
+
+
+def _mla_q(x, p, cfg: ArchConfig, positions):
+    B, T, _ = x.shape
+    H, nd, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(B, T, H, nd + rd)
+    qn, qr = q[..., :nd], q[..., nd:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_ckv(x, p, cfg: ArchConfig, positions):
+    kvr, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv_full = x @ p["wdkv"]
+    ckv = rms_norm(ckv_full[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    krope = apply_rope(ckv_full[..., kvr:][:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, krope  # (B,T,kvr), (B,T,rd)
+
+
+def mla_seq(x, p, cfg: ArchConfig, *, positions=None, q_block=256, kv_block=512,
+            return_kv=False):
+    """Full-sequence MLA: decompress K/V and run flash attention."""
+    B, T, _ = x.shape
+    H, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)
+    qn, qr = _mla_q(x, p, cfg, positions)
+    ckv, krope = _mla_ckv(x, p, cfg, positions)
+    kv = (ckv @ p["wukv"]).reshape(B, T, H, nd + vd)
+    kn, v = kv[..., :nd], kv[..., nd:]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(krope[:, :, None, :], (B, T, H, rd))], axis=-1)
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_q")  # MLA: K is per-head too (no small-KV gather win)
+    v = constrain(v, "attn_q")
+    scale = (nd + rd) ** -0.5
+    out = flash_attention(q, k, v, causal=True, q_block=q_block, kv_block=kv_block,
+                          scale=scale)
+    out = constrain(out, "attn_out")
+    y = out.reshape(B, T, -1) @ p["wo"]
+    if return_kv:
+        return y, (ckv, krope)
+    return y
+
+
+def mla_decode(x_t, p, cfg: ArchConfig, ckv_cache, krope_cache, length):
+    """Absorbed-form MLA decode: scores/context against the latent cache.
+
+    ckv_cache (B,S,kvr), krope_cache (B,S,rd).  The up-projections are
+    *absorbed*: q_nope is mapped into latent space once (O(H*nd*kvr)), so
+    per-token cost is O(S * (kvr + rd)) per head rather than
+    O(S * H * (nd + vd)) decompression — the standard MLA serving trick.
+    """
+    B = x_t.shape[0]
+    H, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    positions = length[:, None]
+    qn, qr = _mla_q(x_t, p, cfg, positions)          # (B,1,H,nd),(B,1,H,rd)
+    ckv_t, krope_t = _mla_ckv(x_t, p, cfg, positions)
+    ckv_cache = _write_at(ckv_cache, ckv_t[:, 0], length)
+    krope_cache = _write_at(krope_cache, krope_t[:, 0], length)
+    new_len = length + 1
+
+    wukv = p["wukv"].reshape(kvr, H, nd + vd)
+    wuk, wuv = wukv[..., :nd], wukv[..., nd:]
+    # absorb: q'(B,H,kvr) = qn . wuk^T
+    q_lat = jnp.einsum("bhn,rhn->bhr", qn[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scale = (nd + rd) ** -0.5
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache.astype(jnp.float32))
+    s += jnp.einsum("bhr,bsr->bhs", qr[:, 0].astype(jnp.float32),
+                    krope_cache.astype(jnp.float32))
+    s *= scale
+    S = ckv_cache.shape[1]
+    valid = jnp.arange(S)[None, None, :] < new_len[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    attn = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    ctx = jnp.einsum("bhs,bsr->bhr", attn, ckv_cache.astype(jnp.float32))  # latent ctx
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wuv.astype(jnp.float32))         # (B,H,vd)
+    y = out.reshape(B, 1, H * vd).astype(x_t.dtype) @ p["wo"]
+    return y, ckv_cache, krope_cache

@@ -1,0 +1,231 @@
+"""Whisper-style encoder–decoder (audio frontend stubbed per assignment).
+
+``input_specs`` feeds precomputed frame embeddings (B, F, D) — the conv
+frontend is a stub.  Both stacks use sinusoidal positions (the decoder's
+learned table is replaced so parameter shapes are shape-independent —
+DESIGN.md).  Encoder: bidirectional attention; decoder: causal self-attn +
+cross-attn whose K/V are computed once at prefill and kept static.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import layer_norm, sinusoid_pos, dense_init, split_keys
+from repro.models.flash import flash_attention
+from repro.models import ffn as F
+from repro.models import attention as A
+
+
+def _init_attn(key, cfg, dtype):
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H * Dh), dtype),
+        "bq": jnp.zeros((H * Dh,), dtype),
+        "wk": dense_init(ks[1], (D, H * Dh), dtype),
+        "wv": dense_init(ks[2], (D, H * Dh), dtype),
+        "bv": jnp.zeros((H * Dh,), dtype),
+        "wo": dense_init(ks[3], (H * Dh, D), dtype),
+        "bo": jnp.zeros((D,), dtype),
+    }
+
+
+def _ln_init(cfg, dtype):
+    return {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {"ln1": _ln_init(cfg, dtype), "attn": _init_attn(ks[0], cfg, dtype),
+            "ln2": _ln_init(cfg, dtype), "mlp": F.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "ln1": _ln_init(cfg, dtype), "self": _init_attn(ks[0], cfg, dtype),
+        "lnx": _ln_init(cfg, dtype), "cross": _init_attn(ks[1], cfg, dtype),
+        "ln2": _ln_init(cfg, dtype), "mlp": F.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 4)
+    enc_keys = split_keys(ks[0], cfg.n_encoder_layers)
+    dec_keys = split_keys(ks[1], cfg.n_layers)
+    return {
+        "embed": dense_init(ks[2], (cfg.padded_vocab, cfg.d_model), dtype, scale=0.02),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_enc_layer(k, cfg, dtype) for k in enc_keys]),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_dec_layer(k, cfg, dtype) for k in dec_keys]),
+        "enc_ln": _ln_init(cfg, dtype),
+        "dec_ln": _ln_init(cfg, dtype),
+    }
+
+
+def _proj(x, p, cfg, which):
+    B, T, _ = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"] + p["bq"]).reshape(B, T, H, Dh)
+    k = (x @ p["wk"]).reshape(B, T, H, Dh)
+    v = (x @ p["wv"] + p["bv"]).reshape(B, T, H, Dh)
+    return q, k, v
+
+
+def _attn(x, p, cfg, *, causal, kv=None):
+    """kv: precomputed (k, v) for cross attention."""
+    B, T, _ = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"] + p["bq"]).reshape(B, T, H, Dh)
+    if kv is None:
+        k = (x @ p["wk"]).reshape(B, T, H, Dh)
+        v = (x @ p["wv"] + p["bv"]).reshape(B, T, H, Dh)
+    else:
+        k, v = kv
+    out = flash_attention(q, k, v, causal=causal)
+    return out.reshape(B, T, H * Dh) @ p["wo"] + p["bo"]
+
+
+def _cross_kv(enc_out, p, cfg):
+    B, S, _ = enc_out.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, S, H, Dh)
+    v = (enc_out @ p["wv"] + p["bv"]).reshape(B, S, H, Dh)
+    return k, v
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames (B, F, D) stub embeddings -> encoder states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoid_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(xc, lp):
+        h = layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        xc = xc + _attn(h, lp["attn"], cfg, causal=False)
+        h = layer_norm(xc, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        xc = xc + F.mlp(h, lp["mlp"], cfg)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"], cfg.norm_eps)
+
+
+def decode_seq(params, cfg: ArchConfig, tokens, enc_out, *, return_cache=False,
+               cache_len: int | None = None):
+    """Teacher-forced decoder pass; optionally returns the serving cache."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoid_pos(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(xc, lp):
+        h = layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        if return_cache:
+            B, T, _ = h.shape
+            H, Dh = cfg.n_heads, cfg.head_dim
+            k = (h @ lp["self"]["wk"]).reshape(B, T, H, Dh)
+            v = (h @ lp["self"]["wv"] + lp["self"]["bv"]).reshape(B, T, H, Dh)
+        xc = xc + _attn(h, lp["self"], cfg, causal=True)
+        h = layer_norm(xc, lp["lnx"]["w"], lp["lnx"]["b"], cfg.norm_eps)
+        ck, cv = _cross_kv(enc_out, lp["cross"], cfg)
+        xc = xc + _attn(h, lp["cross"], cfg, causal=False, kv=(ck, cv))
+        h = layer_norm(xc, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        xc = xc + F.mlp(h, lp["mlp"], cfg)
+        if return_cache:
+            return xc, {"k": k, "v": v, "ck": ck, "cv": cv}
+        return xc, None
+
+    x, cache = jax.lax.scan(body, x, params["dec"])
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    if return_cache:
+        T = tokens.shape[1]
+        pad = cache_len - T
+        cache = {
+            "k": jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "ck": cache["ck"], "cv": cache["cv"],
+            "length": jnp.full((tokens.shape[0],), T, jnp.int32),
+        }
+        return logits, cache
+    return logits, None
+
+
+def loss_fn(params, cfg: ArchConfig, batch, **_):
+    """batch: frames (B,F,D), tokens (B,T), labels (B,T)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    logits, _ = decode_seq(params, cfg, batch["tokens"], enc_out)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, lse - gold, 0.0)
+    count = jnp.maximum(jnp.sum(mask), 1)
+    ce = jnp.sum(nll) / count.astype(jnp.float32)
+    return ce, {"ce": ce, "tokens": jnp.sum(mask),
+                "moe_aux_loss": jnp.zeros((), jnp.float32),
+                "moe_dropped": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, cache_len: int, **_):
+    enc_out = encode(params, cfg, batch["frames"])
+    logits, cache = decode_seq(params, cfg, batch["tokens"], enc_out,
+                               return_cache=True, cache_len=cache_len)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens_t, cache):
+    """One decoder token against (self cache, static cross K/V)."""
+    B = tokens_t.shape[0]
+    length = cache["length"]
+    x = params["embed"][tokens_t[:, None]].astype(jnp.dtype(cfg.dtype))
+    S_max = cache["k"].shape[2]  # cache k: (L, B, S, H, Dh)
+    pos_tab = sinusoid_pos(S_max, cfg.d_model).astype(x.dtype)
+    x = x + pos_tab[length][:, None, :]
+
+    def body(xc, per_layer):
+        lp, k_c, v_c, ck, cv = per_layer
+        h = layer_norm(xc, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        H, Dh = cfg.n_heads, cfg.head_dim
+        q = (h @ lp["self"]["wq"] + lp["self"]["bq"]).reshape(B, 1, H, Dh)
+        k_t = (h @ lp["self"]["wk"]).reshape(B, H, Dh)
+        v_t = (h @ lp["self"]["wv"] + lp["self"]["bv"]).reshape(B, H, Dh)
+        k_c = A._write_at(k_c, k_t, length)
+        v_c = A._write_at(v_c, v_t, length)
+        y = A._decode_attend(q[:, 0], k_c, v_c, length + 1)
+        xc = xc + y.reshape(B, 1, H * Dh) @ lp["self"]["wo"] + lp["self"]["bo"]
+        h = layer_norm(xc, lp["lnx"]["w"], lp["lnx"]["b"], cfg.norm_eps)
+        qx = (h @ lp["cross"]["wq"] + lp["cross"]["bq"]).reshape(B, 1, H, Dh)
+        enc_len = jnp.full((B,), ck.shape[1], jnp.int32)
+        yx = A._decode_attend(qx[:, 0], ck, cv, enc_len)
+        xc = xc + yx.reshape(B, 1, H * Dh) @ lp["cross"]["wo"] + lp["cross"]["bo"]
+        h = layer_norm(xc, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        xc = xc + F.mlp(h, lp["mlp"], cfg)
+        return xc, (k_c, v_c)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    new_cache = {**cache, "k": new_k, "v": new_v, "length": length + 1}
+    return logits, new_cache
+
+
+def empty_cache(cfg: ArchConfig, batch: int, cache_len: int, *, length: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, cache_len, H, Dh), dtype),
+        "v": jnp.zeros((L, batch, cache_len, H, Dh), dtype),
+        "ck": jnp.zeros((L, batch, cfg.encoder_len, H, Dh), dtype),
+        "cv": jnp.zeros((L, batch, cfg.encoder_len, H, Dh), dtype),
+        "length": jnp.full((batch,), length, jnp.int32),
+    }

@@ -1,0 +1,37 @@
+"""Feed-forward variants: SwiGLU (LM standard) and biased MLP (whisper)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import activation, dense_init, split_keys
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(x, p, cfg: ArchConfig):
+    act = activation(cfg.act)
+    return (act(x @ p["wg"]) * (x @ p["wu"])) @ p["wo"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": dense_init(ks[1], (d_ff, d_model), dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp(x, p, cfg: ArchConfig):
+    act = activation(cfg.act)
+    return act(x @ p["wi"] + p["bi"]) @ p["wo"] + p["bo"]

@@ -1,0 +1,106 @@
+"""Blockwise (flash-style) attention in pure JAX for train/prefill paths.
+
+Materializing (T, S) score matrices at 32k context is ~4 GB per (head,
+example); this module computes attention with online softmax over KV blocks
+inside a lax.scan so peak memory is O(q_block * kv_block) per head.  GQA
+aware; supports causal masking, sliding windows (gemma3/hymba local layers),
+and a per-layer "is_global" switch so a scanned layer stack can mix local
+and global layers without retracing.
+
+Block sizes are exposed as knobs — they are §Perf hillclimb parameters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "scale"),
+)
+def flash_attention(
+    q: jnp.ndarray,                 # (B, T, Hq, D)
+    k: jnp.ndarray,                 # (B, S, Hkv, D)
+    v: jnp.ndarray,                 # (B, S, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,      # sliding window width (None = full)
+    is_global: jnp.ndarray | None = None,  # scalar bool: overrides window
+    q_offset: int | jnp.ndarray = 0,  # absolute position of q[0] (prefill chunks)
+    q_block: int = 256,
+    kv_block: int = 512,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # may differ from D (MLA: qk 96, v 64)
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qb = min(q_block, T)
+    kb = min(kv_block, S)
+    Tp = ((T + qb - 1) // qb) * qb
+    Sp = ((S + kb - 1) // kb) * kb
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+
+    nq, nk = Tp // qb, Sp // kb
+    qr = (q.astype(jnp.float32) * scale).reshape(B, nq, qb, Hkv, G, D)
+    kr = k.astype(jnp.float32).reshape(B, nk, kb, Hkv, D)
+    vr = v.astype(jnp.float32).reshape(B, nk, kb, Hkv, Dv)
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    # both scan bodies are rematerialized in backward: without this, the
+    # kv scan saves per-step probability tensors and the q scan stacks
+    # them across blocks — O(T*S) memory, exactly what flash avoids.
+    @jax.checkpoint
+    def q_step(_, qi):
+        q_i = qr[:, qi]                                   # (B, qb, Hkv, G, D)
+        q_pos = q_pos_base + qi * qb + jnp.arange(qb)     # (qb,)
+
+        @jax.checkpoint
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_j = kr[:, kj]                               # (B, kb, Hkv, D)
+            v_j = vr[:, kj]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j)  # (B,Hkv,G,qb,kb)
+            kv_pos = kj * kb + jnp.arange(kb)             # (kb,)
+            mask = jnp.ones((qb, kb), bool)
+            mask &= (kv_pos[None, :] < S)                 # padding
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                in_win = kv_pos[None, :] > (q_pos[:, None] - window)
+                if is_global is not None:
+                    in_win = in_win | is_global
+                mask &= in_win
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_j)
+            acc_new = corr[..., None] * acc + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)      # (B,Hkv,G,qb,D)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))   # (nq,B,Hkv,G,qb,D)
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(B, Tp, Hq, Dv)
+    return out[:, :T].astype(q.dtype)

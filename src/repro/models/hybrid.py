@@ -1,0 +1,58 @@
+"""Hymba-style hybrid mixer: parallel attention + mamba heads in one layer.
+
+Both branches read the same (pre-normed) hidden states; their outputs are
+magnitude-normalized (RMSNorm each) and averaged (arXiv:2411.13676 fuses
+parallel heads with normalized mean).  Sliding-window attention everywhere
+except the configured global layers; meta tokens are handled by the
+transformer wrapper (prepended learned tokens).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import rms_norm, split_keys
+from repro.models import attention as A
+from repro.models import ssm as S
+
+
+def init_hybrid(key, cfg: ArchConfig, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "attn": A.init_gqa(ks[0], cfg, dtype),
+        "ssm": S.init_ssm(ks[1], cfg, dtype),
+        "attn_out_norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm_out_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def hybrid_seq(x, p, cfg: ArchConfig, *, is_global=None, positions=None,
+               return_state=False):
+    if return_state:
+        ya, (k, v) = A.gqa_seq(x, p["attn"], cfg, is_global=is_global,
+                               positions=positions, return_kv=True)
+        ys, ssm_state, conv_state = S.ssm_seq(x, p["ssm"], cfg, return_state=True)
+    else:
+        ya = A.gqa_seq(x, p["attn"], cfg, is_global=is_global, positions=positions)
+        ys = S.ssm_seq(x, p["ssm"], cfg)
+    y = 0.5 * (
+        rms_norm(ya, p["attn_out_norm"], cfg.norm_eps)
+        + rms_norm(ys, p["ssm_out_norm"], cfg.norm_eps)
+    )
+    if return_state:
+        return y, (k, v), (conv_state, ssm_state)
+    return y
+
+
+def hybrid_decode(x_t, p, cfg: ArchConfig, k_cache, v_cache, length,
+                  conv_state, ssm_state, *, is_global=None):
+    ya, k_cache, v_cache = A.gqa_decode(
+        x_t, p["attn"], cfg, k_cache, v_cache, length, is_global=is_global
+    )
+    ys, conv_state, ssm_state = S.ssm_decode(x_t, p["ssm"], cfg, conv_state, ssm_state)
+    y = 0.5 * (
+        rms_norm(ya, p["attn_out_norm"], cfg.norm_eps)
+        + rms_norm(ys, p["ssm_out_norm"], cfg.norm_eps)
+    )
+    return y, k_cache, v_cache, conv_state, ssm_state

@@ -1,0 +1,55 @@
+"""Public model facade: family dispatch for init / loss / prefill / decode."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+from repro.models import encdec as ED
+
+
+def init_params(cfg: ArchConfig, key) -> dict[str, Any]:
+    if cfg.family == "encdec":
+        return ED.init_params(cfg, key)
+    return TF.init_params(cfg, key)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = False):
+    if cfg.family == "encdec":
+        return ED.loss_fn(params, cfg, batch)
+    return TF.loss_fn(params, cfg, batch, remat=remat)
+
+
+def prefill(params, cfg: ArchConfig, batch, *, cache_len: int, remat: bool = False):
+    if cfg.family == "encdec":
+        return ED.prefill(params, cfg, batch, cache_len=cache_len)
+    return TF.prefill(params, cfg, batch, cache_len=cache_len, remat=remat)
+
+
+def decode_step(params, cfg: ArchConfig, tokens_t, cache):
+    if cfg.family == "encdec":
+        return ED.decode_step(params, cfg, tokens_t, cache)
+    return TF.decode_step(params, cfg, tokens_t, cache)
+
+
+def empty_cache(cfg: ArchConfig, batch: int, cache_len: int, *, length: int = 0):
+    if cfg.family == "encdec":
+        return ED.empty_cache(cfg, batch, cache_len, length=length)
+    return TF.empty_cache(cfg, batch, cache_len, length=length)
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def param_bytes(params) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)))
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))

@@ -1,0 +1,142 @@
+"""Mixture-of-experts layer: shared + routed experts, top-k dispatch.
+
+The token -> expert dispatch *is* key-based routing (DESIGN.md §4): the
+router argmax is the key, experts are the storage nodes, and capacity-
+bounded dispatch mirrors the bounded switch queues of the TurboKV data
+plane (overflowing tokens are dropped exactly like bucket overflow in
+``core.dist_store`` — they keep the shared-expert path).
+
+Two dispatch modes:
+  * ``gather``  (default) — sort-free ranking (the same group-position
+    trick as ``dist_store.bucketize``), then token gathers/scatters of
+    (E, C, D) expert batches.  No (T, E, C) one-hot is materialized, so
+    memory stays O(E*C*D); shardable on the expert axis.
+  * ``einsum``  — classic Switch-style one-hot dispatch; only sane for
+    smoke-test sizes, kept as the readable oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import activation, dense_init, split_keys
+from repro.models.ffn import init_swiglu, swiglu
+from repro.distributed.constraints import constrain
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype, scale=0.02),
+        "wg": dense_init(ks[1], (E, D, F), dtype),
+        "wu": dense_init(ks[2], (E, D, F), dtype),
+        "wo": dense_init(ks[3], (E, F, D), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_swiglu(ks[4], D, F * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _capacity(T: int, cfg: ArchConfig) -> int:
+    c = int(T * cfg.top_k / cfg.n_experts * cfg.moe_capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)  # sublane-aligned
+
+
+def moe_layer(x, p, cfg: ArchConfig, *, dispatch: str = "gather"):
+    """x (B, T, D) -> (y (B, T, D), aux) where aux carries the load-balance
+    loss term and drop statistics."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(B * T, D)
+    N = B * T
+    C = _capacity(N, cfg)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, K)            # (N, K)
+    if cfg.router_softmax_after_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[topk_idx.reshape(-1)].add(1.0) / (N * K)
+    aux_loss = E * jnp.sum(me * ce)
+
+    if dispatch == "einsum":
+        y, dropped = _dispatch_einsum(xf, p, cfg, topk_idx, gate_vals, C)
+    else:
+        y, dropped = _dispatch_gather(xf, p, cfg, topk_idx, gate_vals, C)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(xf, p["shared"], cfg)
+
+    aux = {"moe_aux_loss": aux_loss, "moe_dropped": dropped}
+    return y.reshape(B, T, D), aux
+
+
+def _expert_ffn(p, cfg: ArchConfig, xe):
+    """xe (E, C, D) -> (E, C, D), batched over the expert axis."""
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wu"]
+    )
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def _dispatch_gather(xf, p, cfg: ArchConfig, topk_idx, gate_vals, C):
+    N, D = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    flat_e = topk_idx.reshape(N * K)                          # (NK,)
+    flat_g = gate_vals.reshape(N * K)
+    token_of = jnp.arange(N * K, dtype=jnp.int32) // K
+
+    # position of each assignment within its expert queue (stable by token)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E + 1))
+    pos_sorted = jnp.arange(N * K) - group_start[jnp.minimum(sorted_e, E)]
+    keep = pos_sorted < C
+    slot_sorted = jnp.where(keep, sorted_e * C + pos_sorted, E * C)  # OOB drops
+    dropped = jnp.sum(~keep)
+
+    # token index per (expert, slot); padding slots point at row N (zeros)
+    token_sorted = token_of[order]
+    tos = jnp.full((E * C,), N, jnp.int32).at[slot_sorted].set(token_sorted, mode="drop")
+    gos = jnp.zeros((E * C,), jnp.float32).at[slot_sorted].set(flat_g[order], mode="drop")
+
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = constrain(x_pad[tos].reshape(E, C, D), "moe_expert")
+    ye = constrain(_expert_ffn(p, cfg, xe), "moe_expert").reshape(E * C, D)
+
+    y = jnp.zeros((N + 1, D), xf.dtype).at[tos].add(
+        (ye * gos[:, None]).astype(xf.dtype)
+    )
+    return y[:N], dropped
+
+
+def _dispatch_einsum(xf, p, cfg: ArchConfig, topk_idx, gate_vals, C):
+    """Readable Switch-style oracle (materializes (N, E, C) one-hots)."""
+    N, D = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)   # (N, K, E)
+    # position within expert queue, in token order, accounting all K slots
+    flat = onehot.reshape(N * K, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                     # (NK, E)
+    pos_of = jnp.sum(pos * flat, axis=-1).reshape(N, K)       # (N, K)
+    keep = pos_of < C
+    dropped = jnp.sum(~keep)
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos_of, C), C, dtype=jnp.float32)
+    disp = jnp.einsum("nke,nkc->nec", onehot * keep[..., None], slot_oh)
+    comb = jnp.einsum("nec,nk,nke->nec", disp, gate_vals, onehot)
+
+    xe = jnp.einsum("nec,nd->ecd", disp, xf.astype(jnp.float32)).astype(xf.dtype)
+    ye = _expert_ffn(p, cfg, xe)
+    y = jnp.einsum("nec,ecd->nd", comb, ye.astype(jnp.float32)).astype(xf.dtype)
+    return y, dropped

@@ -1,0 +1,120 @@
+"""Mamba-2 (SSD) mixer block: conv -> SSD scan -> gated norm -> out proj.
+
+Sequence path uses the chunked SSD math (``kernels.ssd_chunk.ref`` —
+differentiable jnp; the Pallas kernel is its serving/bench twin).  Decode
+path carries (conv_state, ssm_state) and costs O(H*P*N) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import rms_norm, dense_init, split_keys
+from repro.kernels.ssd_chunk.ops import ssd_scan, ssd_decode_step
+
+
+def _dims(cfg: ArchConfig):
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state, cfg.ssm_groups
+    d_inner = H * P
+    conv_ch = d_inner + 2 * G * N
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    return H, P, N, G, d_inner, conv_ch, d_in_proj
+
+
+def init_ssm(key, cfg: ArchConfig, dtype):
+    H, P, N, G, d_inner, conv_ch, d_in_proj = _dims(cfg)
+    D = cfg.d_model
+    ks = split_keys(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (D, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, conv_ch), dtype, scale=0.2),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[3], (d_inner, D), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    H, P, N, G, d_inner, conv_ch, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, width d_conv, via shifted adds (w (K, C))."""
+    K = w.shape[0]
+    out = xBC * w[-1]
+    for i in range(1, K):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, : xBC.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def ssm_seq(x, p, cfg: ArchConfig, *, return_state=False, init_state=None):
+    """Full-sequence SSD mixer.  x (B, T, D) -> (B, T, D)."""
+    B, T, D = x.shape
+    H, P, N, G, d_inner, conv_ch, _ = _dims(cfg)
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC_pre, dt = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :d_inner].reshape(B, T, H, P)
+    Bm = xBC[..., d_inner : d_inner + G * N].reshape(B, T, G, N)
+    Cm = xBC[..., d_inner + G * N :].reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+    y, fstate = ssd_scan(
+        xs.astype(jnp.float32), dt, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        init_state, chunk=min(cfg.ssm_chunk, max(8, T)), use_pallas=False,
+    )
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        # decode conv state = last (d_conv - 1) *pre-conv* xBC rows
+        pad = max(0, (cfg.d_conv - 1) - T)
+        tail = xBC_pre[:, -(cfg.d_conv - 1) :, :]
+        if pad:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, fstate, tail
+    return out
+
+
+def ssm_decode(x_t, p, cfg: ArchConfig, conv_state, ssm_state):
+    """One-token decode.  x_t (B,1,D); conv_state (B, d_conv-1, conv_ch);
+    ssm_state (B, H, P, N)."""
+    B = x_t.shape[0]
+    H, P, N, G, d_inner, conv_ch, _ = _dims(cfg)
+
+    zxbcdt = x_t @ p["in_proj"]
+    z, xBC_t, dt = _split_proj(zxbcdt, cfg)                  # (B,1,*)
+    # causal conv over [conv_state ; xBC_t]
+    window = jnp.concatenate([conv_state, xBC_t], axis=1)    # (B, d_conv, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)                              # (B, C)
+    new_conv_state = window[:, 1:]
+
+    xs = xBC[:, :d_inner].reshape(B, H, P)
+    Bm = xBC[:, d_inner : d_inner + G * N].reshape(B, G, N)[:, 0]
+    Cm = xBC[:, d_inner + G * N :].reshape(B, G, N)[:, 0]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, new_ssm = ssd_decode_step(xs.astype(jnp.float32), dt1, A, Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), ssm_state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_conv_state, new_ssm

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine, Request
+from repro.serving.router import SequenceRouter

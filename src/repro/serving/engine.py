@@ -1,0 +1,177 @@
+"""Continuous-batching serving engine over the TurboKV-routed cache.
+
+Slot-based continuous batching: a fixed decode batch of ``n_slots`` cache
+slots; finished requests free their slot, waiting requests are prefilled
+into free slots.  Every slot belongs to a *logical storage shard* (the
+TurboKV storage-node axis): the :class:`~repro.serving.router.SequenceRouter`
+assigns each request a shard by hashed request id; the controller can
+migrate slots between shards (load balancing) or fail a shard over to its
+chain replica — both exercised by tests/examples on CPU with reduced
+configs, and structurally identical to the multi-device layout where the
+shard axis is the ``"data"`` mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.keys import hash_key
+from repro.models import model as MODEL
+from repro.serving.router import SequenceRouter
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    shard: int | None = None
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 8,
+                 cache_len: int = 256, n_shards: int = 4, eos_token: int = -1,
+                 greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.eos = eos_token
+        self.greedy = greedy
+        self.rng = np.random.default_rng(seed)
+        self.router = SequenceRouter.create(n_shards)
+        self.cache = MODEL.empty_cache(cfg, n_slots, cache_len)
+        self.slot_shard = np.full((n_slots,), -1, np.int32)
+        self.free = list(range(n_slots))
+        self.active: dict[int, Request] = {}
+        self.waiting: list[Request] = []
+        self.finished: dict[int, Request] = {}
+        self._next_id = 0
+
+        self._prefill = jax.jit(
+            lambda p, batch: MODEL.prefill(p, cfg, batch, cache_len=cache_len)
+        )
+        self._decode = jax.jit(lambda p, t, c: MODEL.decode_step(p, cfg, t, c))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.waiting.append(Request(rid, np.asarray(prompt, np.int32), max_new_tokens))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        """Prefill waiting requests into free slots (one at a time keeps the
+        prefill shape static for the jit cache)."""
+        while self.free and self.waiting:
+            req = self.waiting.pop(0)
+            slot = self.free.pop(0)
+            shard, _chain = self.router.route(np.array([req.req_id]), writes=True)
+            req.slot, req.shard = slot, int(shard[0])
+            self.slot_shard[slot] = req.shard
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            logits, cache1 = self._prefill(self.params, batch)
+            self._write_slot(slot, cache1)
+            tok = self._pick(np.asarray(logits)[0])
+            req.out_tokens.append(tok)
+            self.active[req.req_id] = req
+
+    def _write_slot(self, slot: int, cache1):
+        """Copy a batch-1 cache into slot `slot` of the engine cache."""
+        def put(dst, src):
+            if dst.ndim == 1:                      # length (B,)
+                return dst.at[slot].set(src[0])
+            # (L, B, ...) or (B, ...): find the batch axis (size n_slots)
+            if dst.shape[0] == self.n_slots:
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0])
+
+        self.cache = jax.tree.map(put, self.cache, cache1)
+
+    def _pick(self, logits: np.ndarray) -> int:
+        logits = logits[: self.cfg.vocab_size]  # drop padded-vocab tail
+        if self.greedy:
+            return int(logits.argmax())
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration: admit + one decode step for all active."""
+        self._admit()
+        if not self.active:
+            return
+        tokens = np.zeros((self.n_slots,), np.int32)
+        for req in self.active.values():
+            tokens[req.slot] = req.out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache
+        )
+        logits = np.asarray(logits)
+        for rid in list(self.active):
+            req = self.active[rid]
+            tok = self._pick(logits[req.slot])
+            req.out_tokens.append(tok)
+            if len(req.out_tokens) >= req.max_new_tokens or tok == self.eos:
+                req.done = True
+                self.free.append(req.slot)
+                self.slot_shard[req.slot] = -1
+                self.finished[rid] = req
+                del self.active[rid]
+
+    def run(self, max_steps: int = 256):
+        steps = 0
+        while (self.active or self.waiting) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def shard_load(self) -> np.ndarray:
+        """Active slots per shard (controller input)."""
+        n = self.router.directory.num_nodes
+        load = np.zeros((n,), np.int64)
+        for req in self.active.values():
+            load[req.shard] += 1
+        return load
+
+    def rebalance(self):
+        """Paper §5.1: migrate active sequences off overloaded shards.
+
+        Migration of a sequence = reassigning its slot's shard (on a real
+        mesh: copying its cache rows across the data axis — same array op
+        as core.migration, exercised there)."""
+        ops, report = self.router.rebalance()
+        moved = 0
+        for op in ops:
+            for req in self.active.values():
+                h = int(np.asarray(hash_key(jnp.uint32(req.req_id))))
+                if req.shard == op.src and op.lo <= h <= op.hi:
+                    req.shard = op.dst
+                    self.slot_shard[req.slot] = op.dst
+                    moved += 1
+        return moved, ops
+
+    def fail_shard(self, shard: int):
+        """Paper §5.2: shard failure — active sequences on it fail over to
+        their chain replica (cache is chain-replicated by the router)."""
+        self.router.fail_shard(shard)
+        moved = []
+        for req in self.active.values():
+            if req.shard == shard:
+                new_shard, _ = self.router.route(np.array([req.req_id]))
+                req.shard = int(new_shard[0])
+                self.slot_shard[req.slot] = req.shard
+                moved.append(req.req_id)
+        return moved

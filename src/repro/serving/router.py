@@ -1,0 +1,72 @@
+"""Request/cache routing for serving — TurboKV in its natural habitat.
+
+Each request's KV-cache lives on a storage shard chosen by the directory
+(hash of the request id -> sub-range -> replica chain); decode batches are
+grouped per shard ("cache-affinity routing"), and the controller migrates
+hot sequences off overloaded shards using the data-plane counters — the
+paper's load-balancing loop (§5.1) applied to LLM serving state.
+
+The hot lookup path runs the Pallas ``range_match`` kernel (the paper's
+match-action data plane); the jnp oracle is the fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import directory as D
+from repro.core import keys as K
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.stats import pull_report
+from repro.kernels.range_match.ops import range_match
+
+
+@dataclasses.dataclass
+class SequenceRouter:
+    directory: D.Directory
+    use_pallas: bool = True
+    period: int = 0
+
+    @classmethod
+    def create(cls, n_shards: int, *, n_ranges: int | None = None,
+               replication: int = 2, use_pallas: bool = True):
+        n_ranges = n_ranges or max(16, 8 * n_shards)
+        directory = D.make_directory(
+            n_ranges, n_shards, replication, hash_partitioned=True
+        )
+        return cls(directory=directory, use_pallas=use_pallas)
+
+    def route(self, req_ids: np.ndarray, *, writes: bool = False):
+        """req_ids (B,) -> (shard (B,), chain (B, r)).  Reads route to the
+        chain tail, writes (cache appends/migrations) to the head."""
+        mval = jnp.asarray(req_ids, jnp.uint32)
+        ops = jnp.full((mval.shape[0],), K.OP_PUT if writes else K.OP_GET, jnp.int32)
+        ridx, target, chain = range_match(
+            self.directory, mval, ops, use_pallas=self.use_pallas
+        )
+        # bump the statistics registers (the switch would do this inline)
+        self.directory = D.bump_counters(
+            self.directory, ridx, jnp.full(ridx.shape, writes)
+        )
+        return np.asarray(target), np.asarray(chain.T)
+
+    def rebalance(self, controller_cfg: ControllerConfig | None = None):
+        """Run the paper's §5.1 loop: pull counters -> greedy migration.
+
+        Returns the migration ops (sequences to move between shards)."""
+        report, self.directory = pull_report(self.directory, self.period)
+        self.period += 1
+        ctl = Controller(self.directory, controller_cfg)
+        ops = ctl.balance(report)
+        self.directory = ctl.directory()
+        return ops, report
+
+    def fail_shard(self, shard: int):
+        """Splice a dead shard out of every chain (paper §5.2)."""
+        ctl = Controller(self.directory)
+        ops = ctl.handle_node_failure(shard)
+        self.directory = ctl.directory()
+        return ops

@@ -1,0 +1,3 @@
+from repro.training.optimizer import OptConfig, opt_init, opt_update, schedule
+from repro.training.step import TrainConfig, make_train_step, make_dp_train_step, init_train_state, abstract_train_state
+from repro.training import checkpoint, elastic

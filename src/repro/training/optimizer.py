@@ -1,0 +1,176 @@
+"""Optimizers (AdamW, Adafactor) + LR schedules, from scratch (no optax).
+
+Optimizer state dtype is configurable per arch (``ArchConfig.opt_state_dtype``)
+— the 400B MoE runs bf16 m/v so params+state fit one pod (DESIGN.md §5).
+ZeRO-style partitioning is a *sharding* concern: see
+``distributed.sharding.opt_state_specs`` which spreads m/v over the data
+axis; the math here is sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt_state, cfg: OptConfig):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(gf)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — O(n+m) state for (n, m) matrices)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+
+    def zeros(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], dt),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt),
+            }
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {
+        "f": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, opt_state, cfg: OptConfig):
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, f):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + 1e-30
+        if p.ndim >= 2:
+            vr = decay * f["vr"].astype(jnp.float32) + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * f["vc"].astype(jnp.float32) + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30
+                )
+            )
+            update = gf / jnp.maximum(denom, 1e-30)
+            newf = {"vr": vr.astype(f["vr"].dtype), "vc": vc.astype(f["vc"].dtype)}
+        else:
+            v = decay * f["v"].astype(jnp.float32) + (1 - decay) * g2
+            update = gf / jnp.sqrt(jnp.maximum(v, 1e-30))
+            newf = {"v": v.astype(f["v"].dtype)}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), newf
+
+    leaves, treedef = jax.tree.flatten(params)
+    gleaves = treedef.flatten_up_to(grads)
+    fleaves = treedef.flatten_up_to(opt_state["f"])
+    new_p, new_f = [], []
+    for p, g, f in zip(leaves, gleaves, fleaves):
+        pn, fn = upd(p, g, f)
+        new_p.append(pn)
+        new_f.append(fn)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {"f": jax.tree.unflatten(treedef, new_f), "step": step},
+        {"lr": lr, "grad_norm": gnorm},
+    )
+
+
+def opt_init(params, cfg: OptConfig, state_dtype: str = "float32"):
+    if cfg.name == "adafactor":
+        return adafactor_init(params, state_dtype)
+    return adamw_init(params, state_dtype)
+
+
+def opt_update(params, grads, opt_state, cfg: OptConfig):
+    if cfg.name == "adafactor":
+        return adafactor_update(params, grads, opt_state, cfg)
+    return adamw_update(params, grads, opt_state, cfg)

@@ -1,0 +1,164 @@
+"""Multi-device integration tests (8 forced host devices, subprocess).
+
+jax pins the device count at first init, so these run in subprocesses with
+XLA_FLAGS set; each subprocess asserts internally and exits nonzero on
+failure.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+       "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+
+
+def run_sub(code: str):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=ENV, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_dist_store_matches_oracle():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import core as C
+
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        d = C.make_directory(16, 8, 3)
+        store = C.make_store(8, 64, 4)
+        rng = np.random.default_rng(0)
+        B = 64
+        keys = jnp.asarray(rng.integers(0, 2**32-2, B), jnp.uint32)
+        vals = jnp.asarray(rng.normal(size=(B,4)), jnp.float32)
+        qput = C.make_queries(keys, jnp.full((B,), C.OP_PUT), vals)
+        qget = C.make_queries(keys, jnp.full((B,), C.OP_GET), value_dim=4)
+        for strat in ("allgather", "bucket_a2a"):
+            apply_fn = C.make_dist_apply(mesh, d, C.DistConfig(strategy=strat, bucket_cap=32))
+            s1, _, d1, _ = apply_fn(store, d, qput)
+            s2, resp, d2, m = apply_fn(s1, d1, qget)
+            assert bool(resp.found.all()), strat
+            assert bool(jnp.allclose(resp.value, vals, atol=1e-6)), strat
+            dec, dd = C.route(d, qput)
+            so, _ = C.apply_routed(store, qput, dec)
+            assert jnp.array_equal(jnp.sort(s1.keys, axis=1), jnp.sort(so.keys, axis=1)), strat
+            assert (np.asarray(d1.write_count) == np.asarray(dd.write_count)).all(), strat
+        print("ok")
+    """)
+
+
+def test_dist_store_bucket_overflow_counted():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import core as C
+
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        d = C.make_directory(16, 8, 1)
+        store = C.make_store(8, 256, 1)
+        # aim every query at one key -> one target shard; cap tiny -> overflow
+        B = 64
+        keys = jnp.full((B,), 123, jnp.uint32)
+        q = C.make_queries(keys, jnp.full((B,), C.OP_GET), value_dim=1)
+        apply_fn = C.make_dist_apply(mesh, d, C.DistConfig(strategy="bucket_a2a", bucket_cap=2))
+        _, resp, _, m = apply_fn(store, d, q)
+        assert int(jnp.sum(m["bucket_overflow"])) > 0
+        print("ok")
+    """)
+
+
+def test_compressed_dp_train_step():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import ShapeSpec
+        from repro.data.pipeline import make_batch, DataConfig
+        from repro.training.step import (TrainConfig, make_dp_train_step,
+                                         init_train_state, init_dp_error_feedback)
+        from repro.training.optimizer import OptConfig
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=40),
+                           remat=False, grad_compression=True, dp_axes=("data",))
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        state.pop("err")
+        err = init_dp_error_feedback(cfg, state["params"], 8)
+        shape = ShapeSpec("tiny", 32, 16, "train")
+        batch0 = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape, 0, DataConfig("copy")).items()}
+        step = make_dp_train_step(cfg, tcfg, mesh, batch0)
+        losses = []
+        for i in range(8):
+            b = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape, i, DataConfig("copy")).items()}
+            state, err, m = step(state, err, b)
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0], losses
+        print("ok", losses[0], losses[-1])
+    """)
+
+
+def test_sharded_train_step_lowers_on_2x4():
+    run_sub("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import ShapeSpec
+        from repro.distributed import sharding as SH
+        from repro.training.step import TrainConfig, make_train_step, abstract_train_state
+        from repro.training.optimizer import OptConfig
+        from repro.launch.input_specs import batch_specs_for
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        tcfg = TrainConfig(opt=OptConfig(), remat=True, microbatches=2)
+        state = abstract_train_state(cfg, tcfg)
+        shape = ShapeSpec("tiny", 64, 8, "train")
+        batch = batch_specs_for(cfg, shape, with_labels=True)
+        ssp = SH.state_specs(state, mesh, dp_axes=("data",))
+        bsp = SH.batch_specs(batch, ("data",))
+        step = make_train_step(cfg, tcfg)
+        j = jax.jit(step, in_shardings=(SH.to_named(ssp, mesh), SH.to_named(bsp, mesh)),
+                    out_shardings=(SH.to_named(ssp, mesh), None))
+        c = j.lower(state, batch).compile()
+        assert c.memory_analysis().temp_size_in_bytes > 0
+        print("ok")
+    """)
+
+
+def test_real_sharded_execution_matches_single_device():
+    """Numerically execute a sharded step on 8 devices vs 1 device."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import ShapeSpec
+        from repro.data.pipeline import make_batch, DataConfig
+        from repro.distributed import sharding as SH
+        from repro.training.step import TrainConfig, make_train_step, init_train_state
+        from repro.training.optimizer import OptConfig
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=10), remat=False)
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        shape = ShapeSpec("tiny", 32, 8, "train")
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape, 0, DataConfig("copy")).items()}
+        step = make_train_step(cfg, tcfg)
+
+        # single-device reference
+        s_ref, m_ref = jax.jit(step)(state, batch)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        ssp = SH.state_specs(jax.eval_shape(lambda: state), mesh, dp_axes=("data",))
+        bsp = SH.batch_specs(jax.eval_shape(lambda: batch), ("data",))
+        j = jax.jit(step, in_shardings=(SH.to_named(ssp, mesh), SH.to_named(bsp, mesh)))
+        s_sh, m_sh = j(state, batch)
+        assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-3
+        for a, b in zip(jax.tree.leaves(s_ref["params"]), jax.tree.leaves(s_sh["params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                       atol=2e-3)
+        print("ok")
+    """)

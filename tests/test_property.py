@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core as C
+from repro.core import keys as K
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+key_arrays = st.lists(
+    st.integers(min_value=0, max_value=2**32 - 3), min_size=1, max_size=48, unique=True
+)
+
+
+@settings(**SETTINGS)
+@given(keys=key_arrays, n_ranges=st.sampled_from([4, 16, 64]),
+       n_nodes=st.sampled_from([2, 5, 8]), r=st.integers(1, 2))
+def test_routing_target_in_chain(keys, n_ranges, n_nodes, r):
+    """The routed target is always a live member of the matched chain, and
+    head/tail selection follows the opcode."""
+    d = C.make_directory(n_ranges, n_nodes, r)
+    ka = jnp.asarray(keys, jnp.uint32)
+    for op in (C.OP_GET, C.OP_PUT):
+        q = C.make_queries(ka, jnp.full((len(keys),), op))
+        dec, _ = C.route(d, q)
+        chains = np.asarray(dec.chain)
+        targets = np.asarray(dec.target)
+        clen = np.asarray(dec.chain_len)
+        for i in range(len(keys)):
+            assert targets[i] in chains[i][: clen[i]]
+            if op == C.OP_PUT:
+                assert targets[i] == chains[i][0]
+            else:
+                assert targets[i] == chains[i][clen[i] - 1]
+
+
+@settings(**SETTINGS)
+@given(keys=key_arrays)
+def test_lookup_matches_numpy_searchsorted(keys):
+    d = C.make_directory(32, 4, 2)
+    ridx = np.asarray(C.lookup_range(d, jnp.asarray(keys, jnp.uint32)))
+    bounds = np.asarray(d.bounds)
+    expect = np.searchsorted(bounds[1:-1], np.asarray(keys, np.uint32), side="right")
+    np.testing.assert_array_equal(ridx, expect)
+    assert (ridx >= 0).all() and (ridx < 32).all()
+
+
+@settings(**SETTINGS)
+@given(keys=key_arrays, seed=st.integers(0, 1000))
+def test_get_after_put(keys, seed):
+    rng = np.random.default_rng(seed)
+    d = C.make_directory(16, 4, 2)
+    store = C.make_store(4, capacity=128, value_dim=2)
+    vals = jnp.asarray(rng.normal(size=(len(keys), 2)), jnp.float32)
+    ka = jnp.asarray(keys, jnp.uint32)
+
+    q = C.make_queries(ka, jnp.full((len(keys),), C.OP_PUT), vals)
+    dec, d = C.route(d, q)
+    store, _ = C.apply_routed(store, q, dec)
+
+    qg = C.make_queries(ka, jnp.full((len(keys),), C.OP_GET), value_dim=2)
+    dec2, d = C.route(d, qg)
+    _, resp = C.apply_routed(store, qg, dec2)
+    assert bool(resp.found.all())
+    np.testing.assert_allclose(np.asarray(resp.value), np.asarray(vals), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(keys=key_arrays)
+def test_slab_sorted_invariant(keys):
+    """After any batch, every shard's slab stays sorted with EMPTY suffix."""
+    d = C.make_directory(16, 4, 2)
+    store = C.make_store(4, capacity=64, value_dim=1)
+    ka = jnp.asarray(keys, jnp.uint32)
+    q = C.make_queries(ka, jnp.full((len(keys),), C.OP_PUT),
+                       jnp.ones((len(keys), 1), jnp.float32))
+    dec, d = C.route(d, q)
+    store, _ = C.apply_routed(store, q, dec)
+    # delete half
+    qd = C.make_queries(ka[::2], jnp.full((len(keys[::2]),), C.OP_DEL), value_dim=1)
+    dec2, d = C.route(d, qd)
+    store, _ = C.apply_routed(store, qd, dec2)
+    sk = np.asarray(store.keys)
+    for shard in sk:
+        live = shard[shard != np.uint32(0xFFFFFFFF)]
+        empt = shard[len(live):]
+        assert (empt == np.uint32(0xFFFFFFFF)).all()
+        assert (np.diff(live.astype(np.int64)) > 0).all()
+
+
+@settings(**SETTINGS)
+@given(x=st.integers(0, 2**32 - 1))
+def test_hash_deterministic_and_avalanche(x):
+    h1 = int(np.asarray(K.hash_key(jnp.uint32(x))))
+    h2 = int(np.asarray(K.hash_key(jnp.uint32(x))))
+    assert h1 == h2
+    # flipping one bit flips a good fraction of output bits on average
+    h3 = int(np.asarray(K.hash_key(jnp.uint32(x ^ 1))))
+    if x != x ^ 1:
+        assert h1 != h3
+
+
+@settings(**SETTINGS)
+@given(n_ops=st.integers(8, 200), seed=st.integers(0, 99))
+def test_counter_conservation(n_ops, seed):
+    """Total counter mass equals the number of routed queries."""
+    rng = np.random.default_rng(seed)
+    d = C.make_directory(16, 4, 2)
+    keys = jnp.asarray(rng.integers(0, 2**32 - 2, n_ops), jnp.uint32)
+    ops = jnp.asarray(rng.integers(0, 2, n_ops), jnp.int32)
+    q = C.make_queries(keys, ops)
+    _, d = C.route(d, q)
+    assert int(d.read_count.sum() + d.write_count.sum()) == n_ops
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 99), fail_node=st.integers(0, 5))
+def test_failure_splice_no_dead_node(seed, fail_node):
+    """After a failure, no live chain references the dead node and every
+    chain keeps replication (restored via repair copies)."""
+    d = C.make_directory(24, 6, 3)
+    ctl = C.Controller(d)
+    ops = ctl.handle_node_failure(fail_node, np.zeros(6))
+    d2 = ctl.directory()
+    chains = np.asarray(d2.chains)
+    clen = np.asarray(d2.chain_len)
+    for i in range(24):
+        live = chains[i][: clen[i]]
+        assert fail_node not in live
+        assert clen[i] == 3  # replication restored
+        assert len(set(live.tolist())) == clen[i]  # distinct replicas
+    # repair ops copy from a survivor, never from the dead node
+    for op in ops:
+        assert op.src != fail_node and op.dst != fail_node
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 99))
+def test_migration_preserves_data(seed):
+    """Move a whole range between nodes: no key is lost or duplicated."""
+    rng = np.random.default_rng(seed)
+    d = C.make_directory(8, 4, 1)  # r=1: each key on exactly one shard
+    store = C.make_store(4, 64, 1)
+    keys = jnp.asarray(rng.choice(2**32 - 2, 20, replace=False), jnp.uint32)
+    q = C.make_queries(keys, jnp.full((20,), C.OP_PUT), jnp.ones((20, 1), jnp.float32))
+    dec, d = C.route(d, q)
+    store, _ = C.apply_routed(store, q, dec)
+    total0 = int(np.asarray(C.store_fill(store)).sum())
+
+    op = C.MigrationOp(lo=0, hi=int(K.MAX_KEY) // 2, src=0, dst=2, kind="move")
+    store2 = C.execute_migrations(store, [op])
+    total1 = int(np.asarray(C.store_fill(store2)).sum())
+    assert total1 == total0
+    all0 = np.sort(np.asarray(store.keys).reshape(-1))
+    all1 = np.sort(np.asarray(store2.keys).reshape(-1))
+    np.testing.assert_array_equal(all0, all1)  # same multiset of keys

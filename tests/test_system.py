@@ -1,0 +1,201 @@
+"""End-to-end behaviour tests for the TurboKV core system."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as C
+from repro.core import keys as K
+
+
+@pytest.fixture
+def setup():
+    d = C.make_directory(num_ranges=32, num_nodes=8, replication=3)
+    store = C.make_store(num_shards=8, capacity=128, value_dim=4)
+    rng = np.random.default_rng(0)
+    return d, store, rng
+
+
+def _put(d, store, keys, vals):
+    q = C.make_queries(keys, jnp.full((len(keys),), C.OP_PUT), vals)
+    dec, d = C.route(d, q)
+    store, _ = C.apply_routed(store, q, dec)
+    return d, store
+
+
+def test_put_get_roundtrip(setup):
+    d, store, rng = setup
+    keys = jnp.asarray(rng.choice(2**32 - 2, 64, replace=False), jnp.uint32)
+    vals = jnp.asarray(rng.normal(size=(64, 4)), jnp.float32)
+    d, store = _put(d, store, keys, vals)
+
+    q = C.make_queries(keys, jnp.full((64,), C.OP_GET), value_dim=4)
+    dec, d = C.route(d, q)
+    _, resp = C.apply_routed(store, q, dec)
+    assert bool(resp.found.all())
+    np.testing.assert_allclose(np.asarray(resp.value), np.asarray(vals), atol=1e-6)
+
+
+def test_get_missing_not_found(setup):
+    d, store, rng = setup
+    q = C.make_queries(jnp.asarray([1, 2, 3], jnp.uint32), jnp.full((3,), C.OP_GET),
+                       value_dim=4)
+    dec, d = C.route(d, q)
+    _, resp = C.apply_routed(store, q, dec)
+    assert not bool(resp.found.any())
+
+
+def test_overwrite_last_wins(setup):
+    d, store, rng = setup
+    key = jnp.asarray([42, 42], jnp.uint32)
+    vals = jnp.asarray([[1.0] * 4, [2.0] * 4], jnp.float32)
+    d, store = _put(d, store, key, vals)
+    q = C.make_queries(key[:1], jnp.asarray([C.OP_GET]), value_dim=4)
+    dec, d = C.route(d, q)
+    _, resp = C.apply_routed(store, q, dec)
+    assert bool(resp.found[0])
+    np.testing.assert_allclose(np.asarray(resp.value[0]), [2.0] * 4)
+
+
+def test_delete_removes_everywhere(setup):
+    d, store, rng = setup
+    keys = jnp.asarray(rng.choice(2**32 - 2, 16, replace=False), jnp.uint32)
+    vals = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    d, store = _put(d, store, keys, vals)
+
+    q = C.make_queries(keys[:8], jnp.full((8,), C.OP_DEL), value_dim=4)
+    dec, d = C.route(d, q)
+    store, resp = C.apply_routed(store, q, dec)
+    assert bool(resp.found.all())  # deletes acknowledged
+
+    q2 = C.make_queries(keys, jnp.full((16,), C.OP_GET), value_dim=4)
+    dec2, d = C.route(d, q2)
+    _, resp2 = C.apply_routed(store, q2, dec2)
+    assert not bool(resp2.found[:8].any())
+    assert bool(resp2.found[8:].all())
+    # replication invariant: each remaining key on exactly r shards
+    fill = int(np.asarray(C.store_fill(store)).sum())
+    assert fill == 8 * 3
+
+
+def test_chain_replication_invariant(setup):
+    """Every key lands on every live member of its range's chain."""
+    d, store, rng = setup
+    keys = jnp.asarray(rng.choice(2**32 - 2, 32, replace=False), jnp.uint32)
+    vals = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+    d, store = _put(d, store, keys, vals)
+
+    chains = np.asarray(d.chains)
+    bounds = np.asarray(d.bounds)
+    skeys = np.asarray(store.keys)
+    for k in np.asarray(keys):
+        ridx = int(np.searchsorted(bounds[1:-1], k, side="right"))
+        for node in chains[ridx]:
+            assert k in skeys[node], (k, ridx, node)
+
+
+def test_scan_returns_range(setup):
+    d, store, rng = setup
+    base = np.uint32(1_000_000)
+    keys = jnp.asarray(base + np.arange(20) * 10, jnp.uint32)
+    vals = jnp.asarray(np.arange(20)[:, None] * np.ones((1, 4)), jnp.float32)
+    d, store = _put(d, store, keys, vals)
+
+    q = C.make_queries(
+        jnp.asarray([base], jnp.uint32), jnp.asarray([C.OP_SCAN]),
+        end_keys=jnp.asarray([base + 95], jnp.uint32), value_dim=4,
+    )
+    qe = C.expand_scans(d, q, max_scan_fanout=4)
+    dec, d = C.route(d, qe)
+    _, resp = C.apply_routed(store, qe, dec, max_scan_results=16)
+    got = np.asarray(resp.scan_keys).reshape(-1)
+    got = np.unique(got[got != np.uint32(0xFFFFFFFF)])
+    expect = np.asarray(keys)[np.asarray(keys) <= base + 95]
+    np.testing.assert_array_equal(np.sort(got), np.sort(expect))
+
+
+def test_scan_rejected_under_hash_partitioning():
+    d = C.make_directory(8, 4, 2, hash_partitioned=True)
+    q = C.make_queries(jnp.asarray([1], jnp.uint32), jnp.asarray([C.OP_SCAN]))
+    with pytest.raises(ValueError):
+        C.expand_scans(d, q, max_scan_fanout=2)
+
+
+def test_counters_and_reports(setup):
+    d, store, rng = setup
+    keys = jnp.asarray(rng.integers(0, 2**32 - 2, 100), jnp.uint32)
+    ops = jnp.asarray([C.OP_GET] * 70 + [C.OP_PUT] * 30, jnp.int32)
+    q = C.make_queries(keys, ops, jnp.zeros((100, 4), jnp.float32))
+    dec, d = C.route(d, q)
+    assert int(d.read_count.sum()) == 70
+    assert int(d.write_count.sum()) == 30
+    load = np.asarray(C.node_load(d))
+    # reads land on one node (tail) each; writes on all 3 chain members
+    assert load.sum() == 70 + 30 * 3
+    report, d = C.pull_report(d, 0)
+    assert int(d.read_count.sum()) == 0
+    assert report.total_ops == 100
+
+
+def test_coordination_ordering(setup):
+    """Paper's core claim, in the timing model: in-switch ~ ideal
+    client-driven, both beat server-driven."""
+    d, store, rng = setup
+    B = 512
+    keys = jnp.asarray(rng.integers(0, 2**32 - 2, B), jnp.uint32)
+    ops = jnp.asarray(rng.choice([C.OP_GET, C.OP_PUT], B, p=[0.5, 0.5]), jnp.int32)
+    q = C.make_queries(keys, ops, jnp.zeros((B, 4), jnp.float32))
+    dec, d = C.route(d, q)
+    arr = jnp.asarray(np.sort(rng.uniform(0, 200, B)), jnp.float32)
+    model = C.LatencyModel()
+    lat = {}
+    for mode in C.MODES:
+        plan = C.plan_hops(q, dec, mode, model, rng=jax.random.PRNGKey(1), num_nodes=8)
+        l, mk = C.simulate(plan, arr, num_nodes=8)
+        lat[mode] = float(l.mean())
+    assert lat[C.IN_SWITCH] <= lat[C.CLIENT_DRIVEN] + 1e-3
+    assert lat[C.CLIENT_DRIVEN] < lat[C.SERVER_DRIVEN]
+
+
+def test_hierarchy_consistency():
+    d2 = C.make_directory(32, 8, 3, num_pods=2)
+    table = C.derive_pod_table(d2, 2)
+    q = C.make_queries(
+        jnp.asarray(np.arange(0, 2**32 - 1, 2**27, dtype=np.uint64), jnp.uint32),
+        jnp.zeros((32,), jnp.int32),
+    )
+    pods = np.asarray(C.route_pod(table, d2, q))
+    dec, _ = C.route(d2, q)
+    node_pods = np.asarray(d2.node_addr[:, 0])
+    np.testing.assert_array_equal(pods, node_pods[np.asarray(dec.target)])
+
+
+def test_migration_moves_data(setup):
+    d, store, rng = setup
+    keys = jnp.asarray(rng.choice(2**32 - 2, 32, replace=False), jnp.uint32)
+    vals = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+    d, store = _put(d, store, keys, vals)
+    fill0 = np.asarray(C.store_fill(store))
+
+    op = C.MigrationOp(lo=0, hi=int(K.MAX_KEY), src=0, dst=1, kind="move")
+    store2 = C.execute_migrations(store, [op])
+    fill1 = np.asarray(C.store_fill(store2))
+    assert fill1[0] == 0
+    # dst gained everything src had (minus keys it already held)
+    assert fill1.sum() <= fill0.sum()
+    assert fill1[1] >= fill0[1]
+
+
+def test_range_match_kernel_agrees_with_route(setup):
+    from repro.kernels.range_match.ops import range_match
+
+    d, _, rng = setup
+    keys = jnp.asarray(rng.integers(0, 2**32 - 2, 300), jnp.uint32)
+    ops = jnp.asarray(rng.integers(0, 3, 300), jnp.int32)
+    ridx, target, chain = range_match(d, keys, ops, use_pallas=True)
+    q = C.make_queries(keys, ops)
+    dec, _ = C.route(d, q)
+    assert jnp.array_equal(ridx, dec.ridx)
+    assert jnp.array_equal(target, dec.target)
+    assert jnp.array_equal(chain.T, dec.chain)
