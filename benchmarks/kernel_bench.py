@@ -43,6 +43,27 @@ def bench_range_match():
             fn = jax.jit(lambda dd, kk, oo: range_match(dd, kk, oo, use_pallas=False))
             us = _time(fn, d, keys, ops)
             rows.append((f"range_match/B{B}/R{R}", us, f"{B / us:.1f}Mops_s"))
+
+    # Pallas path next to the oracle.  interpret resolves per backend
+    # (compiled on TPU, interpreter elsewhere) — off-TPU wall-times are
+    # interpreter times and are labelled as such, they only guard against
+    # regressions in the kernel's launch path, not TPU perf.
+    from repro.kernels.range_match.ops import default_interpret
+
+    interp = default_interpret()
+    tag = "interpret" if interp else "compiled"
+    for B, R in ((4096, 128),) if interp else ((4096, 128), (65536, 1024)):
+        d = C.make_directory(R, 16, 3)
+        keys = jnp.asarray(RNG.integers(0, 2**32 - 2, B), jnp.uint32)
+        ops = jnp.asarray(RNG.integers(0, 2, B), jnp.int32)
+        pf = lambda dd, kk, oo: range_match(dd, kk, oo, use_pallas=True)
+        us = _time(pf, d, keys, ops, iters=3 if interp else 20,
+                   warmup=1 if interp else 3)
+        out_p = pf(d, keys, ops)
+        out_r = range_match(d, keys, ops, use_pallas=False)
+        agree = all(bool(jnp.array_equal(a, b)) for a, b in zip(out_p, out_r))
+        rows.append((f"range_match_pallas/{tag}/B{B}/R{R}", us,
+                     f"{B / us:.1f}Mops_s;agrees_with_oracle={agree}"))
     return rows
 
 

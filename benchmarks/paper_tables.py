@@ -5,6 +5,13 @@ range partitioning, YCSB workloads (16-byte keys -> uint32 matching values,
 128-byte values -> 32 f32 words).  Absolute times are abstract ticks (the
 paper's milliseconds are a Mininet artifact); the reproduced quantities are
 the *ratios* between coordination models.
+
+Timing runs through the vectorized DES engine (``repro.core.des``) by
+default: every figure builds its full (workload × coordination-mode)
+scenario set, stacks the hop plans along a leading scenario axis, and
+simulates the whole sweep in **one** engine call.  ``engine="reference"``
+replays the same scenarios one by one through the heapq oracle — the
+results are bit-identical, only slower.
 """
 
 from __future__ import annotations
@@ -21,6 +28,7 @@ from repro.data.ycsb import WorkloadConfig, load_phase, run_phase
 N_NODES = 16
 N_RANGES = 128
 REPLICATION = 3
+N_CLIENTS = 4  # the paper's testbed: 4 client hosts replaying YCSB streams
 
 
 @dataclasses.dataclass
@@ -45,39 +53,123 @@ def _percentiles(lat, mask):
     return float(lat.mean()), float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
 
 
-def run_workload(wcfg: WorkloadConfig, mode: str, *, seed: int = 0,
-                 run_store_ops: bool = False) -> BenchResult:
-    """Route + (optionally) execute a YCSB stream, then simulate timing."""
-    d = C.make_directory(N_RANGES, N_NODES, REPLICATION)
-    opcodes, keys, end_keys, values, arrivals = run_phase(wcfg)
+# ---------------------------------------------------------------------------
+# scenario construction + fused simulation
+# ---------------------------------------------------------------------------
 
-    q = C.make_queries(jnp.asarray(keys), jnp.asarray(opcodes),
-                       jnp.asarray(values), jnp.asarray(end_keys))
-    dec, d = C.route(d, q)
 
-    if run_store_ops:  # functional execution (correctness-coupled timing)
-        store = C.make_store(N_NODES, capacity=wcfg.n_records, value_dim=wcfg.value_dim)
-        lk, lv = load_phase(wcfg)
-        ql = C.make_queries(jnp.asarray(lk), jnp.full((len(lk),), C.OP_PUT), jnp.asarray(lv))
-        dl, d = C.route(d, ql)
-        store, _ = C.apply_routed(store, ql, dl)
-        store, _ = C.apply_routed(store, q, dec)
+def build_scenarios(workloads, *, seed: int = 0, run_store_ops: bool = False,
+                    modes=C.MODES):
+    """Route every workload and expand it into one scenario per mode.
 
-    plan = C.plan_hops(q, dec, mode, C.LatencyModel(),
-                       rng=jax.random.PRNGKey(seed), num_nodes=N_NODES)
-    # closed-loop, 4 sequential client hosts — exactly the paper's testbed
-    # (h17..h20 replaying YCSB streams, §8)
-    lat, makespan = C.simulate_closed_loop(plan, n_clients=4, num_nodes=N_NODES)
-    lat = np.asarray(lat)
+    Returns (scenarios, plans): ``scenarios[i] = (label, mode, opcodes,
+    wcfg)`` describes ``plans[i]`` (a (B, H) HopPlan).  All workloads must
+    share ``n_ops`` so the plans can be stacked and fused.
+    """
+    scenarios, plans = [], []
+    for label, wcfg in workloads:
+        d = C.make_directory(N_RANGES, N_NODES, REPLICATION)
+        opcodes, keys, end_keys, values, arrivals = run_phase(wcfg)
+        q = C.make_queries(jnp.asarray(keys), jnp.asarray(opcodes),
+                           jnp.asarray(values), jnp.asarray(end_keys))
+        dec, d = C.route(d, q)
+        if run_store_ops:  # functional execution (correctness-coupled timing)
+            store = C.make_store(N_NODES, capacity=wcfg.n_records,
+                                 value_dim=wcfg.value_dim)
+            lk, lv = load_phase(wcfg)
+            ql = C.make_queries(jnp.asarray(lk), jnp.full((len(lk),), C.OP_PUT),
+                                jnp.asarray(lv))
+            dl, d = C.route(d, ql)
+            store, _ = C.apply_routed(store, ql, dl)
+            store, _ = C.apply_routed(store, q, dec)
+        for mode in modes:
+            plans.append(C.plan_hops(q, dec, mode, C.LatencyModel(),
+                                     rng=jax.random.PRNGKey(seed),
+                                     num_nodes=N_NODES))
+            scenarios.append((label, mode, opcodes, wcfg))
+    return scenarios, plans
 
+
+def simulate_scenarios(plans, *, engine: str = "vectorized",
+                       n_clients: int = N_CLIENTS):
+    """Closed-loop simulate a scenario list -> (latencies, makespans).
+
+    ``vectorized``: one fused engine call over the stacked plans.
+    ``reference``: the heapq oracle, one scenario at a time (bit-identical).
+    """
+    if engine == "reference":
+        lats, mks = [], []
+        for p in plans:
+            lat, mk = C.simulate_closed_loop_reference(
+                p, n_clients=n_clients, num_nodes=N_NODES)
+            lats.append(np.asarray(lat))
+            mks.append(float(mk))
+        return lats, mks
+    if engine != "vectorized":
+        raise ValueError(f"engine must be 'reference' or 'vectorized', got {engine!r}")
+    lat, mk = C.simulate_closed_loop(C.stack_plans(plans),
+                                     n_clients=n_clients, num_nodes=N_NODES)
+    return list(np.asarray(lat)), [float(x) for x in np.asarray(mk)]
+
+
+def _to_result(mode, wcfg, opcodes, lat, makespan) -> BenchResult:
     is_read = opcodes == C.OP_GET
     is_write = opcodes == C.OP_PUT
     is_scan = opcodes == C.OP_SCAN
     rm, r50, r99 = _percentiles(lat, is_read)
     wm, w50, w99 = _percentiles(lat, is_write)
     sm, s50, s99 = _percentiles(lat, is_scan)
-    return BenchResult(mode, wcfg.n_ops / float(makespan),
+    return BenchResult(mode, wcfg.n_ops / max(makespan, 1e-9),
                        rm, r50, r99, wm, w50, w99, sm, s50, s99)
+
+
+def run_workload(wcfg: WorkloadConfig, mode: str, *, seed: int = 0,
+                 run_store_ops: bool = False,
+                 engine: str = "vectorized") -> BenchResult:
+    """Route + (optionally) execute a YCSB stream, then simulate one mode."""
+    if mode not in C.MODES:
+        raise ValueError(f"mode must be one of {C.MODES}")
+    scenarios, plans = build_scenarios([("", wcfg)], seed=seed,
+                                       run_store_ops=run_store_ops,
+                                       modes=(mode,))
+    lats, mks = simulate_scenarios(plans, engine=engine)
+    return _to_result(mode, wcfg, scenarios[0][2], lats[0], mks[0])
+
+
+# ---------------------------------------------------------------------------
+# workload grids — shared with benchmarks/coordination_bench.py so the
+# engine benchmark measures exactly the scenario set the figures use
+# ---------------------------------------------------------------------------
+
+
+def fig13a_workloads(n_ops: int):
+    workloads = []
+    for dist, theta in [("uniform", 0.0), ("zipf", 0.9), ("zipf", 0.95),
+                        ("zipf", 0.99), ("zipf", 1.2)]:
+        label = "uniform" if dist == "uniform" else f"zipf-{theta}"
+        workloads.append((label, WorkloadConfig(
+            distribution=dist, zipf_theta=theta, n_ops=n_ops,
+            read_ratio=1.0, update_ratio=0.0)))
+    return workloads
+
+
+def fig13bc_workloads(n_ops: int):
+    workloads = []
+    for dist, theta in [("uniform", 0.0), ("zipf", 0.95)]:
+        for wr in (0.0, 0.1, 0.3, 0.5, 0.7, 0.9):
+            label = "uniform" if dist == "uniform" else f"zipf-{theta}"
+            workloads.append(((label, wr), WorkloadConfig(
+                distribution=dist, zipf_theta=theta, n_ops=n_ops,
+                read_ratio=1 - wr, update_ratio=wr)))
+    return workloads
+
+
+def tables12_workloads(n_ops: int):
+    return [(name, WorkloadConfig(
+        distribution=dist, zipf_theta=theta, n_ops=n_ops,
+        read_ratio=0.45, update_ratio=0.45, scan_ratio=0.10))
+        for dist, theta, name in [("uniform", 0.0, "uniform"),
+                                  ("zipf", 1.2, "zipf-1.2")]]
 
 
 # ---------------------------------------------------------------------------
@@ -85,17 +177,11 @@ def run_workload(wcfg: WorkloadConfig, mode: str, *, seed: int = 0,
 # ---------------------------------------------------------------------------
 
 
-def fig13a_throughput_vs_skew(n_ops: int = 8192):
-    rows = []
-    for dist, theta in [("uniform", 0.0), ("zipf", 0.9), ("zipf", 0.95),
-                        ("zipf", 0.99), ("zipf", 1.2)]:
-        wcfg = WorkloadConfig(distribution=dist, zipf_theta=theta,
-                              n_ops=n_ops, read_ratio=1.0, update_ratio=0.0)
-        label = "uniform" if dist == "uniform" else f"zipf-{theta}"
-        for mode in C.MODES:
-            r = run_workload(wcfg, mode)
-            rows.append((label, mode, r.throughput))
-    return rows
+def fig13a_throughput_vs_skew(n_ops: int = 8192, engine: str = "vectorized"):
+    scenarios, plans = build_scenarios(fig13a_workloads(n_ops))
+    _, mks = simulate_scenarios(plans, engine=engine)
+    return [(label, mode, wcfg.n_ops / max(mk, 1e-9))
+            for (label, mode, _, wcfg), mk in zip(scenarios, mks)]
 
 
 # ---------------------------------------------------------------------------
@@ -103,17 +189,12 @@ def fig13a_throughput_vs_skew(n_ops: int = 8192):
 # ---------------------------------------------------------------------------
 
 
-def fig13bc_throughput_vs_write_ratio(n_ops: int = 8192):
-    rows = []
-    for dist, theta in [("uniform", 0.0), ("zipf", 0.95)]:
-        for wr in (0.0, 0.1, 0.3, 0.5, 0.7, 0.9):
-            wcfg = WorkloadConfig(distribution=dist, zipf_theta=theta, n_ops=n_ops,
-                                  read_ratio=1 - wr, update_ratio=wr)
-            label = "uniform" if dist == "uniform" else f"zipf-{theta}"
-            for mode in C.MODES:
-                r = run_workload(wcfg, mode)
-                rows.append((label, wr, mode, r.throughput))
-    return rows
+def fig13bc_throughput_vs_write_ratio(n_ops: int = 8192,
+                                      engine: str = "vectorized"):
+    scenarios, plans = build_scenarios(fig13bc_workloads(n_ops))
+    _, mks = simulate_scenarios(plans, engine=engine)
+    return [(label_wr[0], label_wr[1], mode, wcfg.n_ops / max(mk, 1e-9))
+            for (label_wr, mode, _, wcfg), mk in zip(scenarios, mks)]
 
 
 # ---------------------------------------------------------------------------
@@ -121,12 +202,12 @@ def fig13bc_throughput_vs_write_ratio(n_ops: int = 8192):
 # ---------------------------------------------------------------------------
 
 
-def tables12_latency(n_ops: int = 8192):
-    out = {}
-    for dist, theta, name in [("uniform", 0.0, "uniform"), ("zipf", 1.2, "zipf-1.2")]:
-        wcfg = WorkloadConfig(distribution=dist, zipf_theta=theta, n_ops=n_ops,
-                              read_ratio=0.45, update_ratio=0.45, scan_ratio=0.10)
-        out[name] = {mode: run_workload(wcfg, mode) for mode in C.MODES}
+def tables12_latency(n_ops: int = 8192, engine: str = "vectorized"):
+    scenarios, plans = build_scenarios(tables12_workloads(n_ops))
+    lats, mks = simulate_scenarios(plans, engine=engine)
+    out: dict[str, dict[str, BenchResult]] = {}
+    for (name, mode, opcodes, wcfg), lat, mk in zip(scenarios, lats, mks):
+        out.setdefault(name, {})[mode] = _to_result(mode, wcfg, opcodes, lat, mk)
     return out
 
 

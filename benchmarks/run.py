@@ -5,24 +5,35 @@ benchmarks us_per_call is the simulated mean latency per op (abstract ticks;
 see benchmarks/paper_tables.py) and ``derived`` carries the reproduced
 quantity (throughput / latency ratios vs server-driven coordination).  Run:
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--engine {reference,vectorized}]
+                                          [--n-ops N] [--json BENCH_coordination.json]
+
+``--engine`` selects the DES implementation (the vectorized engine is the
+default; ``reference`` replays the heapq oracle).  ``--json`` additionally
+writes every row plus engine wall-clock timings to a machine-readable file
+so future changes have a perf trajectory to compare against.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
 from repro import core as C
 
+_ROWS: list[tuple[str, float, str]] = []
+
 
 def _emit(name: str, us: float, derived: str):
+    _ROWS.append((name, us, derived))
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
-def table_fig13a(n_ops: int):
+def table_fig13a(n_ops: int, engine: str):
     from benchmarks.paper_tables import fig13a_throughput_vs_skew
 
-    rows = fig13a_throughput_vs_skew(n_ops)
+    rows = fig13a_throughput_vs_skew(n_ops, engine=engine)
     base = {}
     for label, mode, thr in rows:
         base.setdefault(label, {})[mode] = thr
@@ -32,10 +43,10 @@ def table_fig13a(n_ops: int):
               f"throughput={thr:.3f}ops_tick;vs_server={rel:.3f}x")
 
 
-def table_fig13bc(n_ops: int):
+def table_fig13bc(n_ops: int, engine: str):
     from benchmarks.paper_tables import fig13bc_throughput_vs_write_ratio
 
-    rows = fig13bc_throughput_vs_write_ratio(n_ops)
+    rows = fig13bc_throughput_vs_write_ratio(n_ops, engine=engine)
     base = {}
     for label, wr, mode, thr in rows:
         base.setdefault((label, wr), {})[mode] = thr
@@ -45,10 +56,10 @@ def table_fig13bc(n_ops: int):
               f"throughput={thr:.3f};vs_server={rel:.3f}x")
 
 
-def tables_1_2(n_ops: int):
+def tables_1_2(n_ops: int, engine: str):
     from benchmarks.paper_tables import tables12_latency
 
-    out = tables12_latency(n_ops)
+    out = tables12_latency(n_ops, engine=engine)
     for dist, modes in out.items():
         sv = modes[C.SERVER_DRIVEN]
         for mode, r in modes.items():
@@ -91,19 +102,60 @@ def table_kernels():
         _emit(name, us, derived)
 
 
+def table_engine(n_ops: int, quick: bool):
+    from benchmarks.coordination_bench import bench_engine
+
+    rows, wall = bench_engine(
+        n_ops, include_reference=not quick, include_1m=not quick)
+    for name, us, derived in rows:
+        _emit(name, us, derived)
+    return wall
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller op counts")
+    ap.add_argument("--engine", choices=("reference", "vectorized"),
+                    default="vectorized",
+                    help="DES implementation for the coordination benchmarks")
+    ap.add_argument("--n-ops", type=int, default=None,
+                    help="ops per workload (default: 2048 quick, 8192 full)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows + engine wall-clock to PATH")
     args = ap.parse_args()
-    n = 2048 if args.quick else 8192
+    if args.n_ops is not None and args.n_ops < 1:
+        ap.error("--n-ops must be >= 1")
+    n = args.n_ops if args.n_ops is not None else (2048 if args.quick else 8192)
 
+    t0 = time.perf_counter()
     print("name,us_per_call,derived")
-    table_fig13a(n)
-    table_fig13bc(n)
-    tables_1_2(n)
+    table_fig13a(n, args.engine)
+    table_fig13bc(n, args.engine)
+    tables_1_2(n, args.engine)
     table_load_balance(n)
     table_hierarchy(n)
     table_kernels()
+    wall = table_engine(n, args.quick)
+    total = time.perf_counter() - t0
+
+    if args.json:
+        payload = {
+            "meta": {
+                "n_ops": n,
+                "engine": args.engine,
+                "quick": args.quick,
+                "backends": list(C.des.available_backends()),
+                "suite_wall_clock_s": total,
+            },
+            "engine_wall_clock": wall,
+            "rows": [
+                {"name": name, "us_per_call": us, "derived": derived}
+                for name, us, derived in _ROWS
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(_ROWS)} rows -> {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -14,13 +14,18 @@ from repro.core.coordination import (
     LatencyModel,
     HopPlan,
     plan_hops,
-    simulate,
-    simulate_closed_loop,
+    simulate_reference,
+    simulate_closed_loop_reference,
     IN_SWITCH,
     CLIENT_DRIVEN,
     SERVER_DRIVEN,
     MODES,
 )
+
+# the vectorized engine is the default simulator; the heapq oracle stays
+# available as simulate_reference / simulate_closed_loop_reference
+from repro.core import des
+from repro.core.des import simulate, simulate_closed_loop, stack_plans
 from repro.core.controller import Controller, ControllerConfig
 from repro.core.migration import MigrationOp, execute as execute_migrations
 from repro.core.stats import StatsReport, pull_report, make_sketch, sketch_update, sketch_query
@@ -33,6 +38,7 @@ __all__ = [
     "QueryBatch", "RoutingDecision", "route", "expand_scans", "make_queries",
     "StoreState", "Responses", "make_store", "apply_routed", "store_fill",
     "LatencyModel", "HopPlan", "plan_hops", "simulate", "simulate_closed_loop",
+    "simulate_reference", "simulate_closed_loop_reference", "stack_plans", "des",
     "IN_SWITCH", "CLIENT_DRIVEN", "SERVER_DRIVEN", "MODES",
     "Controller", "ControllerConfig", "MigrationOp", "execute_migrations",
     "StatsReport", "pull_report", "make_sketch", "sketch_update", "sketch_query",

@@ -19,10 +19,16 @@ visits and per-visit service cost.  We therefore split concerns:
 
   * ``plan_hops`` builds a (B, H) hop plan per model from a routing
     decision — pure data-plane math, jittable;
-  * ``simulate`` runs a deterministic FIFO queueing simulation over the
-    plan (lax.scan over queries in arrival order, unrolled over hops) and
-    returns per-query latency + makespan, from which the benchmarks derive
-    the paper's Tables 1–2 and Figure 13.
+  * ``simulate_reference`` / ``simulate_closed_loop_reference`` run a
+    deterministic per-node-FIFO queueing simulation over the plan (a
+    host-side Python heapq event loop) and return per-query latency +
+    makespan, from which the benchmarks derive the paper's Tables 1–2 and
+    Figure 13.
+
+The heapq pair is the **oracle**: slow, obviously correct, kept for
+equivalence testing.  Production simulation goes through the vectorized
+engine in :mod:`repro.core.des` (``C.simulate`` / ``C.simulate_closed_loop``),
+which matches the oracle bit for bit.
 
 Latency units are abstract "ticks"; the paper's absolute milliseconds are a
 Mininet artifact — ratios between models are the reproduced quantity.
@@ -168,7 +174,7 @@ def _shift_left_f(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([x[:, 1:], pad], axis=1)
 
 
-def simulate(
+def simulate_reference(
     plan: HopPlan,
     arrivals: jnp.ndarray,
     *,
@@ -185,7 +191,9 @@ def simulate(
     import heapq
 
     nodes = np.asarray(plan.nodes)
-    service = np.asarray(plan.service)
+    # float64 service up front: mixing float32 scalars into the event
+    # arithmetic would round some steps to f32 under NEP-50 promotion
+    service = np.asarray(plan.service, dtype=np.float64)
     arr = np.asarray(arrivals, dtype=np.float64)
     B, H = nodes.shape
 
@@ -214,7 +222,7 @@ def simulate(
     return jnp.asarray(latency, jnp.float32), jnp.asarray(makespan, jnp.float32)
 
 
-def simulate_closed_loop(
+def simulate_closed_loop_reference(
     plan: HopPlan,
     *,
     n_clients: int,
@@ -230,7 +238,7 @@ def simulate_closed_loop(
     import heapq
 
     nodes = np.asarray(plan.nodes)
-    service = np.asarray(plan.service)
+    service = np.asarray(plan.service, dtype=np.float64)  # see simulate_reference
     B, H = nodes.shape
     K_ = min(n_clients, B)
 

@@ -133,6 +133,44 @@ def slab_get(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, qkeys: jnp.ndarray)
     return vals, found
 
 
+def pad_slab(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, max_results: int):
+    """Append ``max_results`` EMPTY/zero entries so every scan's
+    ``dynamic_slice`` stays in bounds.  Hoisted out of the per-query path:
+    one pad covers the whole vmapped scan batch in
+    :func:`_slab_scan_padded`."""
+    pad_k = jnp.concatenate(
+        [slab_keys, jnp.full((max_results,), EMPTY, slab_keys.dtype)]
+    )
+    pad_v = jnp.concatenate(
+        [slab_vals, jnp.zeros((max_results, slab_vals.shape[1]), slab_vals.dtype)]
+    )
+    return pad_k, pad_v
+
+
+def _slab_scan_padded(
+    pad_k: jnp.ndarray,
+    pad_v: jnp.ndarray,
+    k0: jnp.ndarray,
+    k1: jnp.ndarray,
+    max_results: int,
+):
+    """Scan core over a pre-padded slab (see :func:`pad_slab`)."""
+    C = pad_k.shape[0] - max_results
+    live_keys = jax.lax.slice(pad_k, (0,), (C,))
+    lo = jnp.searchsorted(live_keys, k0)                      # (B,)
+    hi = jnp.searchsorted(live_keys, k1, side="right")
+    count = jnp.minimum(hi - lo, max_results).astype(jnp.int32)
+
+    def one(lo_i, cnt_i):
+        ks = jax.lax.dynamic_slice(pad_k, (lo_i,), (max_results,))
+        vs = jax.lax.dynamic_slice(pad_v, (lo_i, 0), (max_results, pad_v.shape[1]))
+        live = jnp.arange(max_results) < cnt_i
+        return jnp.where(live, ks, EMPTY), jnp.where(live[:, None], vs, 0.0)
+
+    ks, vs = jax.vmap(one)(lo, count)
+    return ks, vs, count
+
+
 def slab_scan(
     slab_keys: jnp.ndarray,
     slab_vals: jnp.ndarray,
@@ -144,32 +182,8 @@ def slab_scan(
 
     Returns (keys (B,S), values (B,S,V), count (B,)).
     """
-    C = slab_keys.shape[0]
-    lo = jnp.searchsorted(slab_keys, k0)                      # (B,)
-    hi = jnp.searchsorted(slab_keys, k1, side="right")
-    count = jnp.minimum(hi - lo, max_results).astype(jnp.int32)
-
-    def one(lo_i, cnt_i):
-        ks = jax.lax.dynamic_slice(slab_keys, (jnp.minimum(lo_i, C - 1),), (max_results,))
-        vs = jax.lax.dynamic_slice(
-            slab_vals, (jnp.minimum(lo_i, C - 1), 0), (max_results, slab_vals.shape[1])
-        )
-        live = jnp.arange(max_results) < cnt_i
-        return jnp.where(live, ks, EMPTY), jnp.where(live[:, None], vs, 0.0)
-
-    # pad the slab so dynamic_slice near the end stays in bounds
-    pad_k = jnp.concatenate([slab_keys, jnp.full((max_results,), EMPTY, slab_keys.dtype)])
-    pad_v = jnp.concatenate([slab_vals, jnp.zeros((max_results, slab_vals.shape[1]), slab_vals.dtype)])
-
-    def one_padded(lo_i, cnt_i):
-        ks = jax.lax.dynamic_slice(pad_k, (lo_i,), (max_results,))
-        vs = jax.lax.dynamic_slice(pad_v, (lo_i, 0), (max_results, slab_vals.shape[1]))
-        live = jnp.arange(max_results) < cnt_i
-        return jnp.where(live, ks, EMPTY), jnp.where(live[:, None], vs, 0.0)
-
-    del one
-    ks, vs = jax.vmap(one_padded)(lo, count)
-    return ks, vs, count
+    pad_k, pad_v = pad_slab(slab_keys, slab_vals, max_results)
+    return _slab_scan_padded(pad_k, pad_v, k0, k1, max_results)
 
 
 def slab_delete(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, del_keys: jnp.ndarray):

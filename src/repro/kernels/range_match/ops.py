@@ -4,10 +4,21 @@ Handles padding (batch to 128*block_rows, table to a lane multiple) and
 adapts a :class:`repro.core.directory.Directory` into the kernel's padded
 table layout.  ``use_pallas=False`` falls back to the jnp oracle — the two
 paths are asserted identical in tests across shape/dtype sweeps.
+
+Production-honesty notes:
+
+* ``interpret`` defaults to *backend-aware*: the Pallas kernel runs
+  compiled on TPU and falls back to the interpreter only off-TPU (the
+  old hardcoded ``interpret=True`` silently interpreted everywhere).
+* ``pack_tables`` results are memoized per directory (keyed on the
+  identity of its buffers), so the routing hot path does not re-pad the
+  directory tables on every ``range_match`` call.
 """
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -17,6 +28,11 @@ from repro.core import keys as K
 from repro.core.directory import Directory
 from repro.kernels.range_match.kernel import range_match_pallas, LANES, DEFAULT_BLOCK_ROWS
 from repro.kernels.range_match.ref import range_match_ref
+
+
+def default_interpret() -> bool:
+    """Interpret the Pallas kernel only when not running on TPU."""
+    return jax.default_backend() != "tpu"
 
 
 def pack_tables(directory: Directory):
@@ -37,29 +53,72 @@ def pack_tables(directory: Directory):
     return interior_p, chains_p, clen_p
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_rows"))
-def range_match(
-    directory: Directory,
+# Memoized pack_tables: keyed on the identity of the directory's buffers.
+# Holding strong references to the keyed buffers in the (bounded) cache
+# guarantees their id()s cannot be recycled while an entry is live.
+_PACK_CACHE_SIZE = 8
+_pack_cache: OrderedDict = OrderedDict()
+_pack_cache_lock = threading.Lock()
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def pack_tables_cached(directory: Directory):
+    """Like :func:`pack_tables`, but memoized for concrete directories.
+
+    Inside a trace (directory buffers are tracers) memoization is
+    meaningless — the padding fuses into the surrounding jit — so the
+    cache is bypassed.
+
+    The identity-keyed cache assumes the directory's buffers are not
+    mutated in place (true for jnp arrays; a Directory hand-built from
+    numpy arrays must not edit them after first use).
+    """
+    bufs = (directory.bounds, directory.chains, directory.chain_len)
+    if any(_is_tracer(b) for b in bufs):
+        return pack_tables(directory)
+    key = tuple(id(b) for b in bufs)
+    with _pack_cache_lock:
+        hit = _pack_cache.get(key)
+        if hit is not None:
+            held, packed = hit
+            if all(a is b for a, b in zip(held, bufs)):
+                _pack_cache.move_to_end(key)
+                return packed
+    packed = pack_tables(directory)
+    with _pack_cache_lock:
+        _pack_cache[key] = (bufs, packed)
+        while len(_pack_cache) > _PACK_CACHE_SIZE:
+            _pack_cache.popitem(last=False)
+    return packed
+
+
+@partial(
+    jax.jit,
+    static_argnames=("hash_partitioned", "use_pallas", "interpret", "block_rows"),
+)
+def _range_match_packed(
+    bounds_p,
+    chains_p,
+    clen_p,
     keys: jnp.ndarray,
     opcodes: jnp.ndarray,
     *,
-    use_pallas: bool = True,
-    interpret: bool = True,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
+    hash_partitioned: bool,
+    use_pallas: bool,
+    interpret: bool,
+    block_rows: int,
 ):
-    """Route a packet batch: returns (ridx (B,), target (B,), chain (r_max,B)).
-
-    Identical semantics to ``core.routing.route`` (sans counter bumps).
-    """
     B = keys.shape[0]
-    mvals = K.matching_value(keys, hash_partitioned=directory.hash_partitioned)
+    mvals = K.matching_value(keys, hash_partitioned=hash_partitioned)
     tile = LANES * block_rows
     Bp = ((B + tile - 1) // tile) * tile
     if Bp != B:
         mvals = jnp.concatenate([mvals, jnp.zeros((Bp - B,), mvals.dtype)])
         opcodes = jnp.concatenate([opcodes, jnp.zeros((Bp - B,), opcodes.dtype)])
 
-    bounds_p, chains_p, clen_p = pack_tables(directory)
     if use_pallas:
         ridx, target, chain = range_match_pallas(
             mvals, opcodes.astype(jnp.int32), bounds_p, chains_p, clen_p,
@@ -70,3 +129,28 @@ def range_match(
             mvals, opcodes.astype(jnp.int32), bounds_p, chains_p, clen_p
         )
     return ridx[:B], target[:B], chain[:, :B]
+
+
+def range_match(
+    directory: Directory,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Route a packet batch: returns (ridx (B,), target (B,), chain (r_max,B)).
+
+    Identical semantics to ``core.routing.route`` (sans counter bumps).
+    ``interpret=None`` resolves per backend (compiled on TPU, interpreted
+    elsewhere); pass an explicit bool to override.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    bounds_p, chains_p, clen_p = pack_tables_cached(directory)
+    return _range_match_packed(
+        bounds_p, chains_p, clen_p, keys, opcodes,
+        hash_partitioned=bool(directory.hash_partitioned),
+        use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
+    )
