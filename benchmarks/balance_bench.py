@@ -1,0 +1,152 @@
+"""Adaptive-balancing benchmark: frozen vs migrate-only vs full-adaptive.
+
+Runs the ``repro.cluster`` closed loop over the time-varying scenario
+library and emits one JSON row per (scenario × policy) run — the numbers
+behind BENCHMARKS.md §"Load balancing".  The acceptance gate of the
+cluster subsystem is checked here explicitly: on the Zipf-1.2
+shifting-hotspot scenario the full-adaptive policy must beat the
+frozen-directory baseline on **both** mean load imbalance (max/mean) and
+mean DES p99 latency, with the epoch device step compiled exactly once
+per scenario.
+
+Run: ``PYTHONPATH=src python -m benchmarks.balance_bench
+[--quick] [--scenarios a,b] [--policies x,y] [--json BENCH_balance.json]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.cluster import (
+    ClusterConfig,
+    EpochDriver,
+    ScenarioConfig,
+    make_policy,
+    make_scenario,
+    summarize,
+)
+
+DEFAULT_POLICIES = ("frozen", "migrate", "replicate", "full_adaptive")
+DEFAULT_SCENARIOS = ("shifting_hotspot", "flash_crowd", "diurnal", "node_failure")
+
+# the acceptance-gate cluster geometry: fine ranges so a Zipf-1.2 hot
+# block spans several chains, headroom for selective replication
+def cluster_config(quick: bool) -> ClusterConfig:
+    return ClusterConfig(
+        num_nodes=8,
+        num_ranges=32 if quick else 128,
+        replication=2,
+        r_max=4 if quick else 5,
+        n_clients=32,
+        imbalance_threshold=1.1,
+        max_moves_per_round=8,
+    )
+
+
+def scenario_config(quick: bool) -> ScenarioConfig:
+    if quick:
+        return ScenarioConfig(n_epochs=4, epoch_ops=512, n_records=1024,
+                              value_dim=4, seed=1, read_ratio=0.95)
+    return ScenarioConfig(n_epochs=10, epoch_ops=1024, n_records=2048,
+                          value_dim=4, seed=1, read_ratio=0.95)
+
+
+def scenario_kwargs(name: str, scfg: ScenarioConfig) -> dict:
+    mid = scfg.n_epochs // 2
+    return {
+        "shifting_hotspot": dict(theta=1.2, shift_every=max(scfg.n_epochs // 3, 1)),
+        "flash_crowd": dict(t0=mid // 2, t1=mid + 1),
+        "diurnal": {},
+        "node_failure": dict(fail_epoch=mid, fail_node=0),
+        "stationary": {},
+    }[name]
+
+
+def run_matrix(scenarios, policies, quick: bool, verbose: bool = True):
+    rows = []
+    for sname in scenarios:
+        scfg = scenario_config(quick)
+        for pname in policies:
+            scen = make_scenario(sname, scfg, **scenario_kwargs(sname, scfg))
+            drv = EpochDriver(scen, make_policy(pname), cluster_config(quick))
+            t0 = time.perf_counter()
+            epochs = drv.run()
+            wall = time.perf_counter() - t0
+            row = summarize(epochs)
+            row["wall_s"] = round(wall, 3)
+            row["traces"] = drv.traces
+            rows.append(row)
+            if verbose:
+                print(
+                    f"{sname:18s} {pname:14s} imb {row['mean_imbalance']:5.2f} "
+                    f"p99 {row['mean_p99']:6.1f} p50 {row['mean_p50']:6.1f} "
+                    f"thr {row['mean_throughput']:.3f} "
+                    f"migB {row['total_migration_bytes']:8d} "
+                    f"traces {row['traces']}"
+                )
+    return rows
+
+
+def check_acceptance(rows) -> list[str]:
+    """The cluster-subsystem acceptance gate (see ISSUE/BENCHMARKS.md)."""
+    by = {(r["scenario"], r["policy"]): r for r in rows}
+    problems = []
+    f = by.get(("shifting_hotspot", "frozen"))
+    a = by.get(("shifting_hotspot", "full_adaptive"))
+    if f and a:
+        if not a["mean_imbalance"] < f["mean_imbalance"]:
+            problems.append(
+                f"full_adaptive imbalance {a['mean_imbalance']:.2f} !< "
+                f"frozen {f['mean_imbalance']:.2f}"
+            )
+        if not a["mean_p99"] < f["mean_p99"]:
+            problems.append(
+                f"full_adaptive p99 {a['mean_p99']:.1f} !< "
+                f"frozen {f['mean_p99']:.1f}"
+            )
+    for r in rows:
+        if r["traces"] != 1:
+            problems.append(
+                f"{r['scenario']}/{r['policy']}: epoch step traced "
+                f"{r['traces']}x (expected 1)"
+            )
+    return problems
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sizes (CI smoke)")
+    ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS))
+    ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES))
+    ap.add_argument("--json", default=None, help="write rows to this path")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the acceptance gate (exploratory runs)")
+    args = ap.parse_args(argv)
+
+    scenarios = [s for s in args.scenarios.split(",") if s]
+    policies = [p for p in args.policies.split(",") if p]
+    rows = run_matrix(scenarios, policies, args.quick)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
+        print(f"wrote {args.json} ({len(rows)} rows)")
+
+    if not args.no_check and "shifting_hotspot" in scenarios:
+        problems = check_acceptance(rows)
+        if problems:
+            print("ACCEPTANCE FAILED:")
+            for p in problems:
+                print("  -", p)
+            return 1
+        print("acceptance: full_adaptive < frozen on imbalance AND p99; "
+              "all steps compiled once")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

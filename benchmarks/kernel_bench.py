@@ -64,6 +64,30 @@ def bench_range_match():
         agree = all(bool(jnp.array_equal(a, b)) for a, b in zip(out_p, out_r))
         rows.append((f"range_match_pallas/{tag}/B{B}/R{R}", us,
                      f"{B / us:.1f}Mops_s;agrees_with_oracle={agree}"))
+
+    # load-aware p2c read spreading (the repro.cluster adaptive hot path)
+    from repro.kernels.range_match.ops import range_match_spread
+
+    B, R = 4096, 128
+    d = C.make_directory(R, 16, 3, r_max=5)
+    keys = jnp.asarray(RNG.integers(0, 2**32 - 2, B), jnp.uint32)
+    ops = jnp.asarray(RNG.integers(0, 2, B), jnp.int32)
+    load = jnp.asarray(RNG.integers(0, 100, 16), jnp.uint32)
+    rng = jax.random.PRNGKey(0)
+    sf = lambda dd, kk, oo: range_match_spread(dd, kk, oo, load, rng,
+                                               use_pallas=False)
+    us = _time(sf, d, keys, ops)
+    rows.append((f"range_match_spread/B{B}/R{R}", us, f"{B / us:.1f}Mops_s"))
+    pf2 = lambda dd, kk, oo: range_match_spread(dd, kk, oo, load, rng,
+                                                use_pallas=True)
+    us = _time(pf2, d, keys, ops, iters=3 if interp else 20,
+               warmup=1 if interp else 3)
+    agree = all(
+        bool(jnp.array_equal(a, b))
+        for a, b in zip(pf2(d, keys, ops), sf(d, keys, ops))
+    )
+    rows.append((f"range_match_spread_pallas/{tag}/B{B}/R{R}", us,
+                 f"{B / us:.1f}Mops_s;agrees_with_oracle={agree}"))
     return rows
 
 

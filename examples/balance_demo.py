@@ -1,0 +1,62 @@
+"""Closed-loop adaptive balancing walkthrough (paper §5.1, repro.cluster).
+
+Replays a Zipf-1.2 *shifting hotspot* — the hot key block jumps to a new
+quarter of the key space every few epochs — against a frozen directory
+and against the full adaptive policy (statistics-driven migration +
+hot-range selective replication + power-of-two-choices read spreading),
+printing the per-epoch load imbalance and DES tail latency side by side.
+Watch the adaptive run re-converge after every hotspot jump while the
+frozen run stays pinned against the hot chain.
+
+  PYTHONPATH=src python examples/balance_demo.py
+"""
+
+from repro.cluster import (
+    ClusterConfig,
+    EpochDriver,
+    ScenarioConfig,
+    make_policy,
+    make_scenario,
+    summarize,
+)
+
+SCFG = ScenarioConfig(n_epochs=9, epoch_ops=1024, n_records=2048,
+                      value_dim=4, seed=1, read_ratio=0.95)
+CCFG = ClusterConfig(num_nodes=8, num_ranges=128, replication=2, r_max=5,
+                     n_clients=32, imbalance_threshold=1.1,
+                     max_moves_per_round=8)
+
+
+def run(policy_name: str):
+    scenario = make_scenario("shifting_hotspot", SCFG, theta=1.2, shift_every=3)
+    driver = EpochDriver(scenario, make_policy(policy_name), CCFG)
+    rows = driver.run()
+    assert driver.traces == 1, "epoch step must compile exactly once"
+    return rows
+
+
+print(f"{SCFG.n_epochs} epochs x {SCFG.epoch_ops} ops, Zipf-1.2 hotspot "
+      f"shifting every 3 epochs, {CCFG.num_nodes} nodes\n")
+runs = {name: run(name) for name in ("frozen", "full_adaptive")}
+
+print("epoch | imbalance (max/mean)  | DES p99 (ticks)       | control actions")
+print("      | frozen    adaptive    | frozen    adaptive    |")
+for e in range(SCFG.n_epochs):
+    f, a = runs["frozen"][e], runs["full_adaptive"][e]
+    shifted = "  <- hotspot jump" if e % 3 == 0 and e > 0 else ""
+    acts = sum(1 for ev in a.events if "->" in ev)
+    print(f"  {e:2d}  | {f.imbalance:7.2f}   {a.imbalance:7.2f}     "
+          f"| {f.p99:7.1f}   {a.p99:7.1f}     | {acts:3d} ops{shifted}")
+
+sf, sa = summarize(runs["frozen"]), summarize(runs["full_adaptive"])
+print(f"""
+summary (mean over epochs)
+  imbalance : {sf['mean_imbalance']:.2f} -> {sa['mean_imbalance']:.2f}
+  DES p99   : {sf['mean_p99']:.1f} -> {sa['mean_p99']:.1f} ticks
+  DES p50   : {sf['mean_p50']:.1f} -> {sa['mean_p50']:.1f} ticks
+  throughput: {sf['mean_throughput']:.3f} -> {sa['mean_throughput']:.3f} ops/tick
+  paid for with {sa['total_migration_bytes']} migration bytes
+""")
+assert sa["mean_imbalance"] < sf["mean_imbalance"]
+assert sa["mean_p99"] < sf["mean_p99"]
+print("full_adaptive beats the frozen directory on imbalance AND tail latency")

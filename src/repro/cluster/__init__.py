@@ -1,0 +1,39 @@
+"""repro.cluster — the closed-loop adaptive-balancing subsystem (§5.1).
+
+Turns the existing parts (switch routing + statistics, controller,
+migration movers, DES engine) into the paper's actual *system*: a cluster
+that watches its own in-switch counters under a live, time-varying
+workload and rebalances itself.
+
+    scenario --epoch batches--> EpochDriver (fused jitted device step)
+        |                           |
+        |   StatsReport / sketch    v
+        policy (migrate / replicate / spread) --MigrationOps--> movers
+        ^                           |
+        +------ Controller.refresh -+   (counters survive; shapes frozen)
+
+Entry points: :class:`~repro.cluster.epoch.EpochDriver`,
+:func:`~repro.cluster.scenarios.make_scenario`,
+:func:`~repro.cluster.policies.make_policy`.
+"""
+
+from repro.cluster.epoch import ClusterConfig, EpochDriver
+from repro.cluster.metrics import EpochMetrics, imbalance_stats, latency_percentiles, summarize
+from repro.cluster.policies import (
+    POLICIES,
+    FullAdaptivePolicy,
+    MigratePolicy,
+    Policy,
+    PolicyConfig,
+    ReplicatePolicy,
+    make_policy,
+)
+from repro.cluster.scenarios import SCENARIOS, Scenario, ScenarioConfig, make_scenario
+
+__all__ = [
+    "ClusterConfig", "EpochDriver",
+    "EpochMetrics", "imbalance_stats", "latency_percentiles", "summarize",
+    "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
+    "FullAdaptivePolicy", "make_policy",
+    "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",
+]

@@ -1,0 +1,383 @@
+"""The closed-loop epoch driver (paper §5.1 made to actually run).
+
+One *epoch* = one device-side batch step + one host-side control
+observation.  The device step is a single fused, jitted program —
+
+    inject workload slice
+    -> route (counter + load-register + count-min sketch updates)
+    -> apply to the store (``apply_routed``, or ``make_dist_apply`` on a
+       mesh backend)
+    -> build the DES hop plan
+
+— and the host side closes the loop: pull the statistics report, run the
+balancing policy, execute the migration plan, graft the refreshed
+control tables back onto the live directory (``Controller.refresh`` —
+counters survive; ``stats.pull_report`` is the only reset path), and
+time the epoch's traffic on the PR-1 vectorized DES engine
+(:mod:`repro.core.des`).
+
+Shape discipline: scenario batches, directory tables, the sketch, and
+the load registers all keep fixed shapes across control updates (chain
+widening only rewrites ``chain_len`` values; ``make_directory(r_max=)``
+reserves the slots), so the device step traces **once per scenario** —
+asserted via :attr:`EpochDriver.traces` in tests and recorded per bench
+row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as C
+from repro.core import directory as D
+from repro.core import keys as K
+from repro.core import routing as R
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.coordination import LatencyModel, plan_hops
+from repro.core.dist_store import DistConfig, make_dist_apply
+from repro.core.migration import execute as execute_migrations
+from repro.core.stats import make_sketch, pull_report, sketch_update
+from repro.core.store import apply_routed, make_store
+
+from repro.cluster.metrics import (
+    EpochMetrics,
+    imbalance_stats,
+    latency_percentiles,
+    migration_traffic,
+)
+from repro.cluster.policies import Policy
+from repro.cluster.scenarios import Scenario
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Cluster geometry + timing knobs for a driver run."""
+
+    num_nodes: int = 8
+    num_ranges: int = 64
+    replication: int = 2
+    r_max: int = 4                 # chain-slot headroom for widening
+    capacity: int | None = None    # per-shard slots; None -> sized from scenario
+    mode: str = C.IN_SWITCH
+    n_clients: int = 32            # DES closed-loop client count
+    report_every: int = 1          # epochs per controller pull
+    sketch_width: int = 512
+    sketch_depth: int = 4
+    latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
+    des_backend: str | None = None
+    max_scan_results: int = 8
+    imbalance_threshold: float = 1.3   # Controller.balance trigger
+    max_moves_per_round: int = 4
+    seed: int = 0
+
+
+def _node_ops(decision: C.RoutingDecision, opcode: jnp.ndarray, num_nodes: int
+              ) -> jnp.ndarray:
+    """(N,) ops served per node this epoch: reads at their routed target,
+    writes at every live chain member (same units as directory.node_load)."""
+    is_write = (opcode == K.OP_PUT) | (opcode == K.OP_DEL)
+    r_max = decision.chain.shape[1]
+    live = (jnp.arange(r_max)[None, :] < decision.chain_len[:, None]) & (
+        decision.chain != D.NO_NODE
+    )
+    w_hit = live & is_write[:, None]
+    ops = jnp.zeros((num_nodes,), jnp.int32)
+    ops = ops.at[jnp.where(w_hit, decision.chain, 0).reshape(-1)].add(
+        w_hit.reshape(-1).astype(jnp.int32)
+    )
+    # mode="drop": reads against a fully-spliced chain (target NO_NODE)
+    # are unserved and must not show up as phantom load on node 0
+    ops = ops.at[decision.target].add(
+        jnp.where(is_write, 0, 1).astype(jnp.int32), mode="drop"
+    )
+    return ops
+
+
+class EpochDriver:
+    """Run a scenario under a policy, one epoch at a time.
+
+    ``backend='oracle'`` (default) uses the single-program
+    ``apply_routed`` path; ``backend='dist'`` shards the store over a
+    mesh axis and goes through ``make_dist_apply`` (the bounded-bucket
+    all_to_all data plane) — pass ``mesh``.
+    """
+
+    def __init__(
+        self,
+        scenario: Scenario,
+        policy: Policy,
+        cfg: ClusterConfig | None = None,
+        *,
+        backend: str = "oracle",
+        mesh=None,
+        dist_cfg: DistConfig | None = None,
+    ):
+        self.scenario = scenario
+        self.policy = policy
+        self.cfg = cfg = cfg or ClusterConfig()
+        if backend not in ("oracle", "dist"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "dist" and mesh is None:
+            raise ValueError("backend='dist' needs a mesh")
+        self.backend = backend
+
+        scfg = scenario.cfg
+        # keep the policy's notion of base replication honest
+        policy.config.base_replication = cfg.replication
+
+        directory = C.make_directory(
+            cfg.num_ranges, cfg.num_nodes, cfg.replication, r_max=cfg.r_max
+        )
+        self.controller = Controller(
+            directory,
+            ControllerConfig(
+                imbalance_threshold=cfg.imbalance_threshold,
+                max_moves_per_round=cfg.max_moves_per_round,
+            ),
+        )
+        capacity = cfg.capacity
+        if capacity is None:
+            # every record on up to r_max chains, plus 2x headroom for skewed
+            # placement and widen copies
+            capacity = max(256, 2 * scfg.n_records * cfg.r_max // cfg.num_nodes)
+        self.store = make_store(cfg.num_nodes, capacity, scfg.value_dim)
+        self.directory = directory
+        self.load_reg = jnp.zeros((cfg.num_nodes,), jnp.uint32)
+        self.sketch = make_sketch(cfg.sketch_width, cfg.sketch_depth)
+        self.key = jax.random.PRNGKey(cfg.seed)
+
+        self._traces = 0
+        self._period = 0
+        self._last_overflow = 0
+        self._mesh = mesh
+        if backend == "dist":
+            base = dist_cfg or DistConfig()
+            self._dist_cfg = dataclasses.replace(
+                base,
+                read_spread=policy.read_spread,
+                return_decision=True,
+                max_scan_results=cfg.max_scan_results,
+            )
+            self._dist_apply = make_dist_apply(mesh, directory, self._dist_cfg)
+            self._step = self._build_dist_step()
+        else:
+            self._step = self._build_oracle_step(policy.read_spread)
+
+        self._preload()
+
+    # -- properties --------------------------------------------------------
+    @property
+    def traces(self) -> int:
+        """How many times the epoch device step has been traced (the
+        no-retracing acceptance gate: must be 1 after any number of
+        epochs of one scenario).  On the dist backend the fused
+        shard_map program is a separate jit — its compile-cache size is
+        folded in so a retracing dist apply cannot hide behind the
+        observe step's count."""
+        t = self._traces
+        if self.backend == "dist":
+            cache_size = getattr(self._dist_apply, "_cache_size", None)
+            if callable(cache_size):
+                t = max(t, cache_size())
+        return t
+
+    # -- setup -------------------------------------------------------------
+    def _preload(self):
+        """YCSB load phase: PUT every record through the normal data path."""
+        keys, vals = self.scenario.load()
+        q = C.make_queries(
+            jnp.asarray(keys),
+            jnp.full((len(keys),), K.OP_PUT),
+            jnp.asarray(vals),
+        )
+        decision, _ = R.route(self.directory, q)  # discard counter bumps
+        self.store, _ = apply_routed(
+            self.store, q, decision, max_scan_results=self.cfg.max_scan_results
+        )
+        self._last_overflow = int(np.asarray(self.store.overflow).sum())
+
+    # -- device step variants ---------------------------------------------
+    def _build_oracle_step(self, spread: bool):
+        cfg = self.cfg
+        N = cfg.num_nodes
+        # widened members are lazily-refreshed read replicas: the write's
+        # client-visible path is the base chain only (see plan_hops)
+        cap = cfg.replication if spread else None
+
+        def step(store, directory, load_reg, sketch, q, rng):
+            self._traces += 1  # python side effect: counts traces, not calls
+            r_route, r_plan = jax.random.split(rng)
+            if spread:
+                decision, directory, load_reg = R.route_load_aware(
+                    directory, q, load_reg, r_route
+                )
+            else:
+                decision, directory = R.route(directory, q)
+            node_ops = _node_ops(decision, q.opcode, N)
+            if not spread:
+                # tail-read path: registers tracked for parity (same units)
+                load_reg = load_reg + node_ops.astype(jnp.uint32)
+            sketch = sketch_update(sketch, q.key)
+            store, resp = apply_routed(
+                store, q, decision, max_scan_results=cfg.max_scan_results
+            )
+            plan = plan_hops(
+                q, decision, cfg.mode, cfg.latency, rng=r_plan, num_nodes=N,
+                write_chain_cap=cap,
+            )
+            retries = jnp.zeros((), jnp.int32)
+            return store, directory, load_reg, sketch, plan, node_ops, retries
+
+        return jax.jit(step)
+
+    def _build_dist_step(self):
+        cfg = self.cfg
+        N = cfg.num_nodes
+        spread = self.policy.read_spread
+        dist_apply = self._dist_apply
+
+        def observe(q, target, chain, chain_len, sketch, rng):
+            """Jitted post-processing of the dist apply's decision."""
+            self._traces += 1
+            decision = C.RoutingDecision(
+                ridx=jnp.zeros_like(target),
+                target=target,
+                chain=chain,
+                chain_len=chain_len,
+                clength=jnp.zeros_like(target),
+            )
+            node_ops = _node_ops(decision, q.opcode, N)
+            sketch = sketch_update(sketch, q.key)
+            plan = plan_hops(
+                q, decision, cfg.mode, cfg.latency, rng=rng, num_nodes=N,
+                write_chain_cap=cfg.replication if spread else None,
+            )
+            return sketch, plan, node_ops
+
+        observe = jax.jit(observe)
+
+        def step(store, directory, load_reg, sketch, q, rng):
+            r_route, r_plan = jax.random.split(rng)
+            if spread:
+                store, _resp, directory, load_reg, m = dist_apply(
+                    store, directory, load_reg, q, r_route
+                )
+            else:
+                store, _resp, directory, m = dist_apply(store, directory, q)
+            sketch, plan, node_ops = observe(
+                q, m["target"], m["chain"], m["chain_len"], sketch, r_plan
+            )
+            if not spread:
+                load_reg = load_reg + node_ops.astype(jnp.uint32)
+            return (store, directory, load_reg, sketch, plan, node_ops,
+                    m["bucket_overflow"])
+
+        return step
+
+    # -- the loop ----------------------------------------------------------
+    def run_epoch(self, e: int) -> EpochMetrics:
+        cfg = self.cfg
+        scfg = self.scenario.cfg
+        events: list[str] = []
+        mig_entries = mig_bytes = 0
+
+        # control events fire at the epoch boundary (fail/recover mid-run)
+        for kind, node in self.scenario.events(e):
+            if kind == "fail":
+                # live node_load mid-period: counters are NOT reset here
+                nl = np.asarray(D.node_load(self.directory))
+                ops = self.controller.handle_node_failure(node, nl)
+                en, by = migration_traffic(self.store, ops, scfg.value_dim)
+                self.store = execute_migrations(self.store, ops)
+                self.directory = self.controller.refresh(self.directory)
+                mig_entries += en
+                mig_bytes += by
+                events.append(f"fail:{node}")
+            elif kind == "recover":
+                self.controller.recover_node(node)
+                events.append(f"recover:{node}")
+
+        opcodes, keys, end_keys, values = self.scenario.epoch(e)
+        q = C.make_queries(
+            jnp.asarray(keys), jnp.asarray(opcodes),
+            jnp.asarray(values), jnp.asarray(end_keys),
+        )
+        rng = jax.random.fold_in(self.key, e)
+        (self.store, self.directory, self.load_reg, self.sketch,
+         plan, node_ops, retries) = self._step(
+            self.store, self.directory, self.load_reg, self.sketch, q, rng
+        )
+
+        latency, makespan = C.simulate_closed_loop(
+            plan,
+            n_clients=cfg.n_clients,
+            num_nodes=cfg.num_nodes,
+            link=cfg.latency.link,
+            backend=cfg.des_backend,
+        )
+        p50, p99 = latency_percentiles(np.asarray(latency))
+        mk = float(np.asarray(makespan))
+
+        live = np.array(
+            [n not in self.controller.failed for n in range(cfg.num_nodes)]
+        )
+        imb, cov = imbalance_stats(np.asarray(node_ops), live)
+
+        overflow_now = int(np.asarray(self.store.overflow).sum())
+        drops = overflow_now - self._last_overflow
+        self._last_overflow = overflow_now
+
+        # ---- control pull: the only counter/load-register reset path ----
+        if (e + 1) % cfg.report_every == 0:
+            report, self.directory = pull_report(self.directory, self._period)
+            self._period += 1
+            if self.policy.read_spread:
+                # directory.node_load charges every read to the chain tail;
+                # under p2c spreading the data-plane load registers are the
+                # truthful per-node picture — hand those to the policy so
+                # widen/balance target selection doesn't chase tails
+                report = dataclasses.replace(
+                    report,
+                    node_load=np.asarray(self.load_reg, np.float64),
+                )
+            ops = self.policy.on_report(self.controller, report)
+            if ops:
+                en, by = migration_traffic(self.store, ops, scfg.value_dim)
+                self.store = execute_migrations(self.store, ops)
+                mig_entries += en
+                mig_bytes += by
+                events.extend(
+                    f"{op.kind}:{op.src}->{op.dst}" for op in ops
+                )
+            self.directory = self.controller.refresh(self.directory)
+            # halve rather than zero: p2c needs *recent* load signal to keep
+            # steering reads off write-busy heads; a hard reset degenerates
+            # it to a uniform-random replica pick for the whole next period
+            self.load_reg = self.load_reg // 2
+            self.sketch = jnp.zeros_like(self.sketch)
+
+        return EpochMetrics(
+            epoch=e,
+            scenario=self.scenario.name,
+            policy=self.policy.name,
+            ops=scfg.epoch_ops,
+            throughput=scfg.epoch_ops / mk if mk > 0 else 0.0,
+            p50=p50,
+            p99=p99,
+            makespan=mk,
+            imbalance=imb,
+            cov=cov,
+            migration_entries=mig_entries,
+            migration_bytes=mig_bytes,
+            drops=drops,
+            retries=int(np.asarray(retries)),
+            compiled_steps=self.traces,
+            events=events,
+        )
+
+    def run(self) -> list[EpochMetrics]:
+        return [self.run_epoch(e) for e in range(self.scenario.cfg.n_epochs)]

@@ -1,0 +1,115 @@
+"""Per-epoch cluster metrics (the monitoring half of paper §5.1).
+
+The closed loop needs numbers on both sides: the *data plane* produces
+per-epoch load/latency observations, the *bench* consumes per-run
+summaries comparing policies.  Everything here is plain numpy — these are
+control-plane/reporting quantities, deliberately off the jitted step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import keys as K
+from repro.core.migration import MigrationOp
+from repro.core.store import StoreState
+
+
+@dataclasses.dataclass
+class EpochMetrics:
+    """One epoch's observation row (JSON-serializable via ``to_row``)."""
+
+    epoch: int
+    scenario: str
+    policy: str
+    ops: int                  # ops injected this epoch
+    throughput: float         # ops / DES makespan (ops per tick)
+    p50: float                # DES closed-loop latency percentiles (ticks)
+    p99: float
+    makespan: float
+    imbalance: float          # max/mean per-node ops over live nodes
+    cov: float                # coefficient of variation of per-node ops
+    migration_entries: int    # entries moved/copied by control ops this epoch
+    migration_bytes: int      # wire estimate of the above
+    drops: int                # store capacity drops (overflow delta)
+    retries: int              # bucket overflows (dist backend; 0 for oracle)
+    compiled_steps: int       # cumulative device-step trace count
+    events: list[str] = dataclasses.field(default_factory=list)
+
+    def to_row(self) -> dict:
+        row = dataclasses.asdict(self)
+        row["events"] = list(self.events)
+        return row
+
+
+def latency_percentiles(latency: np.ndarray) -> tuple[float, float]:
+    """(p50, p99) of a DES latency vector."""
+    lat = np.asarray(latency, np.float64)
+    if lat.size == 0:
+        return 0.0, 0.0
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def imbalance_stats(node_ops: np.ndarray, live: np.ndarray | None = None
+                    ) -> tuple[float, float]:
+    """(max/mean, CoV) of per-node served ops, over live nodes only.
+
+    max/mean is the paper's balancing trigger quantity
+    (``ControllerConfig.imbalance_threshold`` compares against it); CoV
+    adds a whole-distribution view that max/mean misses.
+    """
+    ops = np.asarray(node_ops, np.float64)
+    if live is not None:
+        ops = ops[np.asarray(live, bool)]
+    mean = ops.mean() if ops.size else 0.0
+    if mean <= 0:
+        return 1.0, 0.0
+    return float(ops.max() / mean), float(ops.std() / mean)
+
+
+def migration_traffic(store: StoreState, ops: list[MigrationOp],
+                      value_dim: int) -> tuple[int, int]:
+    """(entries, bytes) a migration plan will move, counted on the source.
+
+    Counts actual resident entries in each op's [lo, hi] span on its
+    source shard *before* execution — the directory-span estimate the
+    controller reasons with can be badly off under skew.  Bytes model the
+    shim wire format: 4-byte key + value_dim f32 words.
+    """
+    keys = np.asarray(store.keys)
+    entries = 0
+    for op in ops:
+        if op.kind == "reclaim":
+            continue  # no data moves; space is reclaimed in place
+        slab = keys[op.src]
+        empty = np.uint32(K.EMPTY_KEY)
+        entries += int(
+            ((slab >= op.lo) & (slab <= op.hi) & (slab != empty)).sum()
+        )
+    return entries, entries * 4 * (1 + value_dim)
+
+
+def summarize(rows: list[EpochMetrics]) -> dict:
+    """Aggregate a run's epoch rows into the bench comparison row."""
+    if not rows:
+        return {}
+    f = lambda k: np.asarray([getattr(r, k) for r in rows], np.float64)
+    return {
+        "scenario": rows[0].scenario,
+        "policy": rows[0].policy,
+        "epochs": len(rows),
+        "mean_throughput": float(f("throughput").mean()),
+        "mean_p50": float(f("p50").mean()),
+        "mean_p99": float(f("p99").mean()),
+        "max_p99": float(f("p99").max()),
+        "mean_imbalance": float(f("imbalance").mean()),
+        "max_imbalance": float(f("imbalance").max()),
+        "mean_cov": float(f("cov").mean()),
+        "total_migration_entries": int(f("migration_entries").sum()),
+        "total_migration_bytes": int(f("migration_bytes").sum()),
+        "total_drops": int(f("drops").sum()),
+        "total_retries": int(f("retries").sum()),
+        "compiled_steps": int(rows[-1].compiled_steps),
+    }

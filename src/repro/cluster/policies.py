@@ -1,0 +1,175 @@
+"""The balancing-policy zoo (control plane of the closed loop, §5.1).
+
+A policy consumes the controller pull (:class:`~repro.core.stats.StatsReport`
+plus an optional count-min top-range view) and mutates the controller's
+tables, returning the migration plan the data movers execute.  Three knobs
+exist, and each policy turns a different subset:
+
+* **migration** — the paper's hottest-range -> coolest-node greedy move
+  (``Controller.balance``);
+* **selective replication** — widen the chain of sketch-identified hot
+  ranges (``Controller.widen_chain``), narrow them again when they cool;
+* **read spreading** — route GETs by power-of-two-choices over the live
+  chain (``routing.route_load_aware``) instead of tail-only.  This is a
+  *data-plane* knob: the policy only declares it (``read_spread``), the
+  epoch driver compiles the matching step variant.
+
+The bench compares ``frozen`` (directory never changes — the no-switch
+baseline), ``migrate`` (paper behaviour), ``replicate`` (widen + spread,
+no moves) and ``full_adaptive`` (everything on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.controller import Controller
+from repro.core.migration import MigrationOp
+from repro.core.stats import StatsReport
+
+
+@dataclasses.dataclass
+class PolicyConfig:
+    # widen a range when its heat *per live replica* exceeds this multiple
+    # of the mean range heat
+    hot_factor: float = 1.5
+    # cap on replicas added per report (hottest ranges first)
+    max_widen_per_round: int = 8
+    # shrink a widened chain when its heat falls back under the mean
+    narrow_below_mean: bool = True
+    # chains never shrink below this (the configured replication factor)
+    base_replication: int = 2
+
+
+class Policy:
+    """Base policy: freeze the directory (no control actions at all)."""
+
+    name = "frozen"
+    read_spread = False     # epoch driver compiles tail-read step
+
+    def __init__(self, config: PolicyConfig | None = None):
+        self.config = config or PolicyConfig()
+
+    def on_report(self, controller: Controller, report: StatsReport
+                  ) -> list[MigrationOp]:
+        return []
+
+
+class MigratePolicy(Policy):
+    """Paper §5.1 behaviour: statistics-driven sub-range migration only."""
+
+    name = "migrate"
+
+    def on_report(self, controller, report):
+        return controller.balance(report)
+
+
+class ReplicatePolicy(Policy):
+    """Hot-range selective replication + load-aware read spreading.
+
+    Widens the chains of ranges whose *per-replica* heat dominates the
+    mean — possibly by several replicas in one round — and narrows cooled
+    chains back to the base replication.  Declares ``read_spread``
+    because widening without spreading is pointless: tail-only reads
+    would simply all move to the newcomer.
+
+    Two details matter in practice (found the hard way):
+
+    * consecutive widenings must account for the load they just shifted —
+      picking "the coldest node" from a stale report piles every new
+      replica onto the same three nodes and simply relocates the hotspot;
+    * widened members are lazily-refreshed *read replicas*: the write's
+      client-visible path stays the base chain (``plan_hops
+      write_chain_cap``), and this policy re-emits a refresh copy per
+      standing widened replica each round — the sync traffic the bench
+      charges as migration bytes.
+    """
+
+    name = "replicate"
+    read_spread = True
+
+    def on_report(self, controller, report):
+        cfg = self.config
+        heat = (report.read_count + report.write_count).astype(np.float64)
+        mean = heat.mean() if heat.size else 0.0
+        ops: list[MigrationOp] = []
+        if mean <= 0:
+            return ops
+        nl = report.node_load.astype(np.float64).copy()
+        clen = controller.chain_lengths().astype(np.float64)
+        budget = cfg.max_widen_per_round
+
+        # hottest per live replica first: a wide warm chain is already
+        # fine; fully-spliced chains (clen 0 after cascaded failures)
+        # carry no replica to widen from and are masked out
+        ratio = np.where(clen > 0, heat / np.maximum(clen, 1.0), -1.0)
+        for ridx in np.argsort(ratio)[::-1]:
+            if budget <= 0 or ratio[ridx] <= 0:
+                break
+            while budget > 0 and heat[ridx] / clen[ridx] > cfg.hot_factor * mean:
+                op = controller.widen_chain(int(ridx), nl)
+                if op is None:
+                    break
+                ops.append(op)
+                budget -= 1
+                # re-estimate: members shed read share, newcomer takes one
+                c = clen[ridx]
+                for m in controller.chain_nodes(int(ridx))[: int(c)]:
+                    nl[int(m)] -= heat[ridx] / (c * (c + 1))
+                nl[op.dst] += heat[ridx] / (c + 1)
+                clen[ridx] += 1
+
+        cl = controller.chain_lengths()
+        if cfg.narrow_below_mean:
+            for ridx in np.where(cl > cfg.base_replication)[0]:
+                if heat[ridx] < mean:
+                    op = controller.narrow_chain(int(ridx), cfg.base_replication)
+                    if op is not None:
+                        ops.append(op)
+            cl = controller.chain_lengths()
+
+        # periodic refresh of standing read replicas (lazy delta sync)
+        for ridx in np.where(cl > cfg.base_replication)[0]:
+            lo, hi = controller.range_span(int(ridx))
+            chain = controller.chain_nodes(int(ridx))
+            head = int(chain[0])
+            for pos in range(cfg.base_replication, int(cl[ridx])):
+                dst = int(chain[pos])
+                if dst >= 0 and not any(
+                    o.kind == "copy" and o.dst == dst and o.lo == lo
+                    for o in ops
+                ):
+                    ops.append(MigrationOp(lo=lo, hi=hi, src=head, dst=dst,
+                                           kind="copy"))
+        return ops
+
+
+class FullAdaptivePolicy(ReplicatePolicy):
+    """Everything on: replicate + spread (inherited) and migrate.
+
+    Replication handles ranges too hot for any single tail; migration
+    evens out the residual per-node imbalance the replicas leave behind.
+    """
+
+    name = "full_adaptive"
+
+    def on_report(self, controller, report):
+        ops = super().on_report(controller, report)
+        ops.extend(controller.balance(report))
+        return ops
+
+
+POLICIES = {
+    "frozen": Policy,
+    "migrate": MigratePolicy,
+    "replicate": ReplicatePolicy,
+    "full_adaptive": FullAdaptivePolicy,
+}
+
+
+def make_policy(name: str, config: PolicyConfig | None = None) -> Policy:
+    if name not in POLICIES:
+        raise ValueError(f"unknown policy {name!r}; pick from {sorted(POLICIES)}")
+    return POLICIES[name](config)

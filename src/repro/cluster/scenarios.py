@@ -1,0 +1,199 @@
+"""Time-varying workload scenarios over :mod:`repro.data.ycsb`.
+
+The paper evaluates static YCSB mixes; the adaptive-balancing loop only
+earns its keep when the workload *moves*.  Each scenario emits one
+fixed-shape op batch per epoch (shapes never change within a scenario, so
+the cluster epoch step compiles exactly once) plus a control-event stream
+(node failures/recoveries) the driver feeds to the controller.
+
+Scenario zoo:
+
+* ``shifting_hotspot`` — Zipf heat whose hot block rotates through the
+  sorted key space (the headline adaptive-balancing stressor; the bench
+  acceptance gate runs this at theta=1.2).
+* ``flash_crowd``     — uniform background, then a tiny key block takes a
+  large traffic share for a few epochs and vanishes again.
+* ``diurnal``         — fixed Zipf popularity, sinusoidal read/write mix
+  (day: read-heavy; night: write-heavy).
+* ``node_failure``    — steady skewed load with a storage-node failure
+  mid-run (and optional recovery) — §5.2 meets §5.1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import keys as K
+from repro.data.ycsb import _zipf_probs
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Shared scenario knobs (fixed shapes: epoch_ops × n_epochs)."""
+
+    n_epochs: int = 12
+    epoch_ops: int = 2048
+    n_records: int = 4096
+    value_dim: int = 8
+    read_ratio: float = 0.9       # base mix; diurnal modulates it
+    seed: int = 0
+
+
+class Scenario:
+    """Base: stationary Zipf workload (subclasses add time variation)."""
+
+    name = "stationary"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.99):
+        self.cfg = cfg
+        self.theta = theta
+        rng = np.random.default_rng(cfg.seed)
+        # distinct sorted record keys spread over the key space (ycsb idiom)
+        self.record_keys = np.sort(
+            rng.choice(np.uint64(K.KEY_SPACE - 2), size=cfg.n_records,
+                       replace=False).astype(np.uint32)
+        )
+        self.base_probs = _zipf_probs(cfg.n_records, theta)
+        # scatter heat over the key space for the stationary base case
+        self.perm = rng.permutation(cfg.n_records)
+
+    # -- per-epoch knobs subclasses override -------------------------------
+    def record_probs(self, epoch: int) -> np.ndarray:
+        """Popularity over record *indices* (sorted-key order) this epoch."""
+        p = np.empty_like(self.base_probs)
+        p[self.perm] = self.base_probs
+        return p
+
+    def read_ratio(self, epoch: int) -> float:
+        return self.cfg.read_ratio
+
+    def events(self, epoch: int) -> list[tuple[str, int]]:
+        """Control events fired at the *start* of this epoch."""
+        return []
+
+    # -- generation --------------------------------------------------------
+    def load(self):
+        """(keys, values) preloaded before epoch 0 (YCSB load phase)."""
+        rng = np.random.default_rng(self.cfg.seed + 1)
+        vals = rng.normal(size=(self.cfg.n_records, self.cfg.value_dim))
+        return self.record_keys, vals.astype(np.float32)
+
+    def epoch(self, e: int):
+        """One epoch's op stream: (opcodes, keys, end_keys, values)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed + 100 + e)
+        idx = rng.choice(cfg.n_records, size=cfg.epoch_ops,
+                         p=self.record_probs(e))
+        keys = self.record_keys[idx]
+        r = self.read_ratio(e)
+        opcodes = np.where(rng.random(cfg.epoch_ops) < r, K.OP_GET,
+                           K.OP_PUT).astype(np.int32)
+        end_keys = np.zeros(cfg.epoch_ops, np.uint32)
+        values = rng.normal(size=(cfg.epoch_ops, cfg.value_dim)).astype(np.float32)
+        return opcodes, keys, end_keys, values
+
+
+class ShiftingHotspot(Scenario):
+    """Zipf heat concentrated on a contiguous sorted-key block that jumps
+    to a new quarter of the key space every ``shift_every`` epochs.
+
+    Contiguous in sorted-key order == contiguous sub-ranges == a few hot
+    chains — the worst case for a frozen directory and the best case for
+    migration + selective replication.
+    """
+
+    name = "shifting_hotspot"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 1.2,
+                 shift_every: int = 3):
+        super().__init__(cfg, theta=theta)
+        self.shift_every = shift_every
+
+    def record_probs(self, epoch: int) -> np.ndarray:
+        n = self.cfg.n_records
+        start = ((epoch // self.shift_every) * (n // 4)) % n
+        # rank r (hottest first) -> record index (start + r) % n
+        p = np.empty(n)
+        ranks = (np.arange(n) + start) % n
+        p[ranks] = self.base_probs
+        return p
+
+
+class FlashCrowd(Scenario):
+    """Uniform background; epochs [t0, t1) send ``crowd_frac`` of traffic
+    to a ``crowd_records``-wide contiguous key block."""
+
+    name = "flash_crowd"
+
+    def __init__(self, cfg: ScenarioConfig, *, t0: int = 4, t1: int = 8,
+                 crowd_frac: float = 0.7, crowd_records: int = 32):
+        super().__init__(cfg, theta=0.0)
+        self.t0, self.t1 = t0, t1
+        self.crowd_frac = crowd_frac
+        self.crowd_records = min(crowd_records, cfg.n_records)
+
+    def record_probs(self, epoch: int) -> np.ndarray:
+        n = self.cfg.n_records
+        p = np.full(n, 1.0 / n)
+        if self.t0 <= epoch < self.t1:
+            crowd = np.zeros(n)
+            lo = (n // 2) % max(n - self.crowd_records, 1)
+            crowd[lo:lo + self.crowd_records] = 1.0 / self.crowd_records
+            p = (1 - self.crowd_frac) * p + self.crowd_frac * crowd
+        return p / p.sum()
+
+
+class Diurnal(Scenario):
+    """Fixed Zipf heat; read ratio swings sinusoidally over the run
+    (read-heavy 'day' to write-heavy 'night')."""
+
+    name = "diurnal"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.9,
+                 lo: float = 0.5, hi: float = 0.95, period: int | None = None):
+        super().__init__(cfg, theta=theta)
+        self.lo, self.hi = lo, hi
+        self.period = period or cfg.n_epochs
+
+    def read_ratio(self, epoch: int) -> float:
+        phase = 2.0 * np.pi * epoch / max(self.period, 1)
+        return self.lo + (self.hi - self.lo) * 0.5 * (1.0 + np.sin(phase))
+
+
+class NodeFailure(Scenario):
+    """Steady Zipf load with a node failure mid-run (optional recovery)."""
+
+    name = "node_failure"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.99,
+                 fail_epoch: int = 4, fail_node: int = 0,
+                 recover_epoch: int | None = None):
+        super().__init__(cfg, theta=theta)
+        self.fail_epoch = fail_epoch
+        self.fail_node = fail_node
+        self.recover_epoch = recover_epoch
+
+    def events(self, epoch: int) -> list[tuple[str, int]]:
+        ev = []
+        if epoch == self.fail_epoch:
+            ev.append(("fail", self.fail_node))
+        if self.recover_epoch is not None and epoch == self.recover_epoch:
+            ev.append(("recover", self.fail_node))
+        return ev
+
+
+SCENARIOS = {
+    "stationary": Scenario,
+    "shifting_hotspot": ShiftingHotspot,
+    "flash_crowd": FlashCrowd,
+    "diurnal": Diurnal,
+    "node_failure": NodeFailure,
+}
+
+
+def make_scenario(name: str, cfg: ScenarioConfig | None = None, **kw) -> Scenario:
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; pick from {sorted(SCENARIOS)}")
+    return SCENARIOS[name](cfg or ScenarioConfig(), **kw)

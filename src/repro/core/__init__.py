@@ -3,12 +3,23 @@
 The paper's contribution (in-switch coordination, chain replication,
 statistics-driven migration, hierarchical indexing) as a composable JAX
 library.  See DESIGN.md for the P4-switch -> TPU-mesh mapping.
+
+:mod:`repro.cluster` composes these parts into the closed adaptive-
+balancing loop of paper §5.1 (epoch driver + policy zoo + time-varying
+scenario library).
 """
 
 from repro.core import keys
 from repro.core.keys import OP_GET, OP_PUT, OP_DEL, OP_SCAN, hash_key
 from repro.core.directory import Directory, make_directory, lookup_range, node_load
-from repro.core.routing import QueryBatch, RoutingDecision, route, expand_scans, make_queries
+from repro.core.routing import (
+    QueryBatch,
+    RoutingDecision,
+    route,
+    route_load_aware,
+    expand_scans,
+    make_queries,
+)
 from repro.core.store import StoreState, Responses, make_store, apply_routed, store_fill
 from repro.core.coordination import (
     LatencyModel,
@@ -35,7 +46,8 @@ from repro.core.dist_store import DistConfig, make_dist_apply
 __all__ = [
     "keys", "OP_GET", "OP_PUT", "OP_DEL", "OP_SCAN", "hash_key",
     "Directory", "make_directory", "lookup_range", "node_load",
-    "QueryBatch", "RoutingDecision", "route", "expand_scans", "make_queries",
+    "QueryBatch", "RoutingDecision", "route", "route_load_aware",
+    "expand_scans", "make_queries",
     "StoreState", "Responses", "make_store", "apply_routed", "store_fill",
     "LatencyModel", "HopPlan", "plan_hops", "simulate", "simulate_closed_loop",
     "simulate_reference", "simulate_closed_loop_reference", "stack_plans", "des",

@@ -56,6 +56,37 @@ class Controller:
             hash_partitioned=self.hash_partitioned,
         )
 
+    def refresh(self, live: Directory) -> Directory:
+        """Graft the control-plane tables onto a *live* device directory.
+
+        The data plane keeps bumping the statistics registers between
+        controller pulls; a control update (balance / widen_chain /
+        failure splice) must not clobber them mid-period —
+        ``stats.pull_report`` is the **only** reset path.  This returns a
+        directory with the controller's bounds/chains/chain_len/node_addr
+        but the live directory's counters, and asserts the table shapes
+        still agree (a split changes R — pull a report and rebuild via
+        :meth:`directory` after splits).
+
+        Used by ``repro.cluster.epoch.EpochDriver`` so the jitted epoch
+        step sees shape-stable directories across control updates.
+        """
+        d = self._dir
+        if d["chains"].shape != tuple(live.chains.shape):
+            raise ValueError(
+                f"directory shape changed ({tuple(live.chains.shape)} -> "
+                f"{d['chains'].shape}); pull a report and rebuild via .directory()"
+            )
+        return Directory(
+            bounds=jnp.asarray(d["bounds"]),
+            chains=jnp.asarray(d["chains"]),
+            chain_len=jnp.asarray(d["chain_len"]),
+            node_addr=jnp.asarray(d["node_addr"]),
+            read_count=live.read_count,
+            write_count=live.write_count,
+            hash_partitioned=self.hash_partitioned,
+        )
+
     @property
     def num_nodes(self) -> int:
         return self._dir["node_addr"].shape[0]
@@ -63,6 +94,27 @@ class Controller:
     @property
     def num_ranges(self) -> int:
         return self._dir["chains"].shape[0]
+
+    @property
+    def r_max(self) -> int:
+        return self._dir["chains"].shape[1]
+
+    def live_nodes(self) -> list[int]:
+        return [n for n in range(self.num_nodes) if n not in self.failed]
+
+    def chain_lengths(self) -> np.ndarray:
+        """(R,) copy of the live chain lengths (policy introspection)."""
+        return self._dir["chain_len"].copy()
+
+    def chain_nodes(self, ridx: int) -> np.ndarray:
+        """(r_max,) copy of record ``ridx``'s chain slots (NO_NODE padded)."""
+        return self._dir["chains"][ridx].copy()
+
+    def range_span(self, ridx: int) -> tuple[int, int]:
+        """Inclusive [lo, hi] key span of record ``ridx`` (public form of
+        the internal helper; policy/metric layers should use this rather
+        than reading ``_dir`` directly)."""
+        return self._range_span(ridx)
 
     # ------------------------------------------------------------------
     # load balancing (paper §5.1): greedy hottest-range -> coolest-node
@@ -104,6 +156,57 @@ class Controller:
             heat[ridx] = 0.0
             self.log.append(f"balance: range {ridx} pos {pos}: node {hot_node} -> {cold_node}")
         return ops
+
+    # ------------------------------------------------------------------
+    # selective replication (repro.cluster): widen a hot chain in place
+    # ------------------------------------------------------------------
+    def widen_chain(self, ridx: int, node_load: np.ndarray) -> MigrationOp | None:
+        """Append a replica to chain ``ridx`` (hot-range selective replication).
+
+        Picks the least-loaded live node not already in the chain, appends
+        it at the tail slot, and returns the repair-copy op that populates
+        it.  No-op (returns None) when the chain is already at ``r_max``
+        or no candidate node exists.  Array shapes never change — only
+        ``chain_len[ridx]`` and one chain slot — so the data-plane step
+        stays compiled.  Pays off only with load-aware read spreading
+        (``routing.route_load_aware``): tail-only reads would all move to
+        the newcomer instead of dividing across the chain.
+        """
+        d = self._dir
+        clen = int(d["chain_len"][ridx])
+        if clen >= self.r_max:
+            return None
+        chain = d["chains"][ridx]
+        current = set(int(c) for c in chain[:clen])
+        candidates = [n for n in self.live_nodes() if n not in current]
+        if not candidates or clen == 0:
+            return None
+        newcomer = min(candidates, key=lambda n: node_load[n])
+        chain[clen] = newcomer
+        d["chain_len"][ridx] = clen + 1
+        lo, hi = self._range_span(ridx)
+        self.log.append(f"widen: range {ridx} replica {newcomer} (r={clen + 1})")
+        return MigrationOp(lo=lo, hi=hi, src=int(chain[0]), dst=newcomer, kind="copy")
+
+    def narrow_chain(self, ridx: int, base_replication: int) -> MigrationOp | None:
+        """Drop the widened tail replica of chain ``ridx`` (cool-down).
+
+        Inverse of :meth:`widen_chain`: shrinks the chain back toward
+        ``base_replication`` by removing the last replica.  The removed
+        node keeps its copy (no data movement is strictly needed for
+        correctness); a 'move' op is returned so the data mover reclaims
+        the space.
+        """
+        d = self._dir
+        clen = int(d["chain_len"][ridx])
+        if clen <= base_replication or clen <= 1:
+            return None
+        victim = int(d["chains"][ridx, clen - 1])
+        d["chains"][ridx, clen - 1] = NO_NODE
+        d["chain_len"][ridx] = clen - 1
+        lo, hi = self._range_span(ridx)
+        self.log.append(f"narrow: range {ridx} dropped replica {victim} (r={clen - 1})")
+        return MigrationOp(lo=lo, hi=hi, src=victim, dst=victim, kind="reclaim")
 
     # ------------------------------------------------------------------
     # failure handling (paper §5.2): splice, then restore replication
@@ -151,7 +254,14 @@ class Controller:
 
     def handle_switch_failure(self, rack_nodes: list[int]) -> list[MigrationOp]:
         """Paper §5.2: a failed switch makes its whole rack unreachable —
-        treat every node behind it as failed."""
+        treat every node behind it as failed.
+
+        The whole rack is marked dead *before* any chain is spliced:
+        splicing node-by-node would let the re-replication step pick a
+        repair target behind the same dead switch (wasted copies to a
+        node about to be spliced out itself).
+        """
+        self.failed.update(rack_nodes)
         ops: list[MigrationOp] = []
         for n in rack_nodes:
             ops.extend(self.handle_node_failure(n))

@@ -103,13 +103,26 @@ def plan_hops(
     *,
     rng: jax.Array,
     num_nodes: int,
+    write_chain_cap: int | None = None,
 ) -> HopPlan:
-    """Build the per-query hop plan for a coordination model."""
+    """Build the per-query hop plan for a coordination model.
+
+    ``write_chain_cap`` bounds the number of chain members on a write's
+    *client-visible* path: members beyond the cap are lazily-refreshed
+    read replicas (the ``repro.cluster`` selective-replication design —
+    chain semantics hold on the base prefix, widened replicas sync off
+    the reply path via the controller's periodic refresh copies, whose
+    traffic the cluster metrics charge as migration bytes).  ``None``
+    (default) keeps the paper's strict full-chain write path.
+    """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     B, r_max = decision.chain.shape
     is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
-    live = jnp.arange(r_max)[None, :] < decision.chain_len[:, None]
+    visit_len = decision.chain_len
+    if write_chain_cap is not None:
+        visit_len = jnp.minimum(visit_len, write_chain_cap)
+    live = jnp.arange(r_max)[None, :] < visit_len[:, None]
 
     # chain visit sequence: writes walk head..tail, reads visit the tail only
     write_nodes = jnp.where(live, decision.chain, NO_HOP)           # (B, r)
@@ -124,7 +137,7 @@ def plan_hops(
     needs_lookup = (
         is_write[:, None]
         & (chain_nodes != NO_HOP)
-        & (jnp.arange(r_max)[None, :] < (decision.chain_len - 1)[:, None])
+        & (jnp.arange(r_max)[None, :] < (visit_len - 1)[:, None])
     )
     lookup_cost = jnp.where(needs_lookup, model.lookup, 0.0)
 

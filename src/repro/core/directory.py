@@ -91,6 +91,7 @@ def make_directory(
     hash_partitioned: bool = False,
     num_pods: int = 1,
     seed: int = 0,
+    r_max: int | None = None,
 ) -> Directory:
     """Build the initial directory (host side; the controller owns layout).
 
@@ -99,9 +100,18 @@ def make_directory(
     node appears at every chain position equally often (node i is head of
     R/N ranges, mid replica of R/N, tail of R/N, ...), which is the paper's
     24-sub-range-per-node arrangement generalized.
+
+    ``r_max`` reserves chain-slot headroom beyond ``replication`` so the
+    control plane (``Controller.widen_chain``, driven by the
+    ``repro.cluster`` selective-replication policy) can widen hot chains
+    without changing any array shape — a requirement for the cluster
+    epoch step to stay compiled across control updates.
     """
     if replication > num_nodes:
         raise ValueError(f"replication {replication} > num_nodes {num_nodes}")
+    r_max = replication if r_max is None else r_max
+    if r_max < replication:
+        raise ValueError(f"r_max {r_max} < replication {replication}")
     # Equal sub-ranges over the full uint32 matching-value space.
     edges = np.linspace(0, K.KEY_SPACE, num_ranges + 1)
     bounds = np.minimum(np.round(edges), K.KEY_SPACE - 1).astype(np.uint32)
@@ -111,7 +121,7 @@ def make_directory(
     # Chain placement: stride the replica list so chain position p of range i
     # is node (i + p * stride) % N — every node serves every position.
     stride = max(1, num_nodes // replication)
-    chains = np.full((num_ranges, replication), NO_NODE, dtype=np.int32)
+    chains = np.full((num_ranges, r_max), NO_NODE, dtype=np.int32)
     for i in range(num_ranges):
         for p in range(replication):
             chains[i, p] = (i + p * stride) % num_nodes

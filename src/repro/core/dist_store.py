@@ -23,7 +23,10 @@ Two routing strategies, both bit-identical to the single-program oracle
     replica chain in ``r`` sequential all_to_all rounds — the literal chain
     replication dataflow of paper Fig 9(a).
 
-The serving engine reuses ``bucket_a2a`` for KV-cache page routing.
+The serving engine reuses ``bucket_a2a`` for KV-cache page routing, and
+the ``repro.cluster`` epoch driver uses this module as its ``dist``
+backend (``DistConfig.read_spread`` turns on the load-aware p2c read
+path, ``return_decision`` feeds the DES hop planner).
 """
 
 from __future__ import annotations
@@ -97,6 +100,14 @@ class DistConfig:
     strategy: str = "bucket_a2a"  # or "allgather"
     bucket_cap: int = 64          # per-(source,target) queue bound
     max_scan_results: int = 8
+    # power-of-two-choices read spreading over chain replicas
+    # (routing.route_load_aware; the repro.cluster adaptive read path).
+    # Changes the apply signature: (store, directory, load_reg, q, rng)
+    #   -> (store, responses, directory', load_reg', metrics)
+    read_spread: bool = False
+    # include the routing decision (target/chain/chain_len, sharded) in the
+    # metrics dict so a caller can build DES hop plans without re-routing
+    return_decision: bool = False
 
 
 def _local_slab(store: StoreState):
@@ -114,17 +125,34 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
     Signature of the returned fn:
       (store_sharded, directory_replicated, q_sharded)
         -> (store, responses_sharded, directory', metrics)
+
+    With ``cfg.read_spread`` (load-aware p2c reads, ``repro.cluster``):
+      (store, directory, load_reg, q, rng)
+        -> (store, responses, directory', load_reg', metrics)
+    where ``load_reg`` is the replicated (N,) node load register and the
+    same psum-delta trick used for the statistics counters keeps it
+    globally consistent.  ``cfg.return_decision`` adds the sharded routing
+    decision (target/chain/chain_len) to ``metrics`` so the caller can
+    build DES hop plans without routing a second time.
     """
     n_shards = mesh.shape[cfg.axis]
     axis = cfg.axis
+    spread = cfg.read_spread
 
-    def per_device(store: StoreState, directory: Directory, q: R.QueryBatch):
+    def per_device(store: StoreState, directory: Directory, q: R.QueryBatch,
+                   load_reg=None, rng=None):
         me = jax.lax.axis_index(axis)
         slab_keys, slab_vals = _local_slab(store)
 
         if cfg.strategy == "allgather":
             gq = jax.tree.map(lambda x: _ag(x, axis), q)
-            decision, directory = R.route(directory, gq)
+            if spread:
+                # identical rng on every device -> identical global decision
+                decision, directory, load_reg = R.route_load_aware(
+                    directory, gq, load_reg, rng
+                )
+            else:
+                decision, directory = R.route(directory, gq)
             new_keys, new_vals, dropped, resp = _apply_full(
                 slab_keys, slab_vals, gq, decision, me, cfg.max_scan_results
             )
@@ -146,15 +174,28 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             new_store = StoreState(
                 keys=new_keys[None], values=new_vals[None], overflow=store.overflow + dropped
             )
-            # counters were bumped identically everywhere; keep one copy
-            return new_store, resp, directory, {
+            metrics = {
                 "bucket_overflow": overflow,
                 "a2a_rounds": jnp.zeros((), jnp.int32),
             }
+            if cfg.return_decision:
+                metrics.update(_slice_decision(decision, me, q.opcode.shape[0]))
+            # counters were bumped identically everywhere; keep one copy
+            if spread:
+                return new_store, resp, directory, load_reg, metrics
+            return new_store, resp, directory, metrics
 
         # ---- bucket_a2a ----
         base_dir = directory
-        decision, directory = R.route(directory, q)
+        if spread:
+            base_load = load_reg
+            # distinct draws per device (each routes its own batch slice)
+            decision, directory, load_reg = R.route_load_aware(
+                directory, q, load_reg, jax.random.fold_in(rng, me)
+            )
+            load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
+        else:
+            decision, directory = R.route(directory, q)
         # counters were bumped from the *local* slice only; make the
         # statistics registers globally consistent (replicated out_spec)
         directory = dataclasses.replace(
@@ -238,7 +279,23 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             "bucket_overflow": (ovf_r + ovf_w).astype(jnp.int32),
             "a2a_rounds": jnp.int32(1 + r_max),
         }
+        if cfg.return_decision:
+            metrics.update({
+                "target": decision.target,
+                "chain": decision.chain,
+                "chain_len": decision.chain_len,
+            })
+        if spread:
+            return new_store, resp, directory, load_reg, metrics
         return new_store, resp, directory, metrics
+
+    def _slice_decision(decision, me, Bl):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, me * Bl, Bl, axis=0)
+        return {
+            "target": sl(decision.target),
+            "chain": sl(decision.chain),
+            "chain_len": sl(decision.chain_len),
+        }
 
     def _ag(x, ax):
         return jax.lax.all_gather(x, ax, axis=0, tiled=True)
@@ -268,21 +325,42 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
         )
         return new_keys, new_vals, dropped, resp
 
-    in_specs = (
-        StoreState(keys=P(axis), values=P(axis), overflow=P(axis)),
-        jax.tree.map(lambda _: P(), directory_template),
-        R.QueryBatch(opcode=P(axis), key=P(axis), end_key=P(axis), value=P(axis)),
+    store_spec = StoreState(keys=P(axis), values=P(axis), overflow=P(axis))
+    dir_spec = jax.tree.map(lambda _: P(), directory_template)
+    q_spec = R.QueryBatch(opcode=P(axis), key=P(axis), end_key=P(axis), value=P(axis))
+    resp_spec = Responses(
+        value=P(axis), found=P(axis), scan_values=P(axis),
+        scan_keys=P(axis), scan_count=P(axis),
     )
-    out_specs = (
-        StoreState(keys=P(axis), values=P(axis), overflow=P(axis)),
-        Responses(
-            value=P(axis), found=P(axis), scan_values=P(axis),
-            scan_keys=P(axis), scan_count=P(axis),
-        ),
-        jax.tree.map(lambda _: P(), directory_template),
-        {"bucket_overflow": P(), "a2a_rounds": P()},
-    )
+    metric_spec = {"bucket_overflow": P(), "a2a_rounds": P()}
+    if cfg.return_decision:
+        metric_spec.update({"target": P(axis), "chain": P(axis), "chain_len": P(axis)})
 
-    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    if spread:
+        def entry(store, directory, load_reg, q, rng):
+            return per_device(store, directory, q, load_reg, rng)
+
+        in_specs = (store_spec, dir_spec, P(), q_spec, P())
+        out_specs = (store_spec, resp_spec, dir_spec, P(), metric_spec)
+    else:
+        def entry(store, directory, q):
+            return per_device(store, directory, q)
+
+        in_specs = (store_spec, dir_spec, q_spec)
+        out_specs = (store_spec, resp_spec, dir_spec, metric_spec)
+
+    fn = shard_map_compat(entry, mesh, in_specs, out_specs)
     return jax.jit(fn)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax releases: >= 0.5 exposes ``jax.shard_map``
+    (``check_vma=``); older releases only have
+    ``jax.experimental.shard_map.shard_map`` (``check_rep=``).  Shared by
+    every shard_map user in the repo (dist store, DP train step)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

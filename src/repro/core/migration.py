@@ -4,6 +4,8 @@ The controller (control plane) decides *what* moves; this module is the
 shim-layer data mover (paper §3 "handling TurboKV controller's data
 migration requests between the storage nodes").  All movers are jittable,
 static-shape array programs over :class:`~repro.core.store.StoreState`.
+The ``repro.cluster`` metrics charge each executed plan as migration
+traffic (entries counted on the source before the move).
 """
 
 from __future__ import annotations
@@ -23,8 +25,10 @@ EMPTY = K.EMPTY_KEY
 class MigrationOp:
     """One controller decision: move/copy [lo, hi] from src to dst.
 
-    kind: 'move' (migration — delete at src afterwards) or
-          'copy' (replica repair — src keeps its data).
+    kind: 'move' (migration — delete at src afterwards),
+          'copy' (replica repair / chain widening — src keeps its data), or
+          'reclaim' (chain narrowing — delete [lo, hi] at src, no copy;
+          dst is ignored).
     """
 
     lo: int
@@ -61,10 +65,29 @@ def apply_migration(store: StoreState, lo, hi, src: jnp.ndarray, dst: jnp.ndarra
     return StoreState(keys=keys, values=values, overflow=store.overflow.at[dst].add(dropped))
 
 
+def apply_reclaim(store: StoreState, lo, hi, node: jnp.ndarray) -> StoreState:
+    """Delete [lo, hi] at ``node`` (chain-narrowing space reclamation)."""
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    slab_keys = store.keys[node]
+    in_range = (slab_keys >= lo) & (slab_keys <= hi) & (slab_keys != EMPTY)
+    del_keys = jnp.where(in_range, slab_keys, EMPTY)
+    new_keys, new_vals = slab_delete(slab_keys, store.values[node], del_keys)
+    return StoreState(
+        keys=store.keys.at[node].set(new_keys),
+        values=store.values.at[node].set(new_vals),
+        overflow=store.overflow,
+    )
+
+
 def execute(store: StoreState, ops: list[MigrationOp]) -> StoreState:
     """Run a controller migration plan (host loop over jitted movers)."""
     for op in ops:
-        store = apply_migration(
-            store, op.lo, op.hi, jnp.int32(op.src), jnp.int32(op.dst), move=(op.kind == "move")
-        )
+        if op.kind == "reclaim":
+            store = apply_reclaim(store, op.lo, op.hi, jnp.int32(op.src))
+        else:
+            store = apply_migration(
+                store, op.lo, op.hi, jnp.int32(op.src), jnp.int32(op.dst),
+                move=(op.kind == "move"),
+            )
     return store

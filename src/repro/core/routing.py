@@ -79,17 +79,25 @@ class RoutingDecision:
     clength: jnp.ndarray
 
 
+def _match_and_fetch(directory: D.Directory, q: QueryBatch):
+    """Steps 1–3: matching value, range match, chain fetch."""
+    mval = K.matching_value(q.key, hash_partitioned=directory.hash_partitioned)
+    ridx = D.lookup_range(directory, mval)
+    chain, clen = D.chain_for(directory, ridx)
+    is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+    return ridx, chain, clen, is_write
+
+
 def route(directory: D.Directory, q: QueryBatch) -> tuple[RoutingDecision, D.Directory]:
     """Run the key-based routing action for a packet batch.
 
     Returns the routing decision and the directory with bumped counters
-    (the data-plane statistics module, §5.1).
+    (the data-plane statistics module, §5.1).  Reads always target the
+    chain tail (the paper's consistency point); for load-aware replica
+    spreading see :func:`route_load_aware` (the ``repro.cluster``
+    adaptive-balancing hot path).
     """
-    mval = K.matching_value(q.key, hash_partitioned=directory.hash_partitioned)
-    ridx = D.lookup_range(directory, mval)
-    chain, clen = D.chain_for(directory, ridx)
-
-    is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+    ridx, chain, clen, is_write = _match_and_fetch(directory, q)
     head = chain[:, 0]
     tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[:, None], axis=1)[:, 0]
     target = jnp.where(is_write, head, tail)
@@ -100,6 +108,69 @@ def route(directory: D.Directory, q: QueryBatch) -> tuple[RoutingDecision, D.Dir
 
     directory = D.bump_counters(directory, ridx, is_write)
     return RoutingDecision(ridx=ridx, target=target, chain=chain, chain_len=clen, clength=clength), directory
+
+
+def route_load_aware(
+    directory: D.Directory,
+    q: QueryBatch,
+    load_reg: jnp.ndarray,
+    rng: jax.Array,
+) -> tuple[RoutingDecision, D.Directory, jnp.ndarray]:
+    """Key-based routing with power-of-two-choices read spreading.
+
+    The switch keeps one load register per storage node (``load_reg``,
+    (N,) uint32 — op hits since the last controller pull).  Writes still
+    enter at the chain head (chain replication fixes the write path), but
+    a GET/SCAN samples **two** live chain positions and goes to the less
+    loaded of the two replicas — the classic power-of-two-choices rule,
+    evaluated entirely in the data plane.  This is what makes chain
+    *widening* (selective replication of hot ranges) pay off: with
+    tail-only reads every added replica is dead weight, with p2c the read
+    load divides across the whole chain.
+
+    All live chain members hold the data (writes apply along the whole
+    chain within a batch, §4.1.2), so any replica answers correctly; the
+    chain-tail dirty-read subtlety of an asynchronous chain does not
+    arise in the batch-converged store.
+
+    Returns (decision, directory', load_reg') — counters and load
+    registers bumped, shapes unchanged (jit-stable).
+    """
+    ridx, chain, clen, is_write = _match_and_fetch(directory, q)
+    B, r_max = chain.shape
+    head = chain[:, 0]
+
+    # two independent uniform picks over the live chain positions
+    u = jax.random.randint(rng, (B, 2), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+    c = jnp.maximum(clen, 1)
+    p1, p2 = u[:, 0] % c, u[:, 1] % c
+    n1 = jnp.take_along_axis(chain, p1[:, None], axis=1)[:, 0]
+    n2 = jnp.take_along_axis(chain, p2[:, None], axis=1)[:, 0]
+    s1, s2 = jnp.maximum(n1, 0), jnp.maximum(n2, 0)  # NO_NODE guard
+    read_target = jnp.where(load_reg[s1] <= load_reg[s2], n1, n2)
+    target = jnp.where(is_write, head, read_target)
+    clength = jnp.where(is_write, clen + 1, 2)
+
+    directory = D.bump_counters(directory, ridx, is_write)
+
+    # load-register bump: reads hit their chosen replica, writes hit every
+    # live chain member (same units as directory.node_load)
+    live = (jnp.arange(r_max)[None, :] < clen[:, None]) & (chain != D.NO_NODE)
+    w_hit = live & is_write[:, None]
+    safe_chain = jnp.where(w_hit, chain, 0)
+    ones = jnp.ones((B,), jnp.uint32)
+    load_reg = load_reg.at[safe_chain.reshape(-1)].add(
+        w_hit.reshape(-1).astype(jnp.uint32)
+    )
+    # mode="drop": a NO_NODE target (fully-spliced chain) charges nobody
+    load_reg = load_reg.at[target].add(
+        jnp.where(is_write, jnp.uint32(0), ones), mode="drop"
+    )
+
+    decision = RoutingDecision(
+        ridx=ridx, target=target, chain=chain, chain_len=clen, clength=clength
+    )
+    return decision, directory, load_reg
 
 
 def expand_scans(

@@ -7,6 +7,12 @@ bumped inside the jitted step by ``routing.route``; this module packages the
 periodic report the controller pulls, plus an optional count-min sketch used
 by the beyond-paper memory optimization (DESIGN.md §7) for very large range
 counts.
+
+``pull_report`` is the **only** path that resets the counters: control
+updates applied via ``Controller.refresh`` graft new tables onto the live
+directory and leave the registers untouched (the ``repro.cluster`` epoch
+driver depends on this mid-period survival; asserted in
+``tests/test_cluster.py``).
 """
 
 from __future__ import annotations

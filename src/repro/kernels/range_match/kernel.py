@@ -68,6 +68,131 @@ def _kernel(mvals_ref, opcodes_ref, bounds_ref, chains_ref, clen_ref,
     chain_ref[...] = chain
 
 
+def _kernel_spread(mvals_ref, opcodes_ref, u1_ref, u2_ref, bounds_ref,
+                   chains_ref, clen_ref, loads_ref,
+                   ridx_ref, target_ref, chain_ref,
+                   *, num_ranges: int, r_max: int):
+    """Match-action stage with power-of-two-choices read spreading.
+
+    Mirrors ``core.routing.route_load_aware``: writes -> chain head; reads
+    pick two live chain positions (from the pre-drawn uniforms u1/u2) and
+    go to the replica with the smaller load register.  ``loads_ref`` is
+    the (1, Npad) per-node load register tile, whole in VMEM.
+    """
+    mvals = mvals_ref[...]
+    opcodes = opcodes_ref[...]
+    u1 = u1_ref[...]                  # (Bb, 128) int32 raw uniform draws
+    u2 = u2_ref[...]
+    bounds = bounds_ref[...]
+    chains = chains_ref[...]
+    clen = clen_ref[...]
+    loads = loads_ref[...]            # (1, Npad) int32 load registers
+
+    ge = (mvals[:, :, None] >= bounds[0][None, None, :]).astype(jnp.int32)
+    ridx = jnp.sum(ge, axis=-1)
+
+    rpad = bounds.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, rpad), 2)
+    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)
+    chain_cols = []
+    for p in range(r_max):
+        chain_cols.append(jnp.sum(onehot * chains[p][None, None, :], axis=-1))
+    chain = jnp.stack(chain_cols, axis=0)
+    clen_b = jnp.sum(onehot * clen[0][None, None, :], axis=-1)
+
+    # p2c candidate positions among the live chain prefix
+    c = jnp.maximum(clen_b, 1)
+    p1 = u1 % c
+    p2 = u2 % c
+    # chain[p] select over static positions (r_max small)
+    n1 = chain[0]
+    n2 = chain[0]
+    for p in range(1, r_max):
+        n1 = jnp.where(p1 == p, chain[p], n1)
+        n2 = jnp.where(p2 == p, chain[p], n2)
+    # load-register gather: one-hot contraction over the node axis
+    npad = loads.shape[-1]
+    niota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, npad), 2)
+    l1 = jnp.sum((jnp.maximum(n1, 0)[:, :, None] == niota).astype(jnp.int32)
+                 * loads[0][None, None, :], axis=-1)
+    l2 = jnp.sum((jnp.maximum(n2, 0)[:, :, None] == niota).astype(jnp.int32)
+                 * loads[0][None, None, :], axis=-1)
+    read_target = jnp.where(l1 <= l2, n1, n2)
+
+    is_write = (opcodes == 1) | (opcodes == 2)
+    target = jnp.where(is_write, chain[0], read_target)
+
+    ridx_ref[...] = ridx
+    target_ref[...] = target
+    chain_ref[...] = chain
+
+
+def range_match_spread_pallas(
+    mvals: jnp.ndarray,            # (B,) uint32 matching values
+    opcodes: jnp.ndarray,          # (B,) int32
+    u1: jnp.ndarray,               # (B,) int32 nonneg uniform draws
+    u2: jnp.ndarray,               # (B,) int32
+    interior_bounds: jnp.ndarray,  # (Rpad,) uint32 MAX-padded
+    chains: jnp.ndarray,           # (r_max, Rpad) int32
+    chain_len: jnp.ndarray,        # (Rpad,) int32
+    loads: jnp.ndarray,            # (Npad,) int32 per-node load registers
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Launch the load-aware match-action kernel (p2c read spreading).
+
+    Same contract as :func:`range_match_pallas` plus the pre-drawn p2c
+    uniforms and the node load registers; Npad must be a lane multiple.
+    """
+    B = mvals.shape[0]
+    rows = B // LANES
+    r_max, rpad = chains.shape
+    npad = loads.shape[0]
+
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_kernel_spread, num_ranges=rpad, r_max=r_max)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((r_max, rows, LANES), jnp.int32),
+    )
+    whole = lambda i: (0, 0)
+    tile = lambda i: (i, 0)
+    ridx, target, chain = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((1, rpad), whole),
+            pl.BlockSpec((r_max, rpad), lambda i: (0, 0)),
+            pl.BlockSpec((1, rpad), whole),
+            pl.BlockSpec((1, npad), whole),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((r_max, block_rows, LANES), lambda i: (0, i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        mvals.reshape(rows, LANES),
+        opcodes.reshape(rows, LANES),
+        u1.reshape(rows, LANES),
+        u2.reshape(rows, LANES),
+        interior_bounds.reshape(1, rpad),
+        chains,
+        chain_len.reshape(1, rpad),
+        loads.reshape(1, npad),
+    )
+    return ridx.reshape(B), target.reshape(B), chain.reshape(r_max, B)
+
+
 def range_match_pallas(
     mvals: jnp.ndarray,        # (B,) uint32 matching values
     opcodes: jnp.ndarray,      # (B,) int32

@@ -26,8 +26,13 @@ import jax.numpy as jnp
 
 from repro.core import keys as K
 from repro.core.directory import Directory
-from repro.kernels.range_match.kernel import range_match_pallas, LANES, DEFAULT_BLOCK_ROWS
-from repro.kernels.range_match.ref import range_match_ref
+from repro.kernels.range_match.kernel import (
+    range_match_pallas,
+    range_match_spread_pallas,
+    LANES,
+    DEFAULT_BLOCK_ROWS,
+)
+from repro.kernels.range_match.ref import range_match_ref, range_match_spread_ref
 
 
 def default_interpret() -> bool:
@@ -151,6 +156,88 @@ def range_match(
     bounds_p, chains_p, clen_p = pack_tables_cached(directory)
     return _range_match_packed(
         bounds_p, chains_p, clen_p, keys, opcodes,
+        hash_partitioned=bool(directory.hash_partitioned),
+        use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("hash_partitioned", "use_pallas", "interpret", "block_rows"),
+)
+def _range_match_spread_packed(
+    bounds_p,
+    chains_p,
+    clen_p,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    rng,
+    *,
+    hash_partitioned: bool,
+    use_pallas: bool,
+    interpret: bool,
+    block_rows: int,
+):
+    B = keys.shape[0]
+    mvals = K.matching_value(keys, hash_partitioned=hash_partitioned)
+    # identical p2c draw to routing.route_load_aware: one (B, 2) randint
+    u = jax.random.randint(rng, (B, 2), 0, jnp.iinfo(jnp.int32).max,
+                           dtype=jnp.int32)
+    u1, u2 = u[:, 0], u[:, 1]
+
+    tile = LANES * block_rows
+    Bp = ((B + tile - 1) // tile) * tile
+    if Bp != B:
+        z = jnp.zeros((Bp - B,), jnp.int32)
+        mvals = jnp.concatenate([mvals, jnp.zeros((Bp - B,), mvals.dtype)])
+        opcodes = jnp.concatenate([opcodes, z])
+        u1 = jnp.concatenate([u1, z])
+        u2 = jnp.concatenate([u2, z])
+
+    n = load_reg.shape[0]
+    npad = max(LANES, ((n + LANES - 1) // LANES) * LANES)
+    loads_p = jnp.concatenate(
+        [load_reg.astype(jnp.int32), jnp.zeros((npad - n,), jnp.int32)]
+    )
+
+    if use_pallas:
+        ridx, target, chain = range_match_spread_pallas(
+            mvals, opcodes.astype(jnp.int32), u1, u2,
+            bounds_p, chains_p, clen_p, loads_p,
+            block_rows=block_rows, interpret=interpret,
+        )
+    else:
+        ridx, target, chain = range_match_spread_ref(
+            mvals, opcodes.astype(jnp.int32), u1, u2,
+            bounds_p, chains_p, clen_p, loads_p,
+        )
+    return ridx[:B], target[:B], chain[:, :B]
+
+
+def range_match_spread(
+    directory: Directory,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    rng,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Load-aware routing hot path: p2c read spreading over chain replicas.
+
+    Identical target selection to ``core.routing.route_load_aware`` (sans
+    counter/load-register bumps) given the same ``rng`` — asserted in
+    ``tests/test_cluster.py``.  ``load_reg`` is the (N,) per-node load
+    register the cluster epoch driver threads through the data plane.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    bounds_p, chains_p, clen_p = pack_tables_cached(directory)
+    return _range_match_spread_packed(
+        bounds_p, chains_p, clen_p, keys, opcodes, load_reg, rng,
         hash_partitioned=bool(directory.hash_partitioned),
         use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
     )

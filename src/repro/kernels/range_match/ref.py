@@ -27,3 +27,36 @@ def range_match_ref(
     is_write = (opcodes == 1) | (opcodes == 2)
     target = jnp.where(is_write, head, tail)
     return ridx, target, chain
+
+
+def range_match_spread_ref(
+    mvals: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    u1: jnp.ndarray,
+    u2: jnp.ndarray,
+    interior_bounds: jnp.ndarray,
+    chains: jnp.ndarray,
+    chain_len: jnp.ndarray,
+    loads: jnp.ndarray,
+):
+    """jnp oracle for kernel.range_match_spread_pallas (p2c read spreading).
+
+    Mirrors ``core.routing.route_load_aware`` target selection given the
+    same pre-drawn uniforms u1/u2 and node load registers.
+    """
+    ridx = jnp.sum(
+        (mvals[:, None] >= interior_bounds[None, :]).astype(jnp.int32), axis=-1
+    )
+    chain = chains[:, ridx]
+    clen = chain_len[ridx]
+    head = chain[0]
+    c = jnp.maximum(clen, 1)
+    p1, p2 = u1 % c, u2 % c
+    n1 = jnp.take_along_axis(chain, p1[None, :], axis=0)[0]
+    n2 = jnp.take_along_axis(chain, p2[None, :], axis=0)[0]
+    l1 = loads[jnp.maximum(n1, 0)]
+    l2 = loads[jnp.maximum(n2, 0)]
+    read_target = jnp.where(l1 <= l2, n1, n2)
+    is_write = (opcodes == 1) | (opcodes == 2)
+    target = jnp.where(is_write, head, read_target)
+    return ridx, target, chain

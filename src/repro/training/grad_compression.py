@@ -46,9 +46,9 @@ def compressed_psum(grads, err, axis_names):
         deq = dequantize_int8(q, scale)
         new_e = gf - deq
         total = jax.lax.psum(deq, axis_names)
-        n = 1
-        for ax in (axis_names if isinstance(axis_names, tuple) else (axis_names,)):
-            n = n * jax.lax.axis_size(ax)
+        # psum of 1 == axis size product; works on every jax release
+        # (jax.lax.axis_size only exists on >= 0.5)
+        n = jax.lax.psum(1, axis_names)
         return (total / n).astype(g.dtype), new_e.astype(e.dtype)
 
     out = jax.tree.map(one, grads, err)

@@ -142,13 +142,14 @@ def make_dp_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, batch_template)
             metrics,
         )
 
+    from repro.core.dist_store import shard_map_compat
+
     dp = P(tcfg.dp_axes)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_step,
-        mesh=mesh,
-        in_specs=(P(), dp, jax.tree.map(lambda _: dp, batch_template)),
-        out_specs=(P(), dp, P()),
-        check_vma=False,
+        mesh,
+        (P(), dp, jax.tree.map(lambda _: dp, batch_template)),
+        (P(), dp, P()),
     )
     return jax.jit(fn)
 

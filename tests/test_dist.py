@@ -16,8 +16,19 @@ ENV = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
        "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
 
 
+# jax < 0.5 has no jax.sharding.AxisType / make_mesh(axis_types=...)
+MESH_COMPAT = """
+import jax
+def compat_mesh(shape, names):
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return jax.make_mesh(shape, names)
+    return jax.make_mesh(shape, names, axis_types=(at.Auto,) * len(names))
+"""
+
+
 def run_sub(code: str):
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    r = subprocess.run([sys.executable, "-c", MESH_COMPAT + textwrap.dedent(code)],
                        env=ENV, capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     return r.stdout
@@ -28,7 +39,7 @@ def test_dist_store_matches_oracle():
         import jax, jax.numpy as jnp, numpy as np
         from repro import core as C
 
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         d = C.make_directory(16, 8, 3)
         store = C.make_store(8, 64, 4)
         rng = np.random.default_rng(0)
@@ -56,7 +67,7 @@ def test_dist_store_bucket_overflow_counted():
         import jax, jax.numpy as jnp, numpy as np
         from repro import core as C
 
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         d = C.make_directory(16, 8, 1)
         store = C.make_store(8, 256, 1)
         # aim every query at one key -> one target shard; cap tiny -> overflow
@@ -66,6 +77,40 @@ def test_dist_store_bucket_overflow_counted():
         apply_fn = C.make_dist_apply(mesh, d, C.DistConfig(strategy="bucket_a2a", bucket_cap=2))
         _, resp, _, m = apply_fn(store, d, q)
         assert int(jnp.sum(m["bucket_overflow"])) > 0
+        print("ok")
+    """)
+
+
+def test_dist_store_read_spread_matches_tail_reads():
+    """p2c read spreading: same PUT/GET results, targets spread, load
+    registers and decision metrics globally consistent."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import core as C
+
+        mesh = compat_mesh((8,), ("data",))
+        d = C.make_directory(16, 8, 3, r_max=5)
+        store = C.make_store(8, 64, 4)
+        rng = np.random.default_rng(0)
+        B = 64
+        keys = jnp.asarray(rng.integers(0, 2**32-2, B), jnp.uint32)
+        vals = jnp.asarray(rng.normal(size=(B,4)), jnp.float32)
+        qput = C.make_queries(keys, jnp.full((B,), C.OP_PUT), vals)
+        qget = C.make_queries(keys, jnp.full((B,), C.OP_GET), value_dim=4)
+        for strat in ("allgather", "bucket_a2a"):
+            cfg = C.DistConfig(strategy=strat, bucket_cap=32,
+                               read_spread=True, return_decision=True)
+            apply_fn = C.make_dist_apply(mesh, d, cfg)
+            load = jnp.zeros((8,), jnp.uint32)
+            s1, _, d1, load, m = apply_fn(store, d, load, qput, jax.random.PRNGKey(1))
+            s2, resp, d2, load, m = apply_fn(s1, d1, load, qget, jax.random.PRNGKey(2))
+            assert bool(resp.found.all()), strat
+            assert bool(jnp.allclose(resp.value, vals, atol=1e-6)), strat
+            # decision metrics cover the whole batch
+            assert m["target"].shape == (B,), strat
+            assert m["chain"].shape[0] == B, strat
+            # reads spread beyond the 8 tails: register sum == B reads
+            assert int(jnp.sum(load)) >= B, strat
         print("ok")
     """)
 
@@ -81,7 +126,7 @@ def test_compressed_dp_train_step():
         from repro.training.optimizer import OptConfig
 
         cfg = get_config("qwen2-1.5b").reduced()
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=40),
                            remat=False, grad_compression=True, dp_axes=("data",))
         state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
@@ -112,8 +157,7 @@ def test_sharded_train_step_lowers_on_2x4():
         from repro.launch.input_specs import batch_specs_for
 
         cfg = get_config("qwen2-1.5b").reduced()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat_mesh((2, 4), ("data", "model"))
         tcfg = TrainConfig(opt=OptConfig(), remat=True, microbatches=2)
         state = abstract_train_state(cfg, tcfg)
         shape = ShapeSpec("tiny", 64, 8, "train")
@@ -150,8 +194,7 @@ def test_real_sharded_execution_matches_single_device():
         # single-device reference
         s_ref, m_ref = jax.jit(step)(state, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat_mesh((2, 4), ("data", "model"))
         ssp = SH.state_specs(jax.eval_shape(lambda: state), mesh, dp_axes=("data",))
         bsp = SH.batch_specs(jax.eval_shape(lambda: batch), ("data",))
         j = jax.jit(step, in_shardings=(SH.to_named(ssp, mesh), SH.to_named(bsp, mesh)))
