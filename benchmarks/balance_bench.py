@@ -1,40 +1,58 @@
-"""Adaptive-balancing benchmark: frozen vs migrate-only vs full-adaptive.
+"""Adaptive-balancing benchmark: the policy zoo over the scenario library.
 
 Runs the ``repro.cluster`` closed loop over the time-varying scenario
 library and emits one JSON row per (scenario × policy) run — the numbers
-behind BENCHMARKS.md §"Load balancing".  The acceptance gate of the
-cluster subsystem is checked here explicitly: on the Zipf-1.2
-shifting-hotspot scenario the full-adaptive policy must beat the
-frozen-directory baseline on **both** mean load imbalance (max/mean) and
-mean DES p99 latency, with the epoch device step compiled exactly once
-per scenario.
+behind BENCHMARKS.md §"Load balancing" and §"Hot-range splitting".  Two
+acceptance gates are checked explicitly:
+
+* **adaptive gate** (PR 2): on the Zipf-1.2 shifting hotspot,
+  ``full_adaptive`` must beat the frozen directory on both mean load
+  imbalance (max/mean) and mean DES p99 latency;
+* **splitting gate** (PR 3): on the Zipf-1.3 multi-hotspot workload,
+  ``split_hot`` must beat whole-range ``migrate`` on mean load imbalance
+  at **equal or fewer** migrated entries (hot-subset moves are priced by
+  the hot keys only), and every run's epoch step must compile exactly
+  once.
+
+Extras:
+
+* ``--service lognormal|pareto`` re-runs the matrix under seeded per-hop
+  service-time draws (``core.ServiceModel``) — the deterministic-service
+  rows hide self-similar burstiness;
+* ``--dist`` runs the dist-backend parity column (``make_dist_apply`` on
+  a forced 8-device host mesh, in a subprocess because jax pins the
+  device count at first init) and reports bucket-overflow retry rates
+  under switch queue pressure.
 
 Run: ``PYTHONPATH=src python -m benchmarks.balance_bench
-[--quick] [--scenarios a,b] [--policies x,y] [--json BENCH_balance.json]``
+[--quick] [--scenarios a,b] [--policies x,y] [--service kind] [--dist]
+[--json BENCH_balance.json]``
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
-from repro.cluster import (
-    ClusterConfig,
-    EpochDriver,
-    ScenarioConfig,
-    make_policy,
-    make_scenario,
-    summarize,
+DEFAULT_POLICIES = ("frozen", "migrate", "replicate", "split_hot", "full_adaptive")
+DEFAULT_SCENARIOS = (
+    "shifting_hotspot", "flash_crowd", "diurnal", "node_failure",
+    "multi_hotspot", "keyspace_growth",
 )
+DIST_SCENARIO = "flash_crowd"                 # switch queue pressure case
+DIST_POLICIES = ("frozen", "full_adaptive")
 
-DEFAULT_POLICIES = ("frozen", "migrate", "replicate", "full_adaptive")
-DEFAULT_SCENARIOS = ("shifting_hotspot", "flash_crowd", "diurnal", "node_failure")
 
-# the acceptance-gate cluster geometry: fine ranges so a Zipf-1.2 hot
-# block spans several chains, headroom for selective replication
-def cluster_config(quick: bool) -> ClusterConfig:
+# the acceptance-gate cluster geometry: fine ranges so a Zipf hot block
+# spans several chains, headroom for selective replication and splitting
+def cluster_config(quick: bool, service: str = "fixed"):
+    from repro.cluster import ClusterConfig
+    from repro.core import ServiceModel
+
     return ClusterConfig(
         num_nodes=8,
         num_ranges=32 if quick else 128,
@@ -43,10 +61,13 @@ def cluster_config(quick: bool) -> ClusterConfig:
         n_clients=32,
         imbalance_threshold=1.1,
         max_moves_per_round=8,
+        service_model=ServiceModel(kind=service),
     )
 
 
-def scenario_config(quick: bool) -> ScenarioConfig:
+def scenario_config(quick: bool):
+    from repro.cluster import ScenarioConfig
+
     if quick:
         return ScenarioConfig(n_epochs=4, epoch_ops=512, n_records=1024,
                               value_dim=4, seed=1, read_ratio=0.95)
@@ -54,45 +75,65 @@ def scenario_config(quick: bool) -> ScenarioConfig:
                           value_dim=4, seed=1, read_ratio=0.95)
 
 
-def scenario_kwargs(name: str, scfg: ScenarioConfig) -> dict:
+def scenario_kwargs(name: str, scfg) -> dict:
     mid = scfg.n_epochs // 2
     return {
         "shifting_hotspot": dict(theta=1.2, shift_every=max(scfg.n_epochs // 3, 1)),
         "flash_crowd": dict(t0=mid // 2, t1=mid + 1),
         "diurnal": {},
         "node_failure": dict(fail_epoch=mid, fail_node=0),
+        "multi_hotspot": dict(theta=1.3, n_hotspots=3,
+                              shift_every=max(scfg.n_epochs // 3, 1)),
+        "keyspace_growth": {},
         "stationary": {},
     }[name]
 
 
-def run_matrix(scenarios, policies, quick: bool, verbose: bool = True):
+def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
+               backend: str = "oracle", mesh=None, dist_cfg=None,
+               verbose: bool = True):
+    from repro.cluster import EpochDriver, make_policy, make_scenario, summarize
+
     rows = []
     for sname in scenarios:
         scfg = scenario_config(quick)
         for pname in policies:
             scen = make_scenario(sname, scfg, **scenario_kwargs(sname, scfg))
-            drv = EpochDriver(scen, make_policy(pname), cluster_config(quick))
+            drv = EpochDriver(scen, make_policy(pname),
+                              cluster_config(quick, service),
+                              backend=backend, mesh=mesh, dist_cfg=dist_cfg)
             t0 = time.perf_counter()
             epochs = drv.run()
             wall = time.perf_counter() - t0
             row = summarize(epochs)
             row["wall_s"] = round(wall, 3)
             row["traces"] = drv.traces
+            row["service"] = service
+            row["backend"] = backend
             rows.append(row)
             if verbose:
                 print(
                     f"{sname:18s} {pname:14s} imb {row['mean_imbalance']:5.2f} "
                     f"p99 {row['mean_p99']:6.1f} p50 {row['mean_p50']:6.1f} "
                     f"thr {row['mean_throughput']:.3f} "
-                    f"migB {row['total_migration_bytes']:8d} "
+                    f"ent {row['total_migration_entries']:6d} "
+                    f"retries {row['total_retries']:4d} "
                     f"traces {row['traces']}"
                 )
     return rows
 
 
-def check_acceptance(rows) -> list[str]:
-    """The cluster-subsystem acceptance gate (see ISSUE/BENCHMARKS.md)."""
-    by = {(r["scenario"], r["policy"]): r for r in rows}
+def check_acceptance(rows, *, quick: bool = False) -> list[str]:
+    """The cluster-subsystem acceptance gates (see ISSUE/BENCHMARKS.md).
+
+    ``quick`` (CI smoke sizes: 4 epochs) relaxes the splitting gate's
+    imbalance comparison to "no worse" — at smoke scale a couple of
+    control rounds cannot reliably separate the policies' imbalance
+    means, but the keys-moved advantage and the compile-once property
+    must hold at any size.
+    """
+    by = {(r["scenario"], r["policy"]): r for r in rows
+          if r.get("backend", "oracle") == "oracle"}
     problems = []
     f = by.get(("shifting_hotspot", "frozen"))
     a = by.get(("shifting_hotspot", "full_adaptive"))
@@ -107,6 +148,23 @@ def check_acceptance(rows) -> list[str]:
                 f"full_adaptive p99 {a['mean_p99']:.1f} !< "
                 f"frozen {f['mean_p99']:.1f}"
             )
+    # splitting gate: hot-subset control beats whole-range migration on
+    # imbalance without moving more data
+    m = by.get(("multi_hotspot", "migrate"))
+    s = by.get(("multi_hotspot", "split_hot"))
+    if m and s:
+        ok = (s["mean_imbalance"] <= m["mean_imbalance"] if quick
+              else s["mean_imbalance"] < m["mean_imbalance"])
+        if not ok:
+            problems.append(
+                f"split_hot imbalance {s['mean_imbalance']:.2f} !< "
+                f"migrate {m['mean_imbalance']:.2f}"
+            )
+        if not s["total_migration_entries"] <= m["total_migration_entries"]:
+            problems.append(
+                f"split_hot moved {s['total_migration_entries']} entries "
+                f"!<= migrate {m['total_migration_entries']}"
+            )
     for r in rows:
         if r["traces"] != 1:
             problems.append(
@@ -116,35 +174,104 @@ def check_acceptance(rows) -> list[str]:
     return problems
 
 
+def run_dist_parity(quick: bool) -> list[dict]:
+    """Dist-backend parity column in a subprocess (forced 8-device mesh).
+
+    jax pins the host device count at first init, so the parent process
+    (which already initialized jax for the oracle matrix) cannot host the
+    mesh itself.
+    """
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""),
+        "JAX_PLATFORMS": "cpu",
+    }
+    cmd = [sys.executable, "-m", "benchmarks.balance_bench", "--dist-worker"]
+    if quick:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if r.returncode != 0:
+        print(r.stdout)
+        print(r.stderr, file=sys.stderr)
+        raise RuntimeError("dist parity worker failed")
+    payload = json.loads(r.stdout.splitlines()[-1])
+    return payload["rows"]
+
+
+def dist_worker(quick: bool) -> int:
+    import jax
+    from repro.core import DistConfig
+
+    mesh = jax.make_mesh((8,), ("data",))
+    # a tight per-(source,target) queue bound so the flash crowd actually
+    # exercises switch queue pressure: overflowing queries are dropped
+    # and counted as client retries (the quantity this column reports)
+    dist_cfg = DistConfig(bucket_cap=16 if quick else 24)
+    rows = run_matrix([DIST_SCENARIO], list(DIST_POLICIES), quick,
+                      backend="dist", mesh=mesh, dist_cfg=dist_cfg,
+                      verbose=False)
+    print(json.dumps({"rows": rows}))
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS))
     ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES))
+    ap.add_argument("--service", default="fixed",
+                    choices=("fixed", "lognormal", "pareto"),
+                    help="per-hop service-time distribution (ServiceModel)")
+    ap.add_argument("--dist", action="store_true",
+                    help="also run the dist-backend parity column "
+                         "(8-device host mesh subprocess)")
+    ap.add_argument("--dist-worker", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: the forked mesh run
     ap.add_argument("--json", default=None, help="write rows to this path")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the acceptance gate (exploratory runs)")
     args = ap.parse_args(argv)
 
+    if args.dist_worker:
+        return dist_worker(args.quick)
+
     scenarios = [s for s in args.scenarios.split(",") if s]
     policies = [p for p in args.policies.split(",") if p]
-    rows = run_matrix(scenarios, policies, args.quick)
+    rows = run_matrix(scenarios, policies, args.quick, service=args.service)
+
+    if args.dist:
+        dist_rows = run_dist_parity(args.quick)
+        for r in dist_rows:
+            print(
+                f"[dist] {r['scenario']:14s} {r['policy']:14s} "
+                f"imb {r['mean_imbalance']:5.2f} p99 {r['mean_p99']:6.1f} "
+                f"retries {r['total_retries']:4d} "
+                f"({r['total_retries'] / max(r['epochs'], 1):.1f}/epoch)"
+            )
+        rows.extend(dist_rows)
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
+            json.dump({"quick": args.quick, "service": args.service,
+                       "rows": rows}, f, indent=1)
         print(f"wrote {args.json} ({len(rows)} rows)")
 
-    if not args.no_check and "shifting_hotspot" in scenarios:
-        problems = check_acceptance(rows)
+    if not args.no_check:
+        problems = check_acceptance(rows, quick=args.quick)
         if problems:
             print("ACCEPTANCE FAILED:")
             for p in problems:
                 print("  -", p)
             return 1
-        print("acceptance: full_adaptive < frozen on imbalance AND p99; "
-              "all steps compiled once")
+        gates = []
+        if "shifting_hotspot" in scenarios:
+            gates.append("full_adaptive < frozen on imbalance AND p99")
+        if "multi_hotspot" in scenarios:
+            gates.append("split_hot < migrate on imbalance at <= entries moved")
+        gates.append("all steps compiled once")
+        print("acceptance: " + "; ".join(gates))
     return 0
 
 

@@ -18,10 +18,11 @@ time the epoch's traffic on the PR-1 vectorized DES engine
 
 Shape discipline: scenario batches, directory tables, the sketch, and
 the load registers all keep fixed shapes across control updates (chain
-widening only rewrites ``chain_len`` values; ``make_directory(r_max=)``
-reserves the slots), so the device step traces **once per scenario** —
-asserted via :attr:`EpochDriver.traces` in tests and recorded per bench
-row.
+widening only rewrites ``chain_len`` values; hot-subset splits allocate
+pre-reserved directory slots — ``make_directory(r_max=, n_slots=)``
+reserves both kinds of headroom), so the device step traces **once per
+scenario** — asserted via :attr:`EpochDriver.traces` in tests and
+recorded per bench row.
 """
 
 from __future__ import annotations
@@ -40,7 +41,7 @@ from repro.core.controller import Controller, ControllerConfig
 from repro.core.coordination import LatencyModel, plan_hops
 from repro.core.dist_store import DistConfig, make_dist_apply
 from repro.core.migration import execute as execute_migrations
-from repro.core.stats import make_sketch, pull_report, sketch_update
+from repro.core.stats import make_sketch, pull_report, sketch_query, sketch_update
 from repro.core.store import apply_routed, make_store
 
 from repro.cluster.metrics import (
@@ -61,6 +62,9 @@ class ClusterConfig:
     num_ranges: int = 64
     replication: int = 2
     r_max: int = 4                 # chain-slot headroom for widening
+    # range-slot pool size; None -> 2x num_ranges (headroom for hot-subset
+    # splits, the slot-pool analogue of the r_max chain headroom)
+    n_slots: int | None = None
     capacity: int | None = None    # per-shard slots; None -> sized from scenario
     mode: str = C.IN_SWITCH
     n_clients: int = 32            # DES closed-loop client count
@@ -68,6 +72,14 @@ class ClusterConfig:
     sketch_width: int = 512
     sketch_depth: int = 4
     latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
+    # per-hop service-time distribution (fixed | lognormal | pareto)
+    service_model: C.ServiceModel = dataclasses.field(
+        default_factory=C.ServiceModel
+    )
+    # intra-epoch p2c freshness: route the batch in this many sub-chunks
+    # with load-register updates between them (oracle backend, spread
+    # policies; still one compiled step — the chunk loop unrolls)
+    p2c_chunks: int = 1
     des_backend: str | None = None
     max_scan_results: int = 8
     imbalance_threshold: float = 1.3   # Controller.balance trigger
@@ -128,9 +140,16 @@ class EpochDriver:
         scfg = scenario.cfg
         # keep the policy's notion of base replication honest
         policy.config.base_replication = cfg.replication
+        if cfg.p2c_chunks > 1 and scfg.epoch_ops % cfg.p2c_chunks != 0:
+            raise ValueError(
+                f"epoch_ops {scfg.epoch_ops} not divisible by "
+                f"p2c_chunks {cfg.p2c_chunks}"
+            )
 
+        n_slots = 2 * cfg.num_ranges if cfg.n_slots is None else cfg.n_slots
         directory = C.make_directory(
-            cfg.num_ranges, cfg.num_nodes, cfg.replication, r_max=cfg.r_max
+            cfg.num_ranges, cfg.num_nodes, cfg.replication, r_max=cfg.r_max,
+            n_slots=n_slots,
         )
         self.controller = Controller(
             directory,
@@ -153,6 +172,10 @@ class EpochDriver:
         self._traces = 0
         self._period = 0
         self._last_overflow = 0
+        # distinct keys seen since the last pull: queried against the
+        # count-min sketch at pull time (StatsReport.key_sample/key_heat,
+        # the split policies' boundary-quantile view)
+        self._key_window: list[np.ndarray] = []
         self._mesh = mesh
         if backend == "dist":
             base = dist_cfg or DistConfig()
@@ -207,11 +230,31 @@ class EpochDriver:
         # widened members are lazily-refreshed read replicas: the write's
         # client-visible path is the base chain only (see plan_hops)
         cap = cfg.replication if spread else None
+        # intra-epoch p2c freshness: sub-chunk the batch so the load
+        # registers the p2c rule reads are at most 1/chunks of an epoch
+        # stale.  The chunk loop unrolls inside the single jitted step —
+        # the trace count stays 1.
+        chunks = cfg.p2c_chunks if spread else 1
 
         def step(store, directory, load_reg, sketch, q, rng):
             self._traces += 1  # python side effect: counts traces, not calls
             r_route, r_plan = jax.random.split(rng)
-            if spread:
+            if spread and chunks > 1:
+                B = q.opcode.shape[0]
+                csize = B // chunks
+                decs = []
+                for ci in range(chunks):
+                    qs = jax.tree.map(
+                        lambda x: x[ci * csize : (ci + 1) * csize], q
+                    )
+                    dec, directory, load_reg = R.route_load_aware(
+                        directory, qs, load_reg, jax.random.fold_in(r_route, ci)
+                    )
+                    decs.append(dec)
+                decision = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *decs
+                )
+            elif spread:
                 decision, directory, load_reg = R.route_load_aware(
                     directory, q, load_reg, r_route
                 )
@@ -227,7 +270,7 @@ class EpochDriver:
             )
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=r_plan, num_nodes=N,
-                write_chain_cap=cap,
+                write_chain_cap=cap, service_model=cfg.service_model,
             )
             retries = jnp.zeros((), jnp.int32)
             return store, directory, load_reg, sketch, plan, node_ops, retries
@@ -235,10 +278,21 @@ class EpochDriver:
         return jax.jit(step)
 
     def _build_dist_step(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+
         cfg = self.cfg
         N = cfg.num_nodes
         spread = self.policy.read_spread
         dist_apply = self._dist_apply
+        # canonical layouts: replicated control state, node-sharded store.
+        # Every call re-commits its inputs to these (a no-op at steady
+        # state) — jit keys its cache on input commitment, so the mix of
+        # committed step outputs and uncommitted host-built refresh tables
+        # would otherwise compile the fused program twice (epoch 0 with
+        # fresh host arrays, epoch 1 with device outputs: a hidden
+        # retrace the `traces` gate now catches).
+        rep = NamedSharding(self._mesh, PartitionSpec())
+        shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
 
         def observe(q, target, chain, chain_len, sketch, rng):
             """Jitted post-processing of the dist apply's decision."""
@@ -255,12 +309,17 @@ class EpochDriver:
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=rng, num_nodes=N,
                 write_chain_cap=cfg.replication if spread else None,
+                service_model=cfg.service_model,
             )
             return sketch, plan, node_ops
 
         observe = jax.jit(observe)
 
         def step(store, directory, load_reg, sketch, q, rng):
+            store = jax.device_put(store, shd)
+            directory = jax.device_put(directory, rep)
+            load_reg = jax.device_put(load_reg, rep)
+            sketch = jax.device_put(sketch, rep)
             r_route, r_plan = jax.random.split(rng)
             if spread:
                 store, _resp, directory, load_reg, m = dist_apply(
@@ -302,6 +361,7 @@ class EpochDriver:
                 events.append(f"recover:{node}")
 
         opcodes, keys, end_keys, values = self.scenario.epoch(e)
+        self._key_window.append(np.asarray(keys, np.uint32))
         q = C.make_queries(
             jnp.asarray(keys), jnp.asarray(opcodes),
             jnp.asarray(values), jnp.asarray(end_keys),
@@ -335,6 +395,18 @@ class EpochDriver:
         if (e + 1) % cfg.report_every == 0:
             report, self.directory = pull_report(self.directory, self._period)
             self._period += 1
+            if self._key_window:
+                # count-min view of the period: distinct keys seen, with
+                # their sketch heat estimates — the split policies place
+                # boundaries at heat quantiles inside hot ranges
+                sample = np.unique(np.concatenate(self._key_window))
+                heat = np.asarray(
+                    sketch_query(self.sketch, jnp.asarray(sample))
+                ).astype(np.float64)
+                report = dataclasses.replace(
+                    report, key_sample=sample, key_heat=heat
+                )
+                self._key_window = []
             if self.policy.read_spread:
                 # directory.node_load charges every read to the chain tail;
                 # under p2c spreading the data-plane load registers are the

@@ -1,9 +1,9 @@
 """The balancing-policy zoo (control plane of the closed loop, §5.1).
 
 A policy consumes the controller pull (:class:`~repro.core.stats.StatsReport`
-plus an optional count-min top-range view) and mutates the controller's
-tables, returning the migration plan the data movers execute.  Three knobs
-exist, and each policy turns a different subset:
+plus the count-min key-heat view) and mutates the controller's tables,
+returning the migration plan the data movers execute.  Four knobs exist,
+and each policy turns a different subset:
 
 * **migration** — the paper's hottest-range -> coolest-node greedy move
   (``Controller.balance``);
@@ -12,11 +12,18 @@ exist, and each policy turns a different subset:
 * **read spreading** — route GETs by power-of-two-choices over the live
   chain (``routing.route_load_aware``) instead of tail-only.  This is a
   *data-plane* knob: the policy only declares it (``read_spread``), the
-  epoch driver compiles the matching step variant.
+  epoch driver compiles the matching step variant;
+* **hot-subset splitting** — the paper's §5.1 "a subset of the hot data":
+  split a hot range at a count-min heat quantile
+  (``Controller.split_range``; the split itself moves no data) so
+  subsequent moves/replicas touch only the hot child's keys, and merge
+  the child back (``Controller.merge_range``) with hysteresis once its
+  heat subsides.
 
 The bench compares ``frozen`` (directory never changes — the no-switch
 baseline), ``migrate`` (paper behaviour), ``replicate`` (widen + spread,
-no moves) and ``full_adaptive`` (everything on).
+no moves), ``split_hot`` (split + migrate — whole-range moves replaced by
+hot-subset moves) and ``full_adaptive`` (everything on).
 """
 
 from __future__ import annotations
@@ -42,6 +49,19 @@ class PolicyConfig:
     # chains never shrink below this (the configured replication factor)
     base_replication: int = 2
 
+    # ---- hot-subset splitting (slot-pool) ----
+    # split a range when its heat exceeds this multiple of the live mean
+    split_factor: float = 2.0
+    # cap on splits per report (hottest ranges first)
+    max_splits_per_round: int = 4
+    # never split a span narrower than this many matching values
+    min_split_span: int = 4096
+    # merge hysteresis: a child is "cool" when its heat drops below this
+    # multiple of the live mean ...
+    merge_factor: float = 0.75
+    # ... for this many consecutive reports
+    merge_patience: int = 2
+
 
 class Policy:
     """Base policy: freeze the directory (no control actions at all)."""
@@ -64,6 +84,128 @@ class MigratePolicy(Policy):
 
     def on_report(self, controller, report):
         return controller.balance(report)
+
+
+def _live_heat(controller: Controller, report: StatsReport):
+    """(heat (S,), live (S,), live-mean) with dead slots zeroed out."""
+    heat = (report.read_count + report.write_count).astype(np.float64)
+    if report.live is not None:
+        live = np.asarray(report.live, bool)
+    else:
+        live = np.zeros(len(heat), bool)
+        live[controller.live_ranges()] = True
+    heat = np.where(live, heat, 0.0)
+    mean = heat[live].mean() if live.any() else 0.0
+    return heat, live, mean
+
+
+def _sketch_boundary(lo: int, hi: int, report: StatsReport) -> int | None:
+    """Heat-median split boundary for [lo, hi] from the count-min view.
+
+    The sampled keys inside the span, weighted by their ``sketch_query``
+    estimates, give the period's heat distribution over the range; the
+    weighted median is the boundary that splits that heat in half — the
+    quantile split the whole-range counters cannot see.  None when the
+    sketch view is absent or too thin (callers fall back to the midpoint).
+    """
+    if report.key_sample is None or report.key_heat is None:
+        return None
+    ks = report.key_sample.astype(np.uint64)
+    w = report.key_heat.astype(np.float64)
+    m = (ks >= lo) & (ks <= hi)
+    ks, w = ks[m], w[m]
+    if ks.size < 2 or w.sum() <= 0:
+        return None
+    order = np.argsort(ks)
+    ks, w = ks[order], w[order]
+    cum = np.cumsum(w)
+    j = int(np.searchsorted(cum, cum[-1] * 0.5))
+    j = min(j, ks.size - 2)
+    return int(max(lo, min(int(ks[j]), hi - 1)))
+
+
+class _SplitMergeMixin:
+    """Shared hot-subset split / hysteresis-merge machinery.
+
+    Splitting never moves data (the child inherits the parent's chain);
+    the win is that every subsequent control action on the child — a
+    migration or a widened replica — is priced by the hot subset's keys
+    only.  Merging re-coalesces cooled children so the live record count
+    (and the slot pool) does not ratchet upward over a long run.
+    """
+
+    def __init__(self, config: PolicyConfig | None = None):
+        super().__init__(config)
+        self._cool: dict[int, int] = {}   # child slot -> consecutive cool reports
+
+    def split_merge(self, controller: Controller, report: StatsReport
+                    ) -> list[MigrationOp]:
+        cfg = self.config
+        heat, live, mean = _live_heat(controller, report)
+        ops: list[MigrationOp] = []
+        if mean <= 0:
+            return ops
+
+        # ---- splits: hottest ranges first, boundary at the sketch median
+        budget = cfg.max_splits_per_round
+        for ridx in np.argsort(np.where(live, heat, -1.0))[::-1]:
+            ridx = int(ridx)
+            if budget <= 0 or heat[ridx] <= cfg.split_factor * mean:
+                break
+            if controller.free_slots() == 0:
+                break  # pool exhausted: shape stability outranks splitting
+            lo, hi = controller.range_span(ridx)
+            if hi - lo + 1 < cfg.min_split_span:
+                continue
+            boundary = _sketch_boundary(lo, hi, report)
+            if boundary is None:
+                boundary = lo + (hi - lo) // 2
+            child = controller.split_range(ridx, boundary)
+            if child is None:
+                continue
+            self._cool.pop(child, None)
+            budget -= 1
+
+        # ---- merges: children cool for `merge_patience` straight reports
+        threshold = cfg.merge_factor * mean
+        for child in controller.children():
+            if report.live is not None and not report.live[child]:
+                # born after the report snapshot (e.g. by the split pass
+                # above): its zero heat is ignorance, not coolness — a
+                # spurious tick here would halve the hysteresis
+                continue
+            if heat[child] < threshold:
+                self._cool[child] = self._cool.get(child, 0) + 1
+            else:
+                self._cool[child] = 0
+            if self._cool.get(child, 0) >= cfg.merge_patience:
+                merged = controller.merge_range(child)
+                if merged is not None:
+                    ops.extend(merged)
+                    self._cool.pop(child, None)
+        # drop hysteresis state for slots that died some other way
+        live_children = set(controller.children())
+        for s in list(self._cool):
+            if s not in live_children:
+                self._cool.pop(s)
+        return ops
+
+
+class SplitHotPolicy(_SplitMergeMixin, Policy):
+    """Hot-subset splitting + migration (the slot-pool showcase).
+
+    Against ``migrate`` this moves strictly less data for the same
+    imbalance reduction: the balancer's hottest-range pick lands on a
+    split child whose span covers only the hot subset, so the emitted
+    move op is priced by the hot keys, not the whole range's residents.
+    """
+
+    name = "split_hot"
+
+    def on_report(self, controller, report):
+        ops = self.split_merge(controller, report)
+        ops.extend(controller.balance(report))
+        return ops
 
 
 class ReplicatePolicy(Policy):
@@ -92,8 +234,7 @@ class ReplicatePolicy(Policy):
 
     def on_report(self, controller, report):
         cfg = self.config
-        heat = (report.read_count + report.write_count).astype(np.float64)
-        mean = heat.mean() if heat.size else 0.0
+        heat, live, mean = _live_heat(controller, report)
         ops: list[MigrationOp] = []
         if mean <= 0:
             return ops
@@ -102,9 +243,9 @@ class ReplicatePolicy(Policy):
         budget = cfg.max_widen_per_round
 
         # hottest per live replica first: a wide warm chain is already
-        # fine; fully-spliced chains (clen 0 after cascaded failures)
-        # carry no replica to widen from and are masked out
-        ratio = np.where(clen > 0, heat / np.maximum(clen, 1.0), -1.0)
+        # fine; dead slots and fully-spliced chains (clen 0) carry no
+        # replica to widen from and are masked out
+        ratio = np.where(live & (clen > 0), heat / np.maximum(clen, 1.0), -1.0)
         for ridx in np.argsort(ratio)[::-1]:
             if budget <= 0 or ratio[ridx] <= 0:
                 break
@@ -122,16 +263,18 @@ class ReplicatePolicy(Policy):
                 clen[ridx] += 1
 
         cl = controller.chain_lengths()
+        widened = live & (cl > cfg.base_replication)
         if cfg.narrow_below_mean:
-            for ridx in np.where(cl > cfg.base_replication)[0]:
+            for ridx in np.where(widened)[0]:
                 if heat[ridx] < mean:
                     op = controller.narrow_chain(int(ridx), cfg.base_replication)
                     if op is not None:
                         ops.append(op)
             cl = controller.chain_lengths()
+            widened = live & (cl > cfg.base_replication)
 
         # periodic refresh of standing read replicas (lazy delta sync)
-        for ridx in np.where(cl > cfg.base_replication)[0]:
+        for ridx in np.where(widened)[0]:
             lo, hi = controller.range_span(int(ridx))
             chain = controller.chain_nodes(int(ridx))
             head = int(chain[0])
@@ -146,17 +289,20 @@ class ReplicatePolicy(Policy):
         return ops
 
 
-class FullAdaptivePolicy(ReplicatePolicy):
-    """Everything on: replicate + spread (inherited) and migrate.
+class FullAdaptivePolicy(_SplitMergeMixin, ReplicatePolicy):
+    """Everything on: split/merge + replicate + spread + migrate.
 
-    Replication handles ranges too hot for any single tail; migration
-    evens out the residual per-node imbalance the replicas leave behind.
+    Splitting isolates the hot subset of a range; replication handles
+    subsets too hot for any single tail; migration evens out the residual
+    per-node imbalance the replicas leave behind; the merge hysteresis
+    re-coalesces split records once their heat subsides.
     """
 
     name = "full_adaptive"
 
     def on_report(self, controller, report):
-        ops = super().on_report(controller, report)
+        ops = self.split_merge(controller, report)
+        ops.extend(super().on_report(controller, report))
         ops.extend(controller.balance(report))
         return ops
 
@@ -165,6 +311,7 @@ POLICIES = {
     "frozen": Policy,
     "migrate": MigratePolicy,
     "replicate": ReplicatePolicy,
+    "split_hot": SplitHotPolicy,
     "full_adaptive": FullAdaptivePolicy,
 }
 

@@ -17,6 +17,14 @@ Scenario zoo:
   (day: read-heavy; night: write-heavy).
 * ``node_failure``    — steady skewed load with a storage-node failure
   mid-run (and optional recovery) — §5.2 meets §5.1.
+* ``multi_hotspot``   — several simultaneous Zipf hotspots on distinct
+  key blocks, rotating over the run: whole-range control wastes motion on
+  the cold remainder of each hot range, hot-subset splitting pays — the
+  showcase workload for the slot-pool directory.
+* ``keyspace_growth`` — insert-driven occupancy growth: only a prefix of
+  the record set exists at load time and the active frontier (where both
+  inserts and reads concentrate) climbs through the key space, shifting
+  range occupancy against the static genesis bounds.
 """
 
 from __future__ import annotations
@@ -184,12 +192,89 @@ class NodeFailure(Scenario):
         return ev
 
 
+class MultiHotspot(Scenario):
+    """``n_hotspots`` simultaneous Zipf hotspots on distinct contiguous
+    key blocks, all rotating every ``shift_every`` epochs.
+
+    Zipf rank r (hottest first) feeds hotspot ``r % k`` at within-block
+    offset ``r // k``, so each block carries its own Zipf-decaying heat
+    spike.  With k spikes alive at once there are not enough cold nodes
+    to absorb whole-range moves — isolating the hot *subset* of each
+    range (split, then act on the child) is the winning play.
+    """
+
+    name = "multi_hotspot"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 1.3,
+                 n_hotspots: int = 3, shift_every: int = 4):
+        super().__init__(cfg, theta=theta)
+        self.n_hotspots = max(1, n_hotspots)
+        self.shift_every = max(1, shift_every)
+        # rotation stride: a quarter block per shift, so hotspots sweep
+        # the space without immediately landing on each other
+        self.stride = max(1, cfg.n_records // (4 * self.n_hotspots))
+
+    def record_probs(self, epoch: int) -> np.ndarray:
+        n = self.cfg.n_records
+        k = self.n_hotspots
+        shift = (epoch // self.shift_every) * self.stride
+        r = np.arange(n)
+        block = r % k                   # which hotspot this rank feeds
+        offset = r // k                 # position inside the block
+        pos = (block * (n // k) + shift + offset) % n
+        p = np.zeros(n)
+        np.add.at(p, pos, self.base_probs)
+        return p / p.sum()
+
+
+class KeyspaceGrowth(Scenario):
+    """Insert-driven growth: only ``start_frac`` of the records exist at
+    load time; each epoch the active frontier advances and traffic (write
+    heavy, Zipf-concentrated on the newest records) follows it upward
+    through the key space.  Static genesis bounds end up with a few
+    overstuffed frontier ranges — occupancy pressure the split machinery
+    relieves without touching the cold archive below.
+    """
+
+    name = "keyspace_growth"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.9,
+                 start_frac: float = 0.25, write_ratio: float = 0.5):
+        super().__init__(cfg, theta=theta)
+        self.start_frac = min(max(start_frac, 0.01), 1.0)
+        self.write_ratio = write_ratio
+
+    def _active(self, epoch: int) -> int:
+        n = self.cfg.n_records
+        n0 = max(2, int(n * self.start_frac))
+        grow = (n - n0) * (epoch + 1) // max(self.cfg.n_epochs, 1)
+        return min(n, n0 + grow)
+
+    def load(self):
+        keys, vals = super().load()
+        n0 = max(2, int(self.cfg.n_records * self.start_frac))
+        return keys[:n0], vals[:n0]
+
+    def record_probs(self, epoch: int) -> np.ndarray:
+        n = self.cfg.n_records
+        active = self._active(epoch)
+        p = np.zeros(n)
+        # newest records hottest: rank r -> record (active - 1 - r)
+        p[active - 1 :: -1] = self.base_probs[:active]
+        return p / p.sum()
+
+    def read_ratio(self, epoch: int) -> float:
+        return 1.0 - self.write_ratio
+
+
 SCENARIOS = {
     "stationary": Scenario,
     "shifting_hotspot": ShiftingHotspot,
     "flash_crowd": FlashCrowd,
     "diurnal": Diurnal,
     "node_failure": NodeFailure,
+    "multi_hotspot": MultiHotspot,
+    "keyspace_growth": KeyspaceGrowth,
 }
 
 

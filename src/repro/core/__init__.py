@@ -11,7 +11,13 @@ scenario library).
 
 from repro.core import keys
 from repro.core.keys import OP_GET, OP_PUT, OP_DEL, OP_SCAN, hash_key
-from repro.core.directory import Directory, make_directory, lookup_range, node_load
+from repro.core.directory import (
+    Directory,
+    make_directory,
+    lookup_range,
+    node_load,
+    range_order,
+)
 from repro.core.routing import (
     QueryBatch,
     RoutingDecision,
@@ -23,6 +29,7 @@ from repro.core.routing import (
 from repro.core.store import StoreState, Responses, make_store, apply_routed, store_fill
 from repro.core.coordination import (
     LatencyModel,
+    ServiceModel,
     HopPlan,
     plan_hops,
     simulate_reference,
@@ -45,11 +52,12 @@ from repro.core.dist_store import DistConfig, make_dist_apply
 
 __all__ = [
     "keys", "OP_GET", "OP_PUT", "OP_DEL", "OP_SCAN", "hash_key",
-    "Directory", "make_directory", "lookup_range", "node_load",
+    "Directory", "make_directory", "lookup_range", "node_load", "range_order",
     "QueryBatch", "RoutingDecision", "route", "route_load_aware",
     "expand_scans", "make_queries",
     "StoreState", "Responses", "make_store", "apply_routed", "store_fill",
-    "LatencyModel", "HopPlan", "plan_hops", "simulate", "simulate_closed_loop",
+    "LatencyModel", "ServiceModel", "HopPlan", "plan_hops",
+    "simulate", "simulate_closed_loop",
     "simulate_reference", "simulate_closed_loop_reference", "stack_plans", "des",
     "IN_SWITCH", "CLIENT_DRIVEN", "SERVER_DRIVEN", "MODES",
     "Controller", "ControllerConfig", "MigrationOp", "execute_migrations",

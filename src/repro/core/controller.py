@@ -3,11 +3,21 @@
 A logically centralized, host-side process that (a) balances load by
 migrating hot sub-ranges to under-utilized nodes based on the data-plane
 statistics reports, (b) splices failed nodes out of every chain and restores
-the replication factor, and (c) splits sub-ranges on capacity overflow.  It
-mutates the directory with plain numpy (this *is* the control plane — it is
-deliberately off the jitted hot path, exactly as the paper's Python/Thrift
-controller sits off the P4 data plane) and emits
-:class:`~repro.core.migration.MigrationOp` plans for the data movers.
+the replication factor, and (c) splits sub-ranges — on capacity overflow
+(paper §4.1.1) or to isolate the hot *subset* of a range (paper §5.1
+"a subset of the hot data").  It mutates the directory with plain numpy
+(this *is* the control plane — it is deliberately off the jitted hot path,
+exactly as the paper's Python/Thrift controller sits off the P4 data plane)
+and emits :class:`~repro.core.migration.MigrationOp` plans for the data
+movers.
+
+Slot-pool discipline: the directory is a fixed pool of physical slots
+(:mod:`repro.core.directory`); :meth:`Controller.split_range` allocates a
+dead slot for the new record and :meth:`Controller.merge_range` returns one
+to the pool, so control actions never change array shapes and the cluster
+epoch step stays compiled.  Only :meth:`Controller.grow_pool` (capacity
+emergency, pool exhausted) changes shapes — after it the caller must
+rebuild via :meth:`directory` (``refresh`` refuses, by design).
 """
 
 from __future__ import annotations
@@ -18,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import keys as K
-from repro.core.directory import Directory, NO_NODE
+from repro.core.directory import DEAD_HI, DEAD_LO, Directory, NO_NODE, NO_SLOT
 from repro.core.migration import MigrationOp
 from repro.core.stats import StatsReport
 
@@ -42,14 +52,21 @@ class Controller:
         self.hash_partitioned = directory.hash_partitioned
         self.failed: set[int] = set()
         self.log: list[str] = []
+        # merge bookkeeping: (dead_child, absorber) pairs whose *live*
+        # device counters must be credited over at the next refresh
+        self._credits: list[tuple[int, int]] = []
 
     # -- directory snapshot back to device arrays -------------------------
     def directory(self) -> Directory:
         d = self._dir
         return Directory(
-            bounds=jnp.asarray(d["bounds"]),
+            slot_lo=jnp.asarray(d["slot_lo"]),
+            slot_hi=jnp.asarray(d["slot_hi"]),
+            live=jnp.asarray(d["live"]),
             chains=jnp.asarray(d["chains"]),
             chain_len=jnp.asarray(d["chain_len"]),
+            parent=jnp.asarray(d["parent"]),
+            generation=jnp.asarray(d["generation"]),
             node_addr=jnp.asarray(d["node_addr"]),
             read_count=jnp.asarray(d["read_count"]),
             write_count=jnp.asarray(d["write_count"]),
@@ -60,13 +77,18 @@ class Controller:
         """Graft the control-plane tables onto a *live* device directory.
 
         The data plane keeps bumping the statistics registers between
-        controller pulls; a control update (balance / widen_chain /
-        failure splice) must not clobber them mid-period —
+        controller pulls; a control update (balance / split / merge /
+        widen_chain / failure splice) must not clobber them mid-period —
         ``stats.pull_report`` is the **only** reset path.  This returns a
-        directory with the controller's bounds/chains/chain_len/node_addr
-        but the live directory's counters, and asserts the table shapes
-        still agree (a split changes R — pull a report and rebuild via
-        :meth:`directory` after splits).
+        directory with the controller's slot tables but the live
+        directory's counters, and asserts the slot-pool shapes still agree
+        (only :meth:`grow_pool` changes them — rebuild via
+        :meth:`directory` after a pool growth).
+
+        Merges executed since the last sync move their dead child's
+        as-yet-unreported counter hits onto the absorbing record, so no
+        heat is lost mid-period and a later split reusing the slot starts
+        from zero.
 
         Used by ``repro.cluster.epoch.EpochDriver`` so the jitted epoch
         step sees shape-stable directories across control updates.
@@ -77,13 +99,28 @@ class Controller:
                 f"directory shape changed ({tuple(live.chains.shape)} -> "
                 f"{d['chains'].shape}); pull a report and rebuild via .directory()"
             )
+        read_count, write_count = live.read_count, live.write_count
+        if self._credits:
+            rc = np.asarray(read_count).copy()
+            wc = np.asarray(write_count).copy()
+            for src, dst in self._credits:
+                rc[dst] += rc[src]
+                rc[src] = 0
+                wc[dst] += wc[src]
+                wc[src] = 0
+            self._credits = []
+            read_count, write_count = jnp.asarray(rc), jnp.asarray(wc)
         return Directory(
-            bounds=jnp.asarray(d["bounds"]),
+            slot_lo=jnp.asarray(d["slot_lo"]),
+            slot_hi=jnp.asarray(d["slot_hi"]),
+            live=jnp.asarray(d["live"]),
             chains=jnp.asarray(d["chains"]),
             chain_len=jnp.asarray(d["chain_len"]),
+            parent=jnp.asarray(d["parent"]),
+            generation=jnp.asarray(d["generation"]),
             node_addr=jnp.asarray(d["node_addr"]),
-            read_count=live.read_count,
-            write_count=live.write_count,
+            read_count=read_count,
+            write_count=write_count,
             hash_partitioned=self.hash_partitioned,
         )
 
@@ -92,8 +129,13 @@ class Controller:
         return self._dir["node_addr"].shape[0]
 
     @property
-    def num_ranges(self) -> int:
+    def num_slots(self) -> int:
         return self._dir["chains"].shape[0]
+
+    @property
+    def num_ranges(self) -> int:
+        """Count of *live* records (logical ranges, not physical slots)."""
+        return int(self._dir["live"].sum())
 
     @property
     def r_max(self) -> int:
@@ -102,8 +144,25 @@ class Controller:
     def live_nodes(self) -> list[int]:
         return [n for n in range(self.num_nodes) if n not in self.failed]
 
+    def live_ranges(self) -> list[int]:
+        """Slot indices of the live records."""
+        return [int(s) for s in np.where(self._dir["live"])[0]]
+
+    def free_slots(self) -> int:
+        """How many dead slots remain in the pool."""
+        return int((~self._dir["live"]).sum())
+
+    def children(self) -> list[int]:
+        """Live slots born by a split (parent still tracked) — the merge
+        candidates the policy hysteresis watches."""
+        d = self._dir
+        return [
+            int(s)
+            for s in np.where(d["live"] & (d["parent"] != NO_SLOT))[0]
+        ]
+
     def chain_lengths(self) -> np.ndarray:
-        """(R,) copy of the live chain lengths (policy introspection)."""
+        """(S,) copy of the live chain lengths (policy introspection)."""
         return self._dir["chain_len"].copy()
 
     def chain_nodes(self, ridx: int) -> np.ndarray:
@@ -116,6 +175,9 @@ class Controller:
         than reading ``_dir`` directly)."""
         return self._range_span(ridx)
 
+    def is_live(self, ridx: int) -> bool:
+        return bool(self._dir["live"][ridx])
+
     # ------------------------------------------------------------------
     # load balancing (paper §5.1): greedy hottest-range -> coolest-node
     # ------------------------------------------------------------------
@@ -123,20 +185,21 @@ class Controller:
         cfg = self.config
         d = self._dir
         load = report.node_load.astype(np.float64).copy()
-        live = np.array([n not in self.failed for n in range(self.num_nodes)])
+        live_node = np.array([n not in self.failed for n in range(self.num_nodes)])
         ops: list[MigrationOp] = []
         heat = (report.read_count + report.write_count).astype(np.float64)
+        heat = np.where(d["live"], heat, 0.0)  # dead slots carry no weight
 
         for _ in range(cfg.max_moves_per_round):
-            mean = load[live].mean() if live.any() else 0.0
-            hot_node = int(np.where(live, load, -np.inf).argmax())
+            mean = load[live_node].mean() if live_node.any() else 0.0
+            hot_node = int(np.where(live_node, load, -np.inf).argmax())
             if mean <= 0 or load[hot_node] <= cfg.imbalance_threshold * mean:
                 break
-            cold_node = int(np.where(live, load, np.inf).argmin())
+            cold_node = int(np.where(live_node, load, np.inf).argmin())
             if cold_node == hot_node:
                 break
-            # hottest sub-range served by the hot node (any chain position)
-            served = (d["chains"] == hot_node).any(axis=1)
+            # hottest live sub-range served by the hot node (any chain position)
+            served = d["live"] & (d["chains"] == hot_node).any(axis=1)
             if not served.any():
                 break
             ridx = int(np.where(served, heat, -1.0).argmax())
@@ -173,6 +236,8 @@ class Controller:
         the newcomer instead of dividing across the chain.
         """
         d = self._dir
+        if not d["live"][ridx]:
+            return None
         clen = int(d["chain_len"][ridx])
         if clen >= self.r_max:
             return None
@@ -194,10 +259,12 @@ class Controller:
         Inverse of :meth:`widen_chain`: shrinks the chain back toward
         ``base_replication`` by removing the last replica.  The removed
         node keeps its copy (no data movement is strictly needed for
-        correctness); a 'move' op is returned so the data mover reclaims
+        correctness); a 'reclaim' op is returned so the data mover frees
         the space.
         """
         d = self._dir
+        if not d["live"][ridx]:
+            return None
         clen = int(d["chain_len"][ridx])
         if clen <= base_replication or clen <= 1:
             return None
@@ -207,6 +274,129 @@ class Controller:
         lo, hi = self._range_span(ridx)
         self.log.append(f"narrow: range {ridx} dropped replica {victim} (r={clen - 1})")
         return MigrationOp(lo=lo, hi=hi, src=victim, dst=victim, kind="reclaim")
+
+    # ------------------------------------------------------------------
+    # hot-subset splitting (paper §5.1 "a subset of the hot data"):
+    # slot-pool split / merge — shapes never change
+    # ------------------------------------------------------------------
+    def split_range(self, ridx: int, boundary: int) -> int | None:
+        """Split record ``ridx`` at ``boundary``: the parent keeps
+        ``[lo, boundary]``, a dead slot is allocated for the child
+        ``[boundary + 1, hi]``.
+
+        The child inherits the parent's chain, so **no data moves** — every
+        chain member already holds the child span; the payoff is that
+        subsequent control actions (migrate / widen) on the child touch
+        only the hot subset's keys.  Returns the child's slot index, or
+        None when the boundary is degenerate, the record is dead, or the
+        pool is exhausted (callers may :meth:`grow_pool` and rebuild).
+        """
+        d = self._dir
+        if not d["live"][ridx]:
+            return None
+        lo, hi = self._range_span(ridx)
+        if not (lo <= boundary < hi):
+            return None
+        free = np.where(~d["live"])[0]
+        if free.size == 0:
+            return None
+        child = int(free[0])
+        d["slot_lo"][child] = np.uint32(boundary + 1)
+        d["slot_hi"][child] = np.uint32(hi)
+        d["slot_hi"][ridx] = np.uint32(boundary)
+        d["chains"][child] = d["chains"][ridx]
+        d["chain_len"][child] = d["chain_len"][ridx]
+        d["parent"][child] = ridx
+        d["generation"][child] = d["generation"][ridx] + 1
+        d["read_count"][child] = 0
+        d["write_count"][child] = 0
+        d["live"][child] = True
+        self.log.append(
+            f"split: range {ridx} at {boundary} -> child slot {child} "
+            f"[{boundary + 1}, {hi}]"
+        )
+        return child
+
+    def merge_range(self, child: int) -> list[MigrationOp] | None:
+        """Re-coalesce split record ``child`` into its parent (cool-down).
+
+        Valid only while both slots are live and their spans are still
+        adjacent (either may have re-split meanwhile — then the merge is
+        refused and the hysteresis keeps watching).  The merged record
+        keeps the **parent's** chain; the returned plan makes the store
+        consistent with that: parent-chain members missing the child span
+        get a copy, child-chain members leaving the record reclaim it.
+        The child's unreported counter hits are credited to the parent at
+        the next :meth:`refresh`, and the freed slot returns to the pool.
+        """
+        d = self._dir
+        p = int(d["parent"][child])
+        if p < 0 or not d["live"][child] or not d["live"][p]:
+            return None
+        clo, chi = self._range_span(child)
+        plo, phi = self._range_span(p)
+        if phi + 1 != clo and chi + 1 != plo:
+            return None  # spans drifted apart (one side re-split)
+        p_len = int(d["chain_len"][p])
+        c_len = int(d["chain_len"][child])
+        if p_len == 0 or c_len == 0:
+            return None
+        p_members = [int(n) for n in d["chains"][p][:p_len] if n != NO_NODE]
+        c_members = [int(n) for n in d["chains"][child][:c_len] if n != NO_NODE]
+        if not p_members or not c_members:
+            return None
+        ops: list[MigrationOp] = []
+        src = c_members[0]  # child chain head holds the child span
+        for m in p_members:
+            if m not in c_members:
+                ops.append(MigrationOp(lo=clo, hi=chi, src=src, dst=m, kind="copy"))
+        for m in c_members:
+            if m not in p_members:
+                ops.append(MigrationOp(lo=clo, hi=chi, src=m, dst=m, kind="reclaim"))
+
+        d["slot_lo"][p] = np.uint32(min(plo, clo))
+        d["slot_hi"][p] = np.uint32(max(phi, chi))
+        d["read_count"][p] += d["read_count"][child]
+        d["write_count"][p] += d["write_count"][child]
+        self._kill_slot(child)
+        self._credits.append((child, p))
+        self.log.append(f"merge: child slot {child} -> range {p} [{min(plo, clo)}, {max(phi, chi)}]")
+        return ops
+
+    def _kill_slot(self, s: int) -> None:
+        d = self._dir
+        d["live"][s] = False
+        d["slot_lo"][s] = DEAD_LO
+        d["slot_hi"][s] = DEAD_HI
+        d["chains"][s] = NO_NODE
+        d["chain_len"][s] = 0
+        d["parent"][s] = NO_SLOT
+        d["generation"][s] = 0
+        d["read_count"][s] = 0
+        d["write_count"][s] = 0
+
+    def grow_pool(self, extra: int | None = None) -> int:
+        """Append dead slots to the pool (capacity emergency only).
+
+        This **changes array shapes**: the epoch step must be rebuilt and
+        ``refresh`` will refuse until the caller re-pulls via
+        :meth:`directory`.  Returns the new pool size.
+        """
+        d = self._dir
+        extra = self.num_slots if extra is None else extra
+        d["slot_lo"] = np.concatenate([d["slot_lo"], np.full((extra,), DEAD_LO, np.uint32)])
+        d["slot_hi"] = np.concatenate([d["slot_hi"], np.full((extra,), DEAD_HI, np.uint32)])
+        d["live"] = np.concatenate([d["live"], np.zeros((extra,), bool)])
+        d["chains"] = np.concatenate(
+            [d["chains"], np.full((extra, self.r_max), NO_NODE, np.int32)]
+        )
+        d["chain_len"] = np.concatenate([d["chain_len"], np.zeros((extra,), np.int32)])
+        d["parent"] = np.concatenate([d["parent"], np.full((extra,), NO_SLOT, np.int32)])
+        d["generation"] = np.concatenate([d["generation"], np.zeros((extra,), np.int32)])
+        d["read_count"] = np.concatenate([d["read_count"], np.zeros((extra,), np.uint32)])
+        d["write_count"] = np.concatenate([d["write_count"], np.zeros((extra,), np.uint32)])
+        self.log.append(f"grow_pool: {self.num_slots - extra} -> {self.num_slots} slots")
+        return self.num_slots
 
     # ------------------------------------------------------------------
     # failure handling (paper §5.2): splice, then restore replication
@@ -224,7 +414,7 @@ class Controller:
         if not live_nodes:
             raise RuntimeError("all storage nodes failed")
 
-        for ridx in range(self.num_ranges):
+        for ridx in self.live_ranges():
             chain = d["chains"][ridx]
             clen = int(d["chain_len"][ridx])
             pos = np.where(chain[:clen] == node)[0]
@@ -277,25 +467,27 @@ class Controller:
     # ------------------------------------------------------------------
     def split_overflowed(self, ridx: int, node_load: np.ndarray) -> list[MigrationOp]:
         d = self._dir
+        if not d["live"][ridx]:
+            return []
         lo, hi = self._range_span(ridx)
         if hi - lo < 2:
             return []
         mid = lo + (hi - lo) // 2
-        # insert a boundary at mid: range ridx becomes [lo, mid], new range
-        # ridx+1 is (mid, hi] and initially inherits the chain
-        d["bounds"] = np.insert(d["bounds"], ridx + 1, np.uint32(mid + 1))
-        d["chains"] = np.insert(d["chains"], ridx + 1, d["chains"][ridx], axis=0)
-        d["chain_len"] = np.insert(d["chain_len"], ridx + 1, d["chain_len"][ridx])
-        d["read_count"] = np.insert(d["read_count"], ridx + 1, 0)
-        d["write_count"] = np.insert(d["write_count"], ridx + 1, 0)
+        if self.free_slots() == 0:
+            # capacity emergency outranks shape stability: grow the pool
+            # (the caller must rebuild the step via .directory())
+            self.grow_pool()
+        child = self.split_range(ridx, mid)
+        if child is None:
+            return []
 
-        # move the upper half's head to the least-loaded node with space
+        # move the child (upper) half's head to the least-loaded node
         live = [n for n in range(self.num_nodes) if n not in self.failed]
-        old_head = int(d["chains"][ridx + 1, 0])
+        old_head = int(d["chains"][child, 0])
         target = min((n for n in live if n != old_head), key=lambda n: node_load[n], default=None)
         ops: list[MigrationOp] = []
         if target is not None:
-            d["chains"][ridx + 1, 0] = target
+            d["chains"][child, 0] = target
             ops.append(MigrationOp(lo=mid + 1, hi=hi, src=old_head, dst=target, kind="move"))
             self.log.append(f"split: range {ridx} at {mid}; upper half head {old_head} -> {target}")
         return ops
@@ -303,19 +495,19 @@ class Controller:
     # ------------------------------------------------------------------
     def _range_span(self, ridx: int) -> tuple[int, int]:
         """Inclusive [lo, hi] key span of record ridx."""
-        b = self._dir["bounds"]
-        lo = int(b[ridx])
-        hi = int(b[ridx + 1]) - 1 if ridx + 1 < len(b) - 1 else int(K.MAX_KEY)
-        if ridx + 1 == len(b) - 1:
-            hi = int(b[ridx + 1])  # final boundary is stored inclusive
-        return lo, hi
+        d = self._dir
+        return int(d["slot_lo"][ridx]), int(d["slot_hi"][ridx])
 
 
 def _to_numpy(directory: Directory) -> dict[str, np.ndarray]:
     return {
-        "bounds": np.asarray(directory.bounds).copy(),
+        "slot_lo": np.asarray(directory.slot_lo).copy(),
+        "slot_hi": np.asarray(directory.slot_hi).copy(),
+        "live": np.asarray(directory.live).copy(),
         "chains": np.asarray(directory.chains).copy(),
         "chain_len": np.asarray(directory.chain_len).copy(),
+        "parent": np.asarray(directory.parent).copy(),
+        "generation": np.asarray(directory.generation).copy(),
         "node_addr": np.asarray(directory.node_addr).copy(),
         "read_count": np.asarray(directory.read_count).copy(),
         "write_count": np.asarray(directory.write_count).copy(),

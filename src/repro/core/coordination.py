@@ -79,6 +79,48 @@ class LatencyModel:
     coordinator: float = 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class ServiceModel:
+    """Per-hop service-time distribution (DES realism knob).
+
+    The deterministic ``LatencyModel.service`` constant hides the
+    self-similar burstiness of real storage nodes (compactions, GC, page
+    faults); this draws a **mean-one multiplier** per (query, hop) so the
+    configured service constant stays the calibrated mean and policy
+    comparisons remain apples-to-apples:
+
+    * ``fixed``      — multiplier 1 (the paper's deterministic model);
+    * ``lognormal``  — exp(sigma·Z − sigma²/2), moderate right skew;
+    * ``pareto``     — normalized Pareto(alpha), heavy tail (alpha → 1⁺
+      is wilder; alpha must be > 1 for the mean to exist).
+
+    Draws come from the jax PRNG key threaded into ``plan_hops`` — seeded,
+    bit-reproducible, identical across DES backends (the multiplier lands
+    in the plan's f32 ``service`` matrix *before* the engine runs).
+    """
+
+    kind: str = "fixed"       # fixed | lognormal | pareto
+    sigma: float = 0.6        # lognormal shape
+    alpha: float = 2.2        # pareto tail index (> 1)
+
+    def draw(self, rng: jax.Array, shape: tuple[int, ...]) -> jnp.ndarray:
+        """(shape) float32 mean-one service multipliers."""
+        if self.kind == "fixed":
+            return jnp.ones(shape, jnp.float32)
+        if self.kind == "lognormal":
+            z = jax.random.normal(rng, shape, jnp.float32)
+            return jnp.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+        if self.kind == "pareto":
+            if self.alpha <= 1.0:
+                raise ValueError(f"pareto alpha must be > 1, got {self.alpha}")
+            u = jax.random.uniform(
+                rng, shape, jnp.float32, minval=jnp.finfo(jnp.float32).tiny
+            )
+            x = u ** jnp.float32(-1.0 / self.alpha)       # Pareto(xm=1, alpha)
+            return x * jnp.float32((self.alpha - 1.0) / self.alpha)
+        raise ValueError(f"unknown service model kind {self.kind!r}")
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("nodes", "service", "reply_links"),
@@ -104,6 +146,7 @@ def plan_hops(
     rng: jax.Array,
     num_nodes: int,
     write_chain_cap: int | None = None,
+    service_model: ServiceModel | None = None,
 ) -> HopPlan:
     """Build the per-query hop plan for a coordination model.
 
@@ -114,6 +157,12 @@ def plan_hops(
     the reply path via the controller's periodic refresh copies, whose
     traffic the cluster metrics charge as migration bytes).  ``None``
     (default) keeps the paper's strict full-chain write path.
+
+    ``service_model`` draws seeded mean-one multipliers onto the per-hop
+    *storage service* cost (lookup/coordination overheads stay
+    deterministic — they model switch/coordinator work, not the store).
+    ``None``/``fixed`` reproduces the deterministic model bit for bit,
+    including the server-driven coordinator draw.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
@@ -134,6 +183,11 @@ def plan_hops(
     # per-visit service: base; +lookup when the node must resolve the next
     # hop itself (client/server-driven writes; the tail's reply needs none)
     base = jnp.where(chain_nodes != NO_HOP, model.service, 0.0)
+    if service_model is not None and service_model.kind != "fixed":
+        # the rng split happens only on the stochastic path, so the
+        # deterministic model's coordinator draws are unchanged
+        rng, r_service = jax.random.split(rng)
+        base = base * service_model.draw(r_service, (B, r_max))
     needs_lookup = (
         is_write[:, None]
         & (chain_nodes != NO_HOP)

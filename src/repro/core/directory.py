@@ -6,14 +6,27 @@ register arrays holding per-node forwarding info (IP / egress port), and two
 counter register arrays (read / update hits per record).
 
 On a TPU mesh the "switch memory" is replicated device memory: the directory
-lives as small arrays carried through the jitted step (DESIGN.md §2).  The
-``bounds``/``chains`` pair is the match-action table, ``node_addr`` is the
-forwarding-register pair (pod, device-within-pod), and ``read_count`` /
-``write_count`` are the statistics registers the controller harvests.
+lives as small arrays carried through the jitted step (DESIGN.md §2).
 
-All lookups are branch-free and batched: a vectorized binary search
-(``searchsorted``) replaces the TCAM range match.  The hot path has a Pallas
-kernel twin in ``repro.kernels.range_match``.
+**Slot-pool layout** (the shape-stable splitting substrate): the table is a
+pool of ``S`` physical *slots*; a logical sub-range occupies one slot.
+Slots are physical, ranges are logical — ``make_directory(n_slots=)``
+pre-allocates dead slots (like the ``r_max`` chain headroom) so the control
+plane (``Controller.split_range`` / ``merge_range``) can split the hot
+subset of a range and graft the result via ``Controller.refresh`` without
+changing any array shape.  A switch does the same thing: the register
+arrays are sized at compile time, the controller rewrites record *values*.
+
+Each slot carries its own inclusive ``[slot_lo, slot_hi]`` span plus a
+``live`` bit; dead (masked) slots lose every lookup.  Live slots partition
+the key space exactly (asserted in tests), so each matching value hits one
+record.  ``parent`` / ``generation`` record the split lineage for the
+controller's merge hysteresis.
+
+All lookups are branch-free and batched: a masked interval match (broadcast
+compare + min-index reduce) replaces the TCAM range match.  The hot path
+has a Pallas kernel twin in ``repro.kernels.range_match`` that computes the
+same formula — masked slots lose lookups bit-identically to this oracle.
 """
 
 from __future__ import annotations
@@ -28,39 +41,60 @@ import numpy as np
 from repro.core import keys as K
 
 NO_NODE = -1  # chain slot sentinel (spliced-out / absent replica)
+NO_SLOT = -1  # parent sentinel (genesis range, not born by a split)
+
+# dead-slot span sentinels: lo > hi can never match any matching value
+DEAD_LO = np.uint32(K.MAX_KEY)
+DEAD_HI = np.uint32(0)
 
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("bounds", "chains", "chain_len", "node_addr", "read_count", "write_count"),
+    data_fields=(
+        "slot_lo", "slot_hi", "live", "chains", "chain_len",
+        "parent", "generation", "node_addr", "read_count", "write_count",
+    ),
     meta_fields=("hash_partitioned",),
 )
 @dataclasses.dataclass(frozen=True)
 class Directory:
-    """Match-action table + forwarding registers + statistics registers.
+    """Slot-pool match-action table + forwarding and statistics registers.
 
-    bounds:      (R + 1,) uint32, ascending; sub-range i covers
-                 [bounds[i], bounds[i+1]).  bounds[0] == 0 and
-                 bounds[R] == MAX_KEY + 1 is represented by saturation:
-                 the last boundary is stored as 0xFFFFFFFF and the final
-                 range is inclusive of MAX_KEY.
-    chains:      (R, r_max) int32 node ids; position 0 is the chain head,
+    slot_lo:     (S,) uint32 inclusive span start of each slot's record
+                 (DEAD_LO on dead slots: lo > hi never matches).
+    slot_hi:     (S,) uint32 inclusive span end (DEAD_HI on dead slots).
+    live:        (S,) bool — slot holds a live record; masked slots lose
+                 every lookup.
+    chains:      (S, r_max) int32 node ids; position 0 is the chain head,
                  position chain_len-1 the tail; NO_NODE marks empty slots.
-    chain_len:   (R,) int32 live chain length (<= r_max).
+    chain_len:   (S,) int32 live chain length (<= r_max; 0 on dead slots).
+    parent:      (S,) int32 slot this record was split from (NO_SLOT for
+                 genesis ranges) — controller merge metadata.
+    generation:  (S,) int32 split depth (0 for genesis ranges).
     node_addr:   (N, 2) int32 forwarding registers: (pod, device) per node —
                  the paper's node-IP / node-port register arrays.
-    read_count:  (R,) uint32 per-record read-hit counter.
-    write_count: (R,) uint32 per-record update-hit counter.
+    read_count:  (S,) uint32 per-record read-hit counter.
+    write_count: (S,) uint32 per-record update-hit counter.
     """
 
-    bounds: jnp.ndarray
+    slot_lo: jnp.ndarray
+    slot_hi: jnp.ndarray
+    live: jnp.ndarray
     chains: jnp.ndarray
     chain_len: jnp.ndarray
+    parent: jnp.ndarray
+    generation: jnp.ndarray
     node_addr: jnp.ndarray
     read_count: jnp.ndarray
     write_count: jnp.ndarray
     hash_partitioned: bool = False
 
+    @property
+    def num_slots(self) -> int:
+        return self.chains.shape[0]
+
+    # legacy alias: pre-slot-pool code sized loops by the (then dense)
+    # range count; that extent is now the physical slot count
     @property
     def num_ranges(self) -> int:
         return self.chains.shape[0]
@@ -74,11 +108,11 @@ class Directory:
         return self.node_addr.shape[0]
 
     def head(self) -> jnp.ndarray:
-        """(R,) head node of each chain (write target)."""
+        """(S,) head node of each chain (write target)."""
         return self.chains[:, 0]
 
     def tail(self) -> jnp.ndarray:
-        """(R,) tail node of each chain (read target)."""
+        """(S,) tail node of each chain (read target)."""
         idx = jnp.maximum(self.chain_len - 1, 0)
         return jnp.take_along_axis(self.chains, idx[:, None], axis=1)[:, 0]
 
@@ -92,6 +126,7 @@ def make_directory(
     num_pods: int = 1,
     seed: int = 0,
     r_max: int | None = None,
+    n_slots: int | None = None,
 ) -> Directory:
     """Build the initial directory (host side; the controller owns layout).
 
@@ -104,24 +139,37 @@ def make_directory(
     ``r_max`` reserves chain-slot headroom beyond ``replication`` so the
     control plane (``Controller.widen_chain``, driven by the
     ``repro.cluster`` selective-replication policy) can widen hot chains
-    without changing any array shape — a requirement for the cluster
-    epoch step to stay compiled across control updates.
+    without changing any array shape.  ``n_slots`` reserves *range-slot*
+    headroom the same way: dead slots the controller's ``split_range`` can
+    allocate for hot-subset splits without changing any array shape — both
+    are requirements for the cluster epoch step to stay compiled across
+    control updates.
     """
     if replication > num_nodes:
         raise ValueError(f"replication {replication} > num_nodes {num_nodes}")
     r_max = replication if r_max is None else r_max
     if r_max < replication:
         raise ValueError(f"r_max {r_max} < replication {replication}")
+    n_slots = num_ranges if n_slots is None else n_slots
+    if n_slots < num_ranges:
+        raise ValueError(f"n_slots {n_slots} < num_ranges {num_ranges}")
+
     # Equal sub-ranges over the full uint32 matching-value space.
     edges = np.linspace(0, K.KEY_SPACE, num_ranges + 1)
     bounds = np.minimum(np.round(edges), K.KEY_SPACE - 1).astype(np.uint32)
     bounds[0] = 0
-    bounds[-1] = np.uint32(K.MAX_KEY)
+    slot_lo = np.full((n_slots,), DEAD_LO, dtype=np.uint32)
+    slot_hi = np.full((n_slots,), DEAD_HI, dtype=np.uint32)
+    slot_lo[:num_ranges] = bounds[:-1]
+    slot_hi[: num_ranges - 1] = bounds[1:-1] - 1
+    slot_hi[num_ranges - 1] = np.uint32(K.MAX_KEY)
+    live = np.zeros((n_slots,), dtype=bool)
+    live[:num_ranges] = True
 
     # Chain placement: stride the replica list so chain position p of range i
     # is node (i + p * stride) % N — every node serves every position.
     stride = max(1, num_nodes // replication)
-    chains = np.full((num_ranges, r_max), NO_NODE, dtype=np.int32)
+    chains = np.full((n_slots, r_max), NO_NODE, dtype=np.int32)
     for i in range(num_ranges):
         for p in range(replication):
             chains[i, p] = (i + p * stride) % num_nodes
@@ -133,6 +181,8 @@ def make_directory(
                 n = (n + 1) % num_nodes
             chains[i, p] = n
             seen.add(n)
+    chain_len = np.zeros((n_slots,), dtype=np.int32)
+    chain_len[:num_ranges] = replication
 
     nodes_per_pod = max(1, num_nodes // num_pods)
     node_addr = np.stack(
@@ -141,12 +191,16 @@ def make_directory(
     ).astype(np.int32)
 
     return Directory(
-        bounds=jnp.asarray(bounds),
+        slot_lo=jnp.asarray(slot_lo),
+        slot_hi=jnp.asarray(slot_hi),
+        live=jnp.asarray(live),
         chains=jnp.asarray(chains),
-        chain_len=jnp.full((num_ranges,), replication, dtype=jnp.int32),
+        chain_len=jnp.asarray(chain_len),
+        parent=jnp.full((n_slots,), NO_SLOT, dtype=jnp.int32),
+        generation=jnp.zeros((n_slots,), dtype=jnp.int32),
         node_addr=jnp.asarray(node_addr),
-        read_count=jnp.zeros((num_ranges,), dtype=jnp.uint32),
-        write_count=jnp.zeros((num_ranges,), dtype=jnp.uint32),
+        read_count=jnp.zeros((n_slots,), dtype=jnp.uint32),
+        write_count=jnp.zeros((n_slots,), dtype=jnp.uint32),
         hash_partitioned=hash_partitioned,
     )
 
@@ -154,14 +208,40 @@ def make_directory(
 def lookup_range(directory: Directory, mvals: jnp.ndarray) -> jnp.ndarray:
     """Vectorized range match (the switch TCAM lookup, paper §4.2).
 
-    Returns the sub-range index of each matching value.  Every matching
-    value hits exactly one record because the table covers the whole space.
+    Masked interval match over the slot pool: slot i hits iff it is live
+    and ``slot_lo[i] <= v <= slot_hi[i]``; the matched record is the
+    lowest-index hit (live slots partition the space, so exactly one slot
+    hits — the min is just a deterministic reduce).  Dead slots never hit.
+    The Pallas kernel twin computes the identical formula, so the two
+    paths agree bit for bit even on malformed tables.
     """
-    # sub-range i covers [bounds[i], bounds[i+1]); searchsorted over the
-    # interior boundaries gives the record index directly.
-    interior = directory.bounds[1:-1]
-    idx = jnp.searchsorted(interior, mvals.astype(jnp.uint32), side="right")
-    return idx.astype(jnp.int32)
+    v = mvals.astype(jnp.uint32)[..., None]
+    hit = directory.live[None, :] & (v >= directory.slot_lo[None, :]) & (
+        v <= directory.slot_hi[None, :]
+    )
+    S = directory.num_slots
+    iota = jnp.arange(S, dtype=jnp.int32)
+    ridx = jnp.min(jnp.where(hit, iota, jnp.int32(S)), axis=-1)
+    # no-hit guard (a malformed table only): clamp into the slot pool
+    return jnp.minimum(ridx, S - 1)
+
+
+def range_order(directory: Directory) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Key-order view of the slot pool: (order, rank).
+
+    ``order[k]`` is the slot holding the k-th range in ascending key order
+    (dead slots sort last); ``rank[s]`` is slot s's position in that order.
+    Scan expansion (clone-and-circulate) walks ranges in key order, which
+    the slot pool no longer stores positionally.
+    """
+    S = directory.num_slots
+    sort_key = jnp.where(
+        directory.live, directory.slot_lo, jnp.uint32(K.MAX_KEY)
+    )
+    # stable sort: dead slots (all DEAD_LO keys) keep index order at the tail
+    order = jnp.argsort(sort_key, stable=True).astype(jnp.int32)
+    rank = jnp.zeros((S,), jnp.int32).at[order].set(jnp.arange(S, dtype=jnp.int32))
+    return order, rank
 
 
 def chain_for(directory: Directory, ridx: jnp.ndarray):
@@ -194,7 +274,8 @@ def node_load(directory: Directory) -> jnp.ndarray:
     """Estimated per-node load from the statistics registers (paper §5.1).
 
     Reads are served by the tail only; writes touch every chain member.
-    Returns (N,) float32 load units.
+    Returns (N,) float32 load units.  Dead slots contribute nothing
+    (chain_len 0, counters never bumped).
     """
     R, r_max = directory.chains.shape
     n = directory.num_nodes
@@ -205,7 +286,9 @@ def node_load(directory: Directory) -> jnp.ndarray:
     w = jnp.zeros((n,), jnp.float32).at[safe.reshape(-1)].add(
         jnp.where(valid, directory.write_count[:, None].astype(jnp.float32), 0.0).reshape(-1)
     )
-    # reads: tail only
+    # reads: tail only (mode="drop": a dead slot's NO_NODE tail charges nobody)
     tail = directory.tail()
-    r = jnp.zeros((n,), jnp.float32).at[tail].add(directory.read_count.astype(jnp.float32))
+    r = jnp.zeros((n,), jnp.float32).at[tail].add(
+        directory.read_count.astype(jnp.float32), mode="drop"
+    )
     return w + r

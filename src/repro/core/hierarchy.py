@@ -69,7 +69,9 @@ def route_pod(table: PodTable, directory: Directory, q: QueryBatch) -> jnp.ndarr
 
 
 def pod_local_view(directory: Directory, pod: int) -> jnp.ndarray:
-    """(R,) mask of records whose head or tail lives in this pod — the ToR
-    working set (used by tests to check the hierarchy is consistent)."""
+    """(S,) mask of live records whose head or tail lives in this pod — the
+    ToR working set (used by tests to check the hierarchy is consistent).
+    Dead slots (NO_NODE chains) are masked out."""
     pods = directory.node_addr[:, 0]
-    return (pods[directory.head()] == pod) | (pods[directory.tail()] == pod)
+    hit = (pods[directory.head()] == pod) | (pods[directory.tail()] == pod)
+    return hit & directory.live

@@ -195,19 +195,25 @@ def expand_scans(
     B = q.batch
     is_scan = q.opcode == K.OP_SCAN
 
-    start_r = D.lookup_range(directory, q.key)          # (B,)
+    # The slot pool stores ranges unordered; walk them in key order via the
+    # (order, rank) view — clone j covers the (start_rank + j)-th range.
+    order, rank = D.range_order(directory)
+    start_r = D.lookup_range(directory, q.key)          # (B,) slot ids
     end_r = D.lookup_range(directory, jnp.maximum(q.end_key, q.key))
-    span = jnp.where(is_scan, end_r - start_r + 1, 1)   # sub-ranges covered
+    start_k = rank[start_r]                             # (B,) key-order ranks
+    end_k = rank[end_r]
+    span = jnp.where(is_scan, end_k - start_k + 1, 1)   # sub-ranges covered
 
     j = jnp.arange(F, dtype=jnp.int32)                  # clone index
-    ridx_j = jnp.minimum(start_r[:, None] + j[None, :], end_r[:, None])  # (B, F)
+    rank_j = jnp.minimum(start_k[:, None] + j[None, :], end_k[:, None])  # (B, F)
+    ridx_j = order[rank_j]                              # (B, F) slot ids
     live = (j[None, :] < span[:, None])                  # clone exists
 
-    # Clone j covers [max(key, bounds[r_j]), min(end, bounds[r_j + 1] - 1)].
-    lo = directory.bounds[ridx_j]
-    hi_edge = directory.bounds[ridx_j + 1]
+    # Clone j covers [max(key, slot_lo[r_j]), min(end, slot_hi[r_j])].
+    lo = directory.slot_lo[ridx_j]
+    hi = directory.slot_hi[ridx_j]
     sub_key = jnp.maximum(q.key[:, None], lo)
-    sub_end = jnp.minimum(q.end_key[:, None], hi_edge - 1)
+    sub_end = jnp.minimum(q.end_key[:, None], hi)
 
     opcode = jnp.where(
         live,

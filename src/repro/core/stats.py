@@ -29,12 +29,28 @@ from repro.core import keys as K
 
 @dataclasses.dataclass(frozen=True)
 class StatsReport:
-    """Host-side snapshot the controller consumes (numpy, off the hot path)."""
+    """Host-side snapshot the controller consumes (numpy, off the hot path).
 
-    read_count: np.ndarray     # (R,)
-    write_count: np.ndarray    # (R,)
+    Counter arrays are indexed by directory *slot* (S entries including
+    dead slots, which always report zero); ``live`` is the slot liveness
+    mask so policies can average over logical ranges only.
+
+    ``key_sample`` / ``key_heat`` are the sketch view of the period: a
+    sample of distinct keys observed by the data plane and their count-min
+    heat estimates (``stats.sketch_query``).  The split policies use them
+    to place split boundaries at heat quantiles *inside* a hot range —
+    the paper's "subset of the hot data" — something the per-record
+    counters alone cannot resolve.  None when the driver does not plumb
+    the sketch (plain controller pulls).
+    """
+
+    read_count: np.ndarray     # (S,)
+    write_count: np.ndarray    # (S,)
     node_load: np.ndarray      # (N,)
     period: int
+    live: np.ndarray | None = None        # (S,) bool slot liveness
+    key_sample: np.ndarray | None = None  # (M,) uint32 distinct sampled keys
+    key_heat: np.ndarray | None = None    # (M,) float64 sketch estimates
 
     @property
     def total_ops(self) -> int:
@@ -48,6 +64,7 @@ def pull_report(directory: D.Directory, period: int) -> tuple[StatsReport, D.Dir
         write_count=np.asarray(directory.write_count),
         node_load=np.asarray(D.node_load(directory)),
         period=period,
+        live=np.asarray(directory.live),
     )
     return report, D.reset_counters(directory)
 

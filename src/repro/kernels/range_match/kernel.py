@@ -3,18 +3,23 @@
 This is the paper's per-packet hot path (§4.2): match the matching value
 against the sub-range table, fetch the chain action data, pick head/tail by
 opcode.  A P4 switch does this in TCAM; the TPU-native formulation
-(DESIGN.md §2) is **compare-and-sum range matching** — for a table of R
-contiguous sub-ranges, the record index of value v is
+(DESIGN.md §2) is **masked interval matching over the slot pool** — the
+table is ``Spad`` physical slots with inclusive per-slot spans
+``[lo_i, hi_i]`` (dead/padding slots carry ``lo > hi`` and can never hit),
+and the record index of value v is
 
-    ridx(v) = sum_i [ v >= interior_bound_i ]          (i < R-1)
+    ridx(v) = min_i { i : lo_i <= v <= hi_i }          (clamped to S-1)
 
-an O(R) broadcast-compare + reduce that is perfectly lane-parallel on the
-VPU and needs no gather (TPU gathers from dynamic vectors are slow; the
-bounds tile lives wholly in VMEM).  Chain fetch is a one-hot contraction
+an O(S) broadcast-compare + min-reduce that is perfectly lane-parallel on
+the VPU and needs no gather (TPU gathers from dynamic vectors are slow; the
+span tiles live wholly in VMEM).  Unlike the earlier sorted-bounds
+compare-and-sum, this tolerates *holes*: the controller kills and
+reallocates slots in place (split/merge) without re-sorting the table, so
+the data plane never changes shape.  Chain fetch is a one-hot contraction
 against the chain table — an MXU matmul for free.
 
 Tiling: the packet batch is reshaped to (B/128, 128) and tiled (Bb, 128)
-rows per grid step; the bounds / chain tables are small (R <= few K) and are
+rows per grid step; the span / chain tables are small (S <= few K) and are
 mapped whole into VMEM every step (grid-invariant index_map).
 """
 
@@ -29,24 +34,40 @@ from jax.experimental import pallas as pl
 LANES = 128
 DEFAULT_BLOCK_ROWS = 8  # sublane-aligned f32/i32 tile height
 
+_NO_HIT = 0x7FFFFFFF  # min-reduce identity for the slot-match
 
-def _kernel(mvals_ref, opcodes_ref, bounds_ref, chains_ref, clen_ref,
-            ridx_ref, target_ref, chain_ref, *, num_ranges: int, r_max: int):
+
+def _slot_match_tile(mvals, lo, hi, num_slots: int):
+    """(Bb, 128) mvals vs (1, Spad) spans -> (Bb, 128) slot ids.
+
+    Dead/padding slots (lo > hi) lose every lookup; a (malformed-table)
+    total miss clamps to slot num_slots - 1, exactly like the jnp oracle.
+    """
+    spad = lo.shape[-1]
+    hit = (mvals[:, :, None] >= lo[0][None, None, :]) & (
+        mvals[:, :, None] <= hi[0][None, None, :]
+    )
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, spad), 2)
+    ridx = jnp.min(jnp.where(hit, iota, jnp.int32(_NO_HIT)), axis=-1)
+    return jnp.minimum(ridx, num_slots - 1)
+
+
+def _kernel(mvals_ref, opcodes_ref, lo_ref, hi_ref, chains_ref, clen_ref,
+            ridx_ref, target_ref, chain_ref, *, num_slots: int, r_max: int):
     mvals = mvals_ref[...]            # (Bb, 128) uint32
     opcodes = opcodes_ref[...]        # (Bb, 128) int32
-    bounds = bounds_ref[...]          # (1, Rpad) uint32 — interior bounds, MAX-padded
-    chains = chains_ref[...]          # (r_max, Rpad) int32
-    clen = clen_ref[...]              # (1, Rpad) int32
+    lo = lo_ref[...]                  # (1, Spad) uint32 span starts, dead-masked
+    hi = hi_ref[...]                  # (1, Spad) uint32 span ends, dead-masked
+    chains = chains_ref[...]          # (r_max, Spad) int32
+    clen = clen_ref[...]              # (1, Spad) int32
 
-    # --- compare-and-sum range match (vectorized searchsorted 'right') ---
-    # padding bounds are MAX_KEY: mvals < MAX so pads never increment.
-    ge = (mvals[:, :, None] >= bounds[0][None, None, :]).astype(jnp.int32)
-    ridx = jnp.sum(ge, axis=-1)       # (Bb, 128) in [0, R)
+    # --- masked interval match over the slot pool ---
+    ridx = _slot_match_tile(mvals, lo, hi, num_slots)   # (Bb, 128)
 
     # --- one-hot chain fetch (action-data registers) ---
-    rpad = bounds.shape[-1]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, rpad), 2)
-    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)       # (Bb,128,Rpad)
+    spad = lo.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, spad), 2)
+    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)       # (Bb,128,Spad)
     # chain position p of each packet: sum(onehot * chains[p])
     chain_cols = []
     for p in range(r_max):
@@ -68,10 +89,10 @@ def _kernel(mvals_ref, opcodes_ref, bounds_ref, chains_ref, clen_ref,
     chain_ref[...] = chain
 
 
-def _kernel_spread(mvals_ref, opcodes_ref, u1_ref, u2_ref, bounds_ref,
+def _kernel_spread(mvals_ref, opcodes_ref, u1_ref, u2_ref, lo_ref, hi_ref,
                    chains_ref, clen_ref, loads_ref,
                    ridx_ref, target_ref, chain_ref,
-                   *, num_ranges: int, r_max: int):
+                   *, num_slots: int, r_max: int):
     """Match-action stage with power-of-two-choices read spreading.
 
     Mirrors ``core.routing.route_load_aware``: writes -> chain head; reads
@@ -83,16 +104,16 @@ def _kernel_spread(mvals_ref, opcodes_ref, u1_ref, u2_ref, bounds_ref,
     opcodes = opcodes_ref[...]
     u1 = u1_ref[...]                  # (Bb, 128) int32 raw uniform draws
     u2 = u2_ref[...]
-    bounds = bounds_ref[...]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
     chains = chains_ref[...]
     clen = clen_ref[...]
     loads = loads_ref[...]            # (1, Npad) int32 load registers
 
-    ge = (mvals[:, :, None] >= bounds[0][None, None, :]).astype(jnp.int32)
-    ridx = jnp.sum(ge, axis=-1)
+    ridx = _slot_match_tile(mvals, lo, hi, num_slots)
 
-    rpad = bounds.shape[-1]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, rpad), 2)
+    spad = lo.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, spad), 2)
     onehot = (ridx[:, :, None] == iota).astype(jnp.int32)
     chain_cols = []
     for p in range(r_max):
@@ -132,11 +153,13 @@ def range_match_spread_pallas(
     opcodes: jnp.ndarray,          # (B,) int32
     u1: jnp.ndarray,               # (B,) int32 nonneg uniform draws
     u2: jnp.ndarray,               # (B,) int32
-    interior_bounds: jnp.ndarray,  # (Rpad,) uint32 MAX-padded
-    chains: jnp.ndarray,           # (r_max, Rpad) int32
-    chain_len: jnp.ndarray,        # (Rpad,) int32
+    slot_lo: jnp.ndarray,          # (Spad,) uint32 dead-masked span starts
+    slot_hi: jnp.ndarray,          # (Spad,) uint32 dead-masked span ends
+    chains: jnp.ndarray,           # (r_max, Spad) int32
+    chain_len: jnp.ndarray,        # (Spad,) int32
     loads: jnp.ndarray,            # (Npad,) int32 per-node load registers
     *,
+    num_slots: int,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
 ):
@@ -147,11 +170,11 @@ def range_match_spread_pallas(
     """
     B = mvals.shape[0]
     rows = B // LANES
-    r_max, rpad = chains.shape
+    r_max, spad = chains.shape
     npad = loads.shape[0]
 
     grid = (rows // block_rows,)
-    kernel = functools.partial(_kernel_spread, num_ranges=rpad, r_max=r_max)
+    kernel = functools.partial(_kernel_spread, num_slots=num_slots, r_max=r_max)
 
     out_shapes = (
         jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
@@ -168,9 +191,10 @@ def range_match_spread_pallas(
             pl.BlockSpec((block_rows, LANES), tile),
             pl.BlockSpec((block_rows, LANES), tile),
             pl.BlockSpec((block_rows, LANES), tile),
-            pl.BlockSpec((1, rpad), whole),
-            pl.BlockSpec((r_max, rpad), lambda i: (0, 0)),
-            pl.BlockSpec((1, rpad), whole),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((r_max, spad), lambda i: (0, 0)),
+            pl.BlockSpec((1, spad), whole),
             pl.BlockSpec((1, npad), whole),
         ],
         out_specs=(
@@ -185,9 +209,10 @@ def range_match_spread_pallas(
         opcodes.reshape(rows, LANES),
         u1.reshape(rows, LANES),
         u2.reshape(rows, LANES),
-        interior_bounds.reshape(1, rpad),
+        slot_lo.reshape(1, spad),
+        slot_hi.reshape(1, spad),
         chains,
-        chain_len.reshape(1, rpad),
+        chain_len.reshape(1, spad),
         loads.reshape(1, npad),
     )
     return ridx.reshape(B), target.reshape(B), chain.reshape(r_max, B)
@@ -196,10 +221,12 @@ def range_match_spread_pallas(
 def range_match_pallas(
     mvals: jnp.ndarray,        # (B,) uint32 matching values
     opcodes: jnp.ndarray,      # (B,) int32
-    interior_bounds: jnp.ndarray,  # (Rpad,) uint32, MAX-padded interior bounds
-    chains: jnp.ndarray,       # (r_max, Rpad) int32 (padded cols repeat last)
-    chain_len: jnp.ndarray,    # (Rpad,) int32
+    slot_lo: jnp.ndarray,      # (Spad,) uint32 dead-masked span starts
+    slot_hi: jnp.ndarray,      # (Spad,) uint32 dead-masked span ends
+    chains: jnp.ndarray,       # (r_max, Spad) int32
+    chain_len: jnp.ndarray,    # (Spad,) int32
     *,
+    num_slots: int,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
 ):
@@ -207,11 +234,10 @@ def range_match_pallas(
     (ops.py pads).  Returns (ridx (B,), target (B,), chain (r_max, B))."""
     B = mvals.shape[0]
     rows = B // LANES
-    r_max, rpad = chains.shape
-    num_ranges = rpad  # kernel only needs the padded extent
+    r_max, spad = chains.shape
 
     grid = (rows // block_rows,)
-    kernel = functools.partial(_kernel, num_ranges=num_ranges, r_max=r_max)
+    kernel = functools.partial(_kernel, num_slots=num_slots, r_max=r_max)
 
     out_shapes = (
         jax.ShapeDtypeStruct((rows, LANES), jnp.int32),        # ridx
@@ -225,9 +251,10 @@ def range_match_pallas(
         in_specs=[
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((1, rpad), whole),
-            pl.BlockSpec((r_max, rpad), lambda i: (0, 0)),
-            pl.BlockSpec((1, rpad), whole),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((r_max, spad), lambda i: (0, 0)),
+            pl.BlockSpec((1, spad), whole),
         ],
         out_specs=(
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
@@ -239,8 +266,9 @@ def range_match_pallas(
     )(
         mvals.reshape(rows, LANES),
         opcodes.reshape(rows, LANES),
-        interior_bounds.reshape(1, rpad),
+        slot_lo.reshape(1, spad),
+        slot_hi.reshape(1, spad),
         chains,
-        chain_len.reshape(1, rpad),
+        chain_len.reshape(1, spad),
     )
     return ridx.reshape(B), target.reshape(B), chain.reshape(r_max, B)

@@ -1,9 +1,15 @@
 """Jitted public wrapper for the range_match kernel.
 
-Handles padding (batch to 128*block_rows, table to a lane multiple) and
+Handles padding (batch to 128*block_rows, slot pool to a lane multiple) and
 adapts a :class:`repro.core.directory.Directory` into the kernel's padded
 table layout.  ``use_pallas=False`` falls back to the jnp oracle — the two
-paths are asserted identical in tests across shape/dtype sweeps.
+paths are asserted identical in tests across shape/dtype sweeps and across
+random split/merge sequences.
+
+Slot-pool packing: the directory's ``live`` mask is baked into the span
+arrays (dead slots get ``lo = MAX, hi = 0``), so masked slots lose every
+lookup in the kernel exactly as they do in ``directory.lookup_range`` —
+the padded tail slots use the same sentinel and are equally inert.
 
 Production-honesty notes:
 
@@ -41,21 +47,26 @@ def default_interpret() -> bool:
 
 
 def pack_tables(directory: Directory):
-    """Directory -> (interior_bounds, chains, chain_len) padded for the kernel."""
-    interior = directory.bounds[1:-1]                      # (R-1,)
-    r = interior.shape[0]
-    rpad = max(LANES, ((r + LANES - 1) // LANES) * LANES)
-    pad = jnp.full((rpad - r,), K.EMPTY_KEY, jnp.uint32)   # MAX: never matches
-    interior_p = jnp.concatenate([interior, pad])
+    """Directory -> (slot_lo, slot_hi, chains, chain_len) padded for the kernel.
 
-    R, r_max = directory.chains.shape
-    chains_t = directory.chains.T                          # (r_max, R)
-    cpad = jnp.zeros((r_max, rpad - R), jnp.int32)
+    Dead slots are masked into the inert ``lo > hi`` sentinel; padded tail
+    slots carry the same sentinel, so neither can ever win a lookup.
+    """
+    S = directory.num_slots
+    spad = max(LANES, ((S + LANES - 1) // LANES) * LANES)
+    lo = jnp.where(directory.live, directory.slot_lo, jnp.uint32(K.MAX_KEY))
+    hi = jnp.where(directory.live, directory.slot_hi, jnp.uint32(0))
+    lo_p = jnp.concatenate([lo, jnp.full((spad - S,), K.MAX_KEY, jnp.uint32)])
+    hi_p = jnp.concatenate([hi, jnp.zeros((spad - S,), jnp.uint32)])
+
+    r_max = directory.r_max
+    chains_t = directory.chains.T                          # (r_max, S)
+    cpad = jnp.zeros((r_max, spad - S), jnp.int32)
     chains_p = jnp.concatenate([chains_t, cpad], axis=1)
     clen_p = jnp.concatenate(
-        [directory.chain_len, jnp.ones((rpad - R,), jnp.int32)]
+        [directory.chain_len, jnp.ones((spad - S,), jnp.int32)]
     )
-    return interior_p, chains_p, clen_p
+    return lo_p, hi_p, chains_p, clen_p
 
 
 # Memoized pack_tables: keyed on the identity of the directory's buffers.
@@ -81,7 +92,10 @@ def pack_tables_cached(directory: Directory):
     mutated in place (true for jnp arrays; a Directory hand-built from
     numpy arrays must not edit them after first use).
     """
-    bufs = (directory.bounds, directory.chains, directory.chain_len)
+    bufs = (
+        directory.slot_lo, directory.slot_hi, directory.live,
+        directory.chains, directory.chain_len,
+    )
     if any(_is_tracer(b) for b in bufs):
         return pack_tables(directory)
     key = tuple(id(b) for b in bufs)
@@ -102,15 +116,19 @@ def pack_tables_cached(directory: Directory):
 
 @partial(
     jax.jit,
-    static_argnames=("hash_partitioned", "use_pallas", "interpret", "block_rows"),
+    static_argnames=(
+        "num_slots", "hash_partitioned", "use_pallas", "interpret", "block_rows",
+    ),
 )
 def _range_match_packed(
-    bounds_p,
+    lo_p,
+    hi_p,
     chains_p,
     clen_p,
     keys: jnp.ndarray,
     opcodes: jnp.ndarray,
     *,
+    num_slots: int,
     hash_partitioned: bool,
     use_pallas: bool,
     interpret: bool,
@@ -126,12 +144,13 @@ def _range_match_packed(
 
     if use_pallas:
         ridx, target, chain = range_match_pallas(
-            mvals, opcodes.astype(jnp.int32), bounds_p, chains_p, clen_p,
-            block_rows=block_rows, interpret=interpret,
+            mvals, opcodes.astype(jnp.int32), lo_p, hi_p, chains_p, clen_p,
+            num_slots=num_slots, block_rows=block_rows, interpret=interpret,
         )
     else:
         ridx, target, chain = range_match_ref(
-            mvals, opcodes.astype(jnp.int32), bounds_p, chains_p, clen_p
+            mvals, opcodes.astype(jnp.int32), lo_p, hi_p, chains_p, clen_p,
+            num_slots=num_slots,
         )
     return ridx[:B], target[:B], chain[:, :B]
 
@@ -153,9 +172,10 @@ def range_match(
     """
     if interpret is None:
         interpret = default_interpret()
-    bounds_p, chains_p, clen_p = pack_tables_cached(directory)
+    lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
     return _range_match_packed(
-        bounds_p, chains_p, clen_p, keys, opcodes,
+        lo_p, hi_p, chains_p, clen_p, keys, opcodes,
+        num_slots=directory.num_slots,
         hash_partitioned=bool(directory.hash_partitioned),
         use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
     )
@@ -163,10 +183,13 @@ def range_match(
 
 @partial(
     jax.jit,
-    static_argnames=("hash_partitioned", "use_pallas", "interpret", "block_rows"),
+    static_argnames=(
+        "num_slots", "hash_partitioned", "use_pallas", "interpret", "block_rows",
+    ),
 )
 def _range_match_spread_packed(
-    bounds_p,
+    lo_p,
+    hi_p,
     chains_p,
     clen_p,
     keys: jnp.ndarray,
@@ -174,6 +197,7 @@ def _range_match_spread_packed(
     load_reg: jnp.ndarray,
     rng,
     *,
+    num_slots: int,
     hash_partitioned: bool,
     use_pallas: bool,
     interpret: bool,
@@ -204,13 +228,14 @@ def _range_match_spread_packed(
     if use_pallas:
         ridx, target, chain = range_match_spread_pallas(
             mvals, opcodes.astype(jnp.int32), u1, u2,
-            bounds_p, chains_p, clen_p, loads_p,
-            block_rows=block_rows, interpret=interpret,
+            lo_p, hi_p, chains_p, clen_p, loads_p,
+            num_slots=num_slots, block_rows=block_rows, interpret=interpret,
         )
     else:
         ridx, target, chain = range_match_spread_ref(
             mvals, opcodes.astype(jnp.int32), u1, u2,
-            bounds_p, chains_p, clen_p, loads_p,
+            lo_p, hi_p, chains_p, clen_p, loads_p,
+            num_slots=num_slots,
         )
     return ridx[:B], target[:B], chain[:, :B]
 
@@ -235,9 +260,10 @@ def range_match_spread(
     """
     if interpret is None:
         interpret = default_interpret()
-    bounds_p, chains_p, clen_p = pack_tables_cached(directory)
+    lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
     return _range_match_spread_packed(
-        bounds_p, chains_p, clen_p, keys, opcodes, load_reg, rng,
+        lo_p, hi_p, chains_p, clen_p, keys, opcodes, load_reg, rng,
+        num_slots=directory.num_slots,
         hash_partitioned=bool(directory.hash_partitioned),
         use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
     )

@@ -1,25 +1,44 @@
-"""Pure-jnp oracle for the range_match kernel (mirrors core.routing)."""
+"""Pure-jnp oracle for the range_match kernel (mirrors core.routing).
+
+Slot-pool contract: the table is a pool of ``Spad`` padded slots with
+inclusive per-slot spans ``[lo_i, hi_i]``; dead and padding slots carry
+``lo > hi`` (lo = MAX, hi = 0) so they lose every lookup.  The matched
+record is the lowest-index hit, clamped into the true pool ``[0,
+num_slots)`` — the exact formula of ``directory.lookup_range`` and of the
+Pallas kernels, so all three agree bit for bit.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+def _slot_match(mvals, slot_lo, slot_hi, num_slots: int):
+    """Masked interval match: (B,) matching values -> (B,) slot ids."""
+    hit = (mvals[:, None] >= slot_lo[None, :]) & (mvals[:, None] <= slot_hi[None, :])
+    spad = slot_lo.shape[0]
+    iota = jnp.arange(spad, dtype=jnp.int32)
+    ridx = jnp.min(jnp.where(hit, iota[None, :], jnp.int32(spad)), axis=-1)
+    return jnp.minimum(ridx, num_slots - 1)
+
+
 def range_match_ref(
     mvals: jnp.ndarray,
     opcodes: jnp.ndarray,
-    interior_bounds: jnp.ndarray,
+    slot_lo: jnp.ndarray,
+    slot_hi: jnp.ndarray,
     chains: jnp.ndarray,
     chain_len: jnp.ndarray,
+    *,
+    num_slots: int,
 ):
     """Same contract as kernel.range_match_pallas, computed with jnp.
 
-    interior_bounds: (Rpad,) uint32 MAX-padded; chains (r_max, Rpad);
-    chain_len (Rpad,).
+    slot_lo / slot_hi: (Spad,) uint32 dead-masked (lo > hi on dead/pad
+    slots); chains (r_max, Spad); chain_len (Spad,); ``num_slots`` is the
+    true (unpadded) pool size.
     """
-    ridx = jnp.sum(
-        (mvals[:, None] >= interior_bounds[None, :]).astype(jnp.int32), axis=-1
-    )
+    ridx = _slot_match(mvals, slot_lo, slot_hi, num_slots)
     chain = chains[:, ridx]                     # (r_max, B)
     clen = chain_len[ridx]                      # (B,)
     head = chain[0]
@@ -34,19 +53,20 @@ def range_match_spread_ref(
     opcodes: jnp.ndarray,
     u1: jnp.ndarray,
     u2: jnp.ndarray,
-    interior_bounds: jnp.ndarray,
+    slot_lo: jnp.ndarray,
+    slot_hi: jnp.ndarray,
     chains: jnp.ndarray,
     chain_len: jnp.ndarray,
     loads: jnp.ndarray,
+    *,
+    num_slots: int,
 ):
     """jnp oracle for kernel.range_match_spread_pallas (p2c read spreading).
 
     Mirrors ``core.routing.route_load_aware`` target selection given the
     same pre-drawn uniforms u1/u2 and node load registers.
     """
-    ridx = jnp.sum(
-        (mvals[:, None] >= interior_bounds[None, :]).astype(jnp.int32), axis=-1
-    )
+    ridx = _slot_match(mvals, slot_lo, slot_hi, num_slots)
     chain = chains[:, ridx]
     clen = chain_len[ridx]
     head = chain[0]

@@ -253,20 +253,24 @@ def test_switch_failure_repeated_rack_is_idempotent():
 
 
 def test_split_of_saturated_last_range():
-    d = C.make_directory(8, 8, 2)
+    d = C.make_directory(8, 8, 2)  # no slot headroom: split must grow the pool
     ctl = C.Controller(d)
-    assert int(ctl._dir["bounds"][-1]) == 0xFFFFFFFF
+    assert int(ctl._dir["slot_hi"][7]) == 0xFFFFFFFF
     ops = ctl.split_overflowed(7, np.zeros(8))
-    assert ctl.num_ranges == 9
-    b = ctl._dir["bounds"]
-    assert int(b[-1]) == 0xFFFFFFFF
-    assert (np.diff(b.astype(np.uint64)) > 0).all()  # still ascending
-    # every key still matches exactly one record in the rebuilt directory
+    assert ctl.num_ranges == 9          # live records
+    assert ctl.num_slots == 16          # pool doubled (shape change)
+    hi = ctl._dir["slot_hi"]
+    live = ctl._dir["live"]
+    assert int(hi[live].astype(np.uint64).max()) == 0xFFFFFFFF
+    # every key still matches exactly one live record in the rebuilt directory
     d2 = ctl.directory()
     probes = jnp.asarray([0, 1, 2**31, 0xFFFFFFFE, 0xFFFFFFFF], jnp.uint32)
     ridx = np.asarray(C.lookup_range(d2, probes))
-    assert (ridx >= 0).all() and (ridx < 9).all()
-    assert ridx[-1] == 8  # MAX_KEY matches the (split) last record
+    assert bool(np.asarray(d2.live)[ridx].all())
+    lo2 = np.asarray(d2.slot_lo).astype(np.uint64)
+    hi2 = np.asarray(d2.slot_hi).astype(np.uint64)
+    for k, r in zip(np.asarray(probes, np.uint64), ridx):
+        assert lo2[r] <= k <= hi2[r]
     if ops:
         assert ops[0].hi == 0xFFFFFFFF
 
@@ -275,9 +279,88 @@ def test_split_of_tiny_range_refuses():
     d = C.make_directory(8, 8, 2)
     ctl = C.Controller(d)
     # shrink range 0 to width 1: [0, 0]
-    ctl._dir["bounds"][1] = np.uint32(1)
+    ctl._dir["slot_hi"][0] = np.uint32(0)
     assert ctl.split_overflowed(0, np.zeros(8)) == []
     assert ctl.num_ranges == 8
+
+
+def test_split_range_uses_pool_without_shape_change():
+    d = C.make_directory(8, 8, 2, n_slots=16)
+    ctl = C.Controller(d)
+    lo, hi = ctl.range_span(2)
+    child = ctl.split_range(2, lo + (hi - lo) // 2)
+    assert child is not None and child >= 8       # allocated from the pool
+    assert ctl.num_slots == 16                    # no shape change
+    assert ctl.num_ranges == 9
+    d2 = ctl.refresh(d)                           # graft works: shapes agree
+    # child covers the upper half, parent the lower; chains identical
+    clo, chi = ctl.range_span(child)
+    plo, phi = ctl.range_span(2)
+    assert plo == lo and chi == hi and phi + 1 == clo
+    assert (ctl.chain_nodes(child) == ctl.chain_nodes(2)).all()
+    # lookups land on the right halves
+    probes = jnp.asarray([plo, phi, clo, chi], jnp.uint32)
+    ridx = np.asarray(C.lookup_range(d2, probes))
+    assert list(ridx) == [2, 2, child, child]
+
+
+def test_merge_range_roundtrip_and_ops():
+    d = C.make_directory(4, 8, 2, n_slots=8)
+    ctl = C.Controller(d)
+    before = {k: v.copy() for k, v in ctl._dir.items()}
+    lo, hi = ctl.range_span(1)
+    child = ctl.split_range(1, lo + (hi - lo) // 2)
+    # move the child's head elsewhere so the merge has to emit data ops
+    old_head = int(ctl.chain_nodes(child)[0])
+    new_head = (old_head + 3) % 8
+    ctl._dir["chains"][child, 0] = new_head
+    ops = ctl.merge_range(child)
+    assert ops is not None
+    kinds = sorted(o.kind for o in ops)
+    assert "copy" in kinds and "reclaim" in kinds  # converge + free child copy
+    for o in ops:
+        assert o.lo >= lo and o.hi <= hi           # priced by the child span
+    # directory round-trips exactly (slot tables identical to pre-split)
+    for k in ("slot_lo", "slot_hi", "live", "chain_len", "parent",
+              "generation", "chains"):
+        assert (ctl._dir[k] == before[k]).all(), k
+
+
+def test_merge_refuses_non_adjacent_child():
+    d = C.make_directory(4, 8, 2, n_slots=8)
+    ctl = C.Controller(d)
+    lo, hi = ctl.range_span(0)
+    c1 = ctl.split_range(0, lo + (hi - lo) // 2)
+    # parent re-splits: c1 is no longer adjacent to its parent
+    plo, phi = ctl.range_span(0)
+    c2 = ctl.split_range(0, plo + (phi - plo) // 2)
+    assert c1 is not None and c2 is not None
+    assert ctl.merge_range(c1) is None            # spans drifted apart
+    assert ctl.merge_range(c2) is not None        # still adjacent
+
+
+def test_merge_credits_live_counters_to_parent():
+    d = C.make_directory(4, 8, 2, n_slots=8)
+    ctl = C.Controller(d)
+    lo, hi = ctl.range_span(1)
+    child = ctl.split_range(1, lo + (hi - lo) // 2)
+    d_live = ctl.refresh(d)
+    # traffic lands on the child mid-period
+    clo, chi = ctl.range_span(child)
+    keys = jnp.asarray(
+        np.linspace(clo, chi, 64, dtype=np.uint64).astype(np.uint32))
+    q = C.make_queries(keys, jnp.zeros((64,), jnp.int32), value_dim=1)
+    _, d_live = C.route(d_live, q)
+    child_reads = int(np.asarray(d_live.read_count)[child])
+    assert child_reads > 0
+    total = int(np.asarray(d_live.read_count).sum())
+    # merge, then refresh: the dead child's unreported hits move to parent
+    assert ctl.merge_range(child) is not None
+    d2 = ctl.refresh(d_live)
+    rc = np.asarray(d2.read_count)
+    assert int(rc[child]) == 0
+    assert int(rc.sum()) == total                  # no heat lost
+    assert int(rc[1]) >= child_reads
 
 
 # ---------------------------------------------------------------------------
@@ -380,9 +463,11 @@ def test_node_failure_mid_load_keeps_serving():
         assert r.throughput > 0
     chains = np.asarray(drv.directory.chains)
     clen = np.asarray(drv.directory.chain_len)
+    live = np.asarray(drv.directory.live)
     # node 0 recovered at epoch 3, may be back; but during failure the
-    # store kept answering (throughput > 0 asserted above)
-    assert (clen >= 1).all()
+    # store kept answering (throughput > 0 asserted above).  Every *live*
+    # record keeps a live chain (dead pool slots legitimately hold 0).
+    assert (clen[live] >= 1).all()
 
 
 def test_driver_rejects_bad_backend():
@@ -408,8 +493,11 @@ def test_dist_backend_single_device_mesh():
 
 def test_policy_registry():
     from repro.cluster import POLICIES
-    assert set(POLICIES) == {"frozen", "migrate", "replicate", "full_adaptive"}
+    assert set(POLICIES) == {
+        "frozen", "migrate", "replicate", "split_hot", "full_adaptive",
+    }
     assert make_policy("replicate").read_spread
     assert not make_policy("migrate").read_spread
+    assert not make_policy("split_hot").read_spread
     with pytest.raises(ValueError):
         make_policy("nope")

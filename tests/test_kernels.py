@@ -43,8 +43,10 @@ def test_range_match_hash_partitioned():
 
 def test_range_match_boundary_keys():
     d = C.make_directory(16, 4, 2)
-    bounds = np.asarray(d.bounds)
-    probes = np.concatenate([bounds[:-1], bounds[1:-1] - 1, [0, 2**32 - 2]])
+    lo = np.asarray(d.slot_lo).astype(np.uint64)
+    hi = np.asarray(d.slot_hi).astype(np.uint64)
+    # every span edge plus its inside neighbours, and the space extremes
+    probes = np.concatenate([lo, hi, np.minimum(lo + 1, hi), [0, 2**32 - 2]])
     keys = jnp.asarray(probes, jnp.uint32)
     ops = jnp.zeros((len(probes),), jnp.int32)
     out_k = range_match(d, keys, ops, use_pallas=True)

@@ -43,10 +43,13 @@ def test_routing_target_in_chain(keys, n_ranges, n_nodes, r):
 @settings(**SETTINGS)
 @given(keys=key_arrays)
 def test_lookup_matches_numpy_searchsorted(keys):
+    # a fresh directory's live slots are in ascending key order, so the
+    # masked interval match must agree with a plain numpy searchsorted
+    # over the span starts
     d = C.make_directory(32, 4, 2)
     ridx = np.asarray(C.lookup_range(d, jnp.asarray(keys, jnp.uint32)))
-    bounds = np.asarray(d.bounds)
-    expect = np.searchsorted(bounds[1:-1], np.asarray(keys, np.uint32), side="right")
+    lo = np.asarray(d.slot_lo)
+    expect = np.searchsorted(lo, np.asarray(keys, np.uint32), side="right") - 1
     np.testing.assert_array_equal(ridx, expect)
     assert (ridx >= 0).all() and (ridx < 32).all()
 
@@ -160,3 +163,44 @@ def test_migration_preserves_data(seed):
     all0 = np.sort(np.asarray(store.keys).reshape(-1))
     all1 = np.sort(np.asarray(store2.keys).reshape(-1))
     np.testing.assert_array_equal(all0, all1)  # same multiset of keys
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999), n_actions=st.integers(1, 24))
+def test_split_merge_roundtrip_and_partition(seed, n_actions):
+    """Any chain of slot-pool splits (a) keeps the live slots an exact
+    partition of the key space with lookups agreeing between oracle and
+    packed ref, and (b) round-trips the directory bit-exactly when
+    unwound by merges in reverse order."""
+    rng = np.random.default_rng(seed)
+    ctl = C.Controller(C.make_directory(6, 6, 2, n_slots=48))
+    before = {k: v.copy() for k, v in ctl._dir.items()}
+    children = []
+    for _ in range(n_actions):
+        live = ctl.live_ranges()
+        ridx = int(rng.choice(live))
+        lo, hi = ctl.range_span(ridx)
+        if hi - lo < 2:
+            continue
+        child = ctl.split_range(ridx, int(rng.integers(lo, hi)))
+        if child is not None:
+            children.append(child)
+
+    d = ctl.directory()
+    lo_a = np.asarray(d.slot_lo).astype(np.uint64)
+    hi_a = np.asarray(d.slot_hi).astype(np.uint64)
+    live_m = np.asarray(d.live)
+    spans = sorted(zip(lo_a[live_m], hi_a[live_m]))
+    assert spans[0][0] == 0 and spans[-1][1] == K.MAX_KEY
+    for (l0, h0), (l1, h1) in zip(spans, spans[1:]):
+        assert h0 + 1 == l1
+
+    probes = jnp.asarray(rng.integers(0, 2**32, 128, dtype=np.uint32))
+    ridx = np.asarray(C.lookup_range(d, probes))
+    for k, r in zip(np.asarray(probes, np.uint64), ridx):
+        assert live_m[r] and lo_a[r] <= k <= hi_a[r]
+
+    for child in reversed(children):
+        assert ctl.merge_range(child) is not None
+    for k, v in before.items():
+        np.testing.assert_array_equal(ctl._dir[k], v, err_msg=k)

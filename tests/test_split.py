@@ -1,0 +1,336 @@
+"""Slot-pool splitting invariants: split/merge round-trips, coverage,
+kernel-vs-oracle parity across random split sequences, and the
+compile-once gate for the split policies.
+
+The one invariant everything here exercises: **slots are physical,
+ranges are logical** — any sequence of splits and merges leaves the
+directory a shape-stable array pool whose live slots exactly partition
+the key space, and every lookup path (jnp oracle, Pallas kernel, packed
+ref) agrees bit for bit, with masked slots losing every lookup.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as C
+from repro.core import keys as K
+from repro.kernels.range_match.ops import range_match, range_match_spread
+
+from repro.cluster import (
+    ClusterConfig,
+    EpochDriver,
+    ScenarioConfig,
+    make_policy,
+    make_scenario,
+    summarize,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _random_split_sequence(ctl, n_actions, rng, merge_prob=0.3):
+    """Random valid splits (and some merges) against a controller."""
+    for _ in range(n_actions):
+        if rng.random() < merge_prob:
+            kids = ctl.children()
+            if kids:
+                ctl.merge_range(int(rng.choice(kids)))
+                continue
+        live = ctl.live_ranges()
+        ridx = int(rng.choice(live))
+        lo, hi = ctl.range_span(ridx)
+        if hi - lo < 2:
+            continue
+        boundary = int(rng.integers(lo, hi))  # [lo, hi)
+        ctl.split_range(ridx, boundary)
+
+
+def _assert_partition(d):
+    """Live slots partition [0, MAX_KEY] exactly."""
+    lo = np.asarray(d.slot_lo).astype(np.uint64)
+    hi = np.asarray(d.slot_hi).astype(np.uint64)
+    live = np.asarray(d.live)
+    spans = sorted(zip(lo[live], hi[live]))
+    assert spans[0][0] == 0
+    assert spans[-1][1] == K.MAX_KEY
+    for (l0, h0), (l1, h1) in zip(spans, spans[1:]):
+        assert h0 + 1 == l1, (h0, l1)  # gapless, non-overlapping
+
+
+# ---------------------------------------------------------------------------
+# directory invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_split_sequences_keep_partition(seed):
+    rng = np.random.default_rng(seed)
+    ctl = C.Controller(C.make_directory(8, 8, 2, n_slots=64))
+    _random_split_sequence(ctl, 40, rng)
+    d = ctl.directory()
+    _assert_partition(d)
+    # every probe key matches a live slot that actually covers it
+    probes = jnp.asarray(rng.integers(0, 2**32, 512, dtype=np.uint32))
+    ridx = np.asarray(C.lookup_range(d, probes))
+    lo = np.asarray(d.slot_lo).astype(np.uint64)
+    hi = np.asarray(d.slot_hi).astype(np.uint64)
+    live = np.asarray(d.live)
+    for k, r in zip(np.asarray(probes, np.uint64), ridx):
+        assert live[r] and lo[r] <= k <= hi[r]
+
+
+def test_split_merge_roundtrip_property():
+    """split∘merge round-trips the directory exactly, for random chains
+    of splits unwound in reverse order."""
+    rng = np.random.default_rng(3)
+    ctl = C.Controller(C.make_directory(6, 8, 2, n_slots=32))
+    before = {k: v.copy() for k, v in ctl._dir.items()}
+    children = []
+    for _ in range(12):
+        live = ctl.live_ranges()
+        ridx = int(rng.choice(live))
+        lo, hi = ctl.range_span(ridx)
+        if hi - lo < 2:
+            continue
+        child = ctl.split_range(ridx, int(rng.integers(lo, hi)))
+        if child is not None:
+            children.append(child)
+    assert children
+    for child in reversed(children):
+        assert ctl.merge_range(child) is not None
+    for k, v in before.items():
+        assert (ctl._dir[k] == v).all(), k
+
+
+def test_masked_slots_lose_lookups():
+    """A key in a dead slot's stale span must land in the live covering
+    slot, never the dead one (oracle and kernel alike)."""
+    ctl = C.Controller(C.make_directory(4, 8, 2, n_slots=8))
+    lo, hi = ctl.range_span(1)
+    child = ctl.split_range(1, lo + (hi - lo) // 2)
+    ctl.merge_range(child)  # child now dead; parent re-covers its span
+    d = ctl.directory()
+    probes = jnp.asarray(
+        np.linspace(lo, hi, 64, dtype=np.uint64).astype(np.uint32))
+    ridx = np.asarray(C.lookup_range(d, probes))
+    assert (ridx == 1).all()
+    for use_pallas in (False, True):
+        kr, _, _ = range_match(d, probes, jnp.zeros((64,), jnp.int32),
+                               use_pallas=use_pallas)
+        assert np.array_equal(np.asarray(kr), ridx)
+
+
+def test_expand_scans_across_split_boundaries():
+    """A scan spanning a split range returns the same results before and
+    after the split (store content fixed; only the directory changed)."""
+    d = C.make_directory(4, 6, 2, n_slots=8)
+    store = C.make_store(6, 256, 2)
+    rng = np.random.default_rng(5)
+    keys = np.sort(rng.choice(2**31, 80, replace=False).astype(np.uint32))
+    vals = jnp.asarray(rng.normal(size=(80, 2)), jnp.float32)
+    qp = C.make_queries(jnp.asarray(keys), jnp.full((80,), C.OP_PUT), vals)
+    dec, d = C.route(d, qp)
+    store, _ = C.apply_routed(store, qp, dec)
+
+    k0, k1 = int(keys[10]), int(keys[40])
+    scan_q = C.make_queries(
+        jnp.asarray([k0], jnp.uint32), jnp.asarray([C.OP_SCAN]),
+        end_keys=jnp.asarray([k1], jnp.uint32), value_dim=2,
+    )
+
+    def run_scan(directory):
+        ex = C.expand_scans(directory, scan_q, max_scan_fanout=8)
+        dec, _ = C.route(directory, ex)
+        _, resp = C.apply_routed(store, ex, dec, max_scan_results=64)
+        got = np.asarray(resp.scan_keys)
+        return np.unique(got[got != np.uint32(0xFFFFFFFF)])
+
+    base = run_scan(d)
+    expect = keys[(keys >= k0) & (keys <= k1)]
+    np.testing.assert_array_equal(base, expect)
+
+    ctl = C.Controller(d)
+    # split the range containing the scan's midpoint, twice
+    mid = (k0 + k1) // 2
+    ridx = int(np.asarray(C.lookup_range(d, jnp.asarray([mid], jnp.uint32)))[0])
+    ctl.split_range(ridx, mid)
+    lo, hi = ctl.range_span(ridx)
+    if hi - lo >= 2:
+        ctl.split_range(ridx, lo + (hi - lo) // 2)
+    d2 = ctl.refresh(d)
+    np.testing.assert_array_equal(run_scan(d2), expect)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity across split sequences
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_kernel_parity_after_random_splits(seed):
+    rng = np.random.default_rng(seed)
+    ctl = C.Controller(C.make_directory(16, 8, 3, r_max=5, n_slots=128))
+    _random_split_sequence(ctl, 60, rng)
+    d = ctl.directory()
+    _assert_partition(d)
+    keys = jnp.asarray(rng.integers(0, 2**32, 777, dtype=np.uint32))
+    ops = jnp.asarray(rng.integers(0, 4, 777), jnp.int32)
+    out_p = range_match(d, keys, ops, use_pallas=True)
+    out_r = range_match(d, keys, ops, use_pallas=False)
+    for a, b in zip(out_p, out_r):
+        assert jnp.array_equal(a, b)
+    # the oracle route agrees with the packed paths
+    q = C.make_queries(keys, ops)
+    dec, _ = C.route(d, q)
+    assert np.array_equal(np.asarray(out_p[0]), np.asarray(dec.ridx))
+    assert np.array_equal(np.asarray(out_p[1]), np.asarray(dec.target))
+
+
+def test_spread_kernel_parity_after_random_splits():
+    rng = np.random.default_rng(11)
+    ctl = C.Controller(C.make_directory(16, 8, 3, r_max=5, n_slots=64))
+    _random_split_sequence(ctl, 30, rng)
+    d = ctl.directory()
+    keys = jnp.asarray(rng.integers(0, 2**32, 300, dtype=np.uint32))
+    ops = jnp.asarray(np.where(rng.random(300) < 0.2, K.OP_PUT, K.OP_GET),
+                      jnp.int32)
+    load = jnp.asarray(rng.integers(0, 50, 8), jnp.uint32)
+    key = jax.random.PRNGKey(9)
+    dec, _, _ = C.route_load_aware(
+        d, C.make_queries(keys, ops), load, key
+    )
+    for use_pallas in (False, True):
+        ridx, target, chain = range_match_spread(
+            d, keys, ops, load, key, use_pallas=use_pallas
+        )
+        assert np.array_equal(np.asarray(ridx), np.asarray(dec.ridx))
+        assert np.array_equal(np.asarray(target), np.asarray(dec.target))
+        assert np.array_equal(np.asarray(chain).T, np.asarray(dec.chain))
+
+
+def test_split_preserves_heat_totals_mid_period():
+    """Counters accumulated before a split stay attributed; post-split
+    traffic divides between parent and child."""
+    d = C.make_directory(4, 8, 2, n_slots=8)
+    keys = jnp.asarray(np.linspace(0, 2**30, 128, dtype=np.uint64)
+                       .astype(np.uint32))
+    q = C.make_queries(keys, jnp.zeros((128,), jnp.int32), value_dim=1)
+    _, d = C.route(d, q)
+    total0 = int(np.asarray(d.read_count).sum())
+    ctl = C.Controller(d)
+    lo, hi = ctl.range_span(0)
+    child = ctl.split_range(0, lo + (hi - lo) // 2)
+    d = ctl.refresh(d)
+    assert int(np.asarray(d.read_count).sum()) == total0  # nothing lost
+    _, d = C.route(d, q)
+    rc = np.asarray(d.read_count)
+    assert rc[0] > 0 and rc[child] > 0  # both halves now observed
+
+
+# ---------------------------------------------------------------------------
+# scenarios + the closed loop with splitting policies
+# ---------------------------------------------------------------------------
+
+
+def test_new_scenarios_fixed_shapes_and_valid_probs():
+    cfg = ScenarioConfig(n_epochs=4, epoch_ops=128, n_records=256, value_dim=2)
+    for name in ("multi_hotspot", "keyspace_growth"):
+        scen = make_scenario(name, cfg)
+        for e in range(cfg.n_epochs):
+            p = scen.record_probs(e)
+            assert p.shape == (cfg.n_records,)
+            np.testing.assert_allclose(p.sum(), 1.0, atol=1e-9)
+            opcodes, keys, end_keys, values = scen.epoch(e)
+            assert opcodes.shape == keys.shape == (128,)
+            assert values.shape == (128, 2)
+
+
+def test_multi_hotspot_has_multiple_simultaneous_peaks():
+    cfg = ScenarioConfig(n_epochs=4, epoch_ops=256, n_records=1024)
+    scen = make_scenario("multi_hotspot", cfg, n_hotspots=3, shift_every=2)
+    p = scen.record_probs(0)
+    peaks = np.argsort(p)[-3:]
+    assert np.ptp(peaks) > 64  # the top-3 records live in distant blocks
+    # ... and the hotspots rotate
+    assert scen.record_probs(0).argmax() != scen.record_probs(3).argmax()
+
+
+def test_keyspace_growth_frontier_advances():
+    cfg = ScenarioConfig(n_epochs=6, epoch_ops=256, n_records=1024)
+    scen = make_scenario("keyspace_growth", cfg, start_frac=0.25)
+    load_keys, _ = scen.load()
+    assert len(load_keys) == 256  # only the starting prefix exists
+    assert scen.record_probs(0).argmax() < scen.record_probs(5).argmax()
+
+
+TINY_SCFG = ScenarioConfig(n_epochs=4, epoch_ops=256, n_records=512,
+                           value_dim=2, seed=3)
+
+
+def test_split_policy_epoch_step_compiles_once():
+    ccfg = ClusterConfig(num_nodes=8, num_ranges=32, replication=2, r_max=4,
+                         n_slots=64, n_clients=16, imbalance_threshold=1.1,
+                         max_moves_per_round=6)
+    for pol in ("split_hot", "full_adaptive"):
+        scen = make_scenario("multi_hotspot", TINY_SCFG, shift_every=2)
+        drv = EpochDriver(scen, make_policy(pol), ccfg)
+        rows = drv.run()
+        assert drv.traces == 1, pol
+        assert all(r.throughput > 0 for r in rows)
+        # splitting actually happened and stayed inside the pool
+        assert drv.controller.num_ranges > 32
+        assert drv.controller.num_slots == 64
+
+
+def test_p2c_chunked_step_compiles_once_and_balances():
+    base = ClusterConfig(num_nodes=8, num_ranges=32, replication=2, r_max=4,
+                         n_clients=16)
+    results = {}
+    for chunks in (1, 4):
+        ccfg = ClusterConfig(**{**base.__dict__, "p2c_chunks": chunks})
+        scen = make_scenario("flash_crowd", TINY_SCFG, t0=1, t1=3)
+        drv = EpochDriver(scen, make_policy("replicate"), ccfg)
+        results[chunks] = summarize(drv.run())
+        assert drv.traces == 1
+    # fresher registers must not make balance *worse*; give slack for noise
+    assert (results[4]["mean_imbalance"]
+            <= results[1]["mean_imbalance"] * 1.25)
+
+
+def test_p2c_chunks_must_divide_epoch_ops():
+    ccfg = ClusterConfig(num_nodes=8, num_ranges=32, replication=2,
+                         p2c_chunks=3)
+    scen = make_scenario("stationary", TINY_SCFG)  # 256 ops, 3 ∤ 256
+    with pytest.raises(ValueError, match="divisible"):
+        EpochDriver(scen, make_policy("replicate"), ccfg)
+
+
+def test_service_model_changes_tail_not_mean_units():
+    lat = {}
+    for kind in ("fixed", "pareto"):
+        ccfg = ClusterConfig(num_nodes=8, num_ranges=32, replication=2,
+                             r_max=4, n_clients=16,
+                             service_model=C.ServiceModel(kind=kind))
+        scen = make_scenario("stationary", TINY_SCFG)
+        drv = EpochDriver(scen, make_policy("frozen"), ccfg)
+        rows = drv.run()
+        assert drv.traces == 1
+        lat[kind] = summarize(rows)
+    # heavy-tailed service stretches the p99 tail
+    assert lat["pareto"]["mean_p99"] > lat["fixed"]["mean_p99"]
+
+
+def test_service_model_draws_are_reproducible_and_mean_one():
+    for kind in ("lognormal", "pareto"):
+        sm = C.ServiceModel(kind=kind)
+        a = sm.draw(jax.random.PRNGKey(4), (100_000,))
+        b = sm.draw(jax.random.PRNGKey(4), (100_000,))
+        assert bool(jnp.array_equal(a, b))
+        assert abs(float(a.mean()) - 1.0) < 0.02
+    with pytest.raises(ValueError):
+        C.ServiceModel(kind="pareto", alpha=0.9).draw(
+            jax.random.PRNGKey(0), (8,))

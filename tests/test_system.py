@@ -87,12 +87,15 @@ def test_chain_replication_invariant(setup):
     d, store = _put(d, store, keys, vals)
 
     chains = np.asarray(d.chains)
-    bounds = np.asarray(d.bounds)
+    lo = np.asarray(d.slot_lo)
+    hi = np.asarray(d.slot_hi)
+    live = np.asarray(d.live)
     skeys = np.asarray(store.keys)
     for k in np.asarray(keys):
-        ridx = int(np.searchsorted(bounds[1:-1], k, side="right"))
-        for node in chains[ridx]:
-            assert k in skeys[node], (k, ridx, node)
+        hits = np.where(live & (lo <= k) & (k <= hi))[0]
+        assert hits.size == 1, (k, hits)  # live slots partition the space
+        for node in chains[int(hits[0])]:
+            assert k in skeys[node], (k, hits[0], node)
 
 
 def test_scan_returns_range(setup):
