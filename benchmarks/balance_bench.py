@@ -22,11 +22,19 @@ Extras:
 * ``--dist`` runs the dist-backend parity column (``make_dist_apply`` on
   a forced 8-device host mesh, in a subprocess because jax pins the
   device count at first init) and reports bucket-overflow retry rates
-  under switch queue pressure.
+  under switch queue pressure;
+* ``--period N`` sets the control-pull cadence (= the fused scan length;
+  default 1 so the gate matrix's policy decisions stay comparable to the
+  per-epoch PR-3 rows — raise it to trade control lag for throughput);
+* ``--profile`` runs the epoch-pipeline comparison: fused vs per-epoch
+  driver on the same scenario with the whole run fused into one period,
+  reporting compile vs steady-state epochs/s and host-sync counts, and
+  **gating** on the fused driver beating the per-epoch one (the CI smoke
+  ratio + host-sync gates).
 
 Run: ``PYTHONPATH=src python -m benchmarks.balance_bench
 [--quick] [--scenarios a,b] [--policies x,y] [--service kind] [--dist]
-[--json BENCH_balance.json]``
+[--period N] [--profile] [--json BENCH_balance.json]``
 """
 
 from __future__ import annotations
@@ -41,15 +49,33 @@ import time
 DEFAULT_POLICIES = ("frozen", "migrate", "replicate", "split_hot", "full_adaptive")
 DEFAULT_SCENARIOS = (
     "shifting_hotspot", "flash_crowd", "diurnal", "node_failure",
-    "multi_hotspot", "keyspace_growth",
+    "multi_hotspot", "keyspace_growth", "rack_failure_hotspot",
 )
 DIST_SCENARIO = "flash_crowd"                 # switch queue pressure case
 DIST_POLICIES = ("frozen", "full_adaptive")
+# gate-matrix pull cadence: 1 keeps every policy decision identical to the
+# per-epoch PR-3 rows, so the adaptive/splitting gates compare unchanged
+# behaviour; the pipeline win is measured by --profile (which fuses whole
+# periods) and by exploratory --period runs
+DEFAULT_PERIOD = 1
+# the --profile comparison pair (the tentpole's acceptance scenario)
+PROFILE_SCENARIO = "shifting_hotspot"
+PROFILE_POLICIES = ("frozen", "full_adaptive")
+# fused steady-state epochs/s vs the per-epoch driver, gated at two
+# deliberately generous levels.  Full size measures >1.5x; quick sizes
+# (4 epochs x 512 ops on a 2-core CI box) measure ~1.1-1.5x with
+# run-to-run noise that straddles 1.0, so the quick gate only requires
+# "not materially slower" — it still catches a real pipeline regression
+# (a broken scan measures ~0.3x) without flaking CI.  host-sync counts
+# gate deterministically alongside it.
+PROFILE_RATIO_GATE = 1.2
+PROFILE_RATIO_GATE_QUICK = 0.9
 
 
 # the acceptance-gate cluster geometry: fine ranges so a Zipf hot block
 # spans several chains, headroom for selective replication and splitting
-def cluster_config(quick: bool, service: str = "fixed"):
+def cluster_config(quick: bool, service: str = "fixed",
+                   period: int = DEFAULT_PERIOD):
     from repro.cluster import ClusterConfig
     from repro.core import ServiceModel
 
@@ -59,6 +85,7 @@ def cluster_config(quick: bool, service: str = "fixed"):
         replication=2,
         r_max=4 if quick else 5,
         n_clients=32,
+        report_every=period,
         imbalance_threshold=1.1,
         max_moves_per_round=8,
         service_model=ServiceModel(kind=service),
@@ -85,13 +112,32 @@ def scenario_kwargs(name: str, scfg) -> dict:
         "multi_hotspot": dict(theta=1.3, n_hotspots=3,
                               shift_every=max(scfg.n_epochs // 3, 1)),
         "keyspace_growth": {},
+        "rack_failure_hotspot": dict(
+            theta=1.2, shift_every=max(scfg.n_epochs // 3, 1),
+            fail_epoch=mid, rack=(0, 1),
+            recover_epoch=mid + 2 if mid + 2 < scfg.n_epochs else None,
+        ),
         "stationary": {},
     }[name]
 
 
+def _steady_epochs_per_s(drv, n_epochs: int, repeats: int = 1) -> float:
+    """Steady-state epochs/s: re-drive the (already compiled) driver over
+    the scenario's epochs via its real ``run()`` path, wall-clocked
+    without trace/compile.  Best of ``repeats`` passes (per-pass noise on
+    small CI boxes is large)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        drv.run()
+        best = min(best, time.perf_counter() - t0)
+    return n_epochs / best
+
+
 def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
                backend: str = "oracle", mesh=None, dist_cfg=None,
-               verbose: bool = True):
+               period: int = DEFAULT_PERIOD, fused: bool = True,
+               measure_steady: bool = False, verbose: bool = True):
     from repro.cluster import EpochDriver, make_policy, make_scenario, summarize
 
     rows = []
@@ -100,8 +146,9 @@ def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
         for pname in policies:
             scen = make_scenario(sname, scfg, **scenario_kwargs(sname, scfg))
             drv = EpochDriver(scen, make_policy(pname),
-                              cluster_config(quick, service),
-                              backend=backend, mesh=mesh, dist_cfg=dist_cfg)
+                              cluster_config(quick, service, period),
+                              backend=backend, mesh=mesh, dist_cfg=dist_cfg,
+                              fused=fused)
             t0 = time.perf_counter()
             epochs = drv.run()
             wall = time.perf_counter() - t0
@@ -110,15 +157,26 @@ def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
             row["traces"] = drv.traces
             row["service"] = service
             row["backend"] = backend
+            row["period"] = period
+            row["fused"] = fused
+            row["host_syncs"] = drv.host_syncs
+            if measure_steady and backend == "oracle":
+                # the re-drive mutates driver state (fine for timing) but
+                # runs AFTER the row's metrics are captured
+                row["steady_eps"] = round(
+                    _steady_epochs_per_s(drv, scfg.n_epochs), 2
+                )
             rows.append(row)
             if verbose:
+                eps = row.get("steady_eps")
                 print(
-                    f"{sname:18s} {pname:14s} imb {row['mean_imbalance']:5.2f} "
+                    f"{sname:20s} {pname:14s} imb {row['mean_imbalance']:5.2f} "
                     f"p99 {row['mean_p99']:6.1f} p50 {row['mean_p50']:6.1f} "
                     f"thr {row['mean_throughput']:.3f} "
                     f"ent {row['total_migration_entries']:6d} "
                     f"retries {row['total_retries']:4d} "
                     f"traces {row['traces']}"
+                    + (f" steady {eps:7.2f} ep/s" if eps else "")
                 )
     return rows
 
@@ -133,7 +191,7 @@ def check_acceptance(rows, *, quick: bool = False) -> list[str]:
     must hold at any size.
     """
     by = {(r["scenario"], r["policy"]): r for r in rows
-          if r.get("backend", "oracle") == "oracle"}
+          if r.get("backend", "oracle") == "oracle" and not r.get("profile")}
     problems = []
     f = by.get(("shifting_hotspot", "frozen"))
     a = by.get(("shifting_hotspot", "full_adaptive"))
@@ -172,6 +230,81 @@ def check_acceptance(rows, *, quick: bool = False) -> list[str]:
                 f"{r['traces']}x (expected 1)"
             )
     return problems
+
+
+def run_profile(quick: bool) -> tuple[list[dict], list[str]]:
+    """The epoch-pipeline profile: fused vs per-epoch driver, same scenario,
+    same config — compile vs steady-state wall clock and host-sync counts.
+
+    The comparison fuses the **whole run into one control period**
+    (``period = n_epochs``) for both drivers: policy decisions and pull
+    costs are then identical on both sides, so the measured delta is
+    purely the device-resident pipeline (scan + donated buffers + one
+    host sync per period vs one per epoch).
+
+    Returns (rows, problems): the ratio gate (fused steady-state epochs/s
+    ``>= PROFILE_RATIO_GATE x`` per-epoch) plus a deterministic host-sync
+    gate (fused must make strictly fewer device->host round-trips) are
+    the CI smoke assertions for the device-resident pipeline.
+    """
+    from repro.cluster import EpochDriver, make_policy, make_scenario
+
+    scfg = scenario_config(quick)
+    period = scfg.n_epochs
+    rows, problems = [], []
+    for pname in PROFILE_POLICIES:
+        measured = {}
+        for fused in (True, False):
+            scen = make_scenario(
+                PROFILE_SCENARIO, scfg,
+                **scenario_kwargs(PROFILE_SCENARIO, scfg))
+            drv = EpochDriver(scen, make_policy(pname),
+                              cluster_config(quick, period=period),
+                              fused=fused)
+            t0 = time.perf_counter()
+            drv.run()
+            wall = time.perf_counter() - t0
+            syncs_run = drv.host_syncs
+            steady = _steady_epochs_per_s(drv, scfg.n_epochs, repeats=3)
+            row = {
+                "profile": True,
+                "scenario": PROFILE_SCENARIO,
+                "policy": pname,
+                "fused": fused,
+                "period": period,
+                "epochs": scfg.n_epochs,
+                "wall_s": round(wall, 3),
+                "compile_s": round(wall - scfg.n_epochs / steady, 3),
+                "steady_eps": round(steady, 2),
+                "host_syncs": syncs_run,
+                "host_syncs_per_epoch": round(syncs_run / scfg.n_epochs, 2),
+                "traces": drv.traces,
+            }
+            measured[fused] = row
+            rows.append(row)
+            print(
+                f"[profile] {pname:14s} {'fused' if fused else 'epoch':5s} "
+                f"P={period} wall {row['wall_s']:6.2f}s "
+                f"(compile ~{row['compile_s']:5.2f}s) "
+                f"steady {row['steady_eps']:8.2f} epochs/s "
+                f"syncs/epoch {row['host_syncs_per_epoch']:5.2f} "
+                f"traces {row['traces']}"
+            )
+        gate = PROFILE_RATIO_GATE_QUICK if quick else PROFILE_RATIO_GATE
+        ratio = measured[True]["steady_eps"] / max(measured[False]["steady_eps"], 1e-9)
+        if ratio < gate:
+            problems.append(
+                f"profile: fused steady epochs/s only {ratio:.2f}x the "
+                f"per-epoch driver on {PROFILE_SCENARIO}/{pname} "
+                f"(gate {gate}x)"
+            )
+        if not measured[True]["host_syncs"] < measured[False]["host_syncs"]:
+            problems.append(
+                f"profile: fused driver made {measured[True]['host_syncs']} "
+                f"host syncs !< per-epoch {measured[False]['host_syncs']} "
+                f"on {PROFILE_SCENARIO}/{pname}"
+            )
+    return rows, problems
 
 
 def run_dist_parity(quick: bool) -> list[dict]:
@@ -229,6 +362,16 @@ def main(argv=None):
                          "(8-device host mesh subprocess)")
     ap.add_argument("--dist-worker", action="store_true",
                     help=argparse.SUPPRESS)  # internal: the forked mesh run
+    ap.add_argument("--period", type=int, default=DEFAULT_PERIOD,
+                    help="control-pull cadence = fused scan length "
+                         f"(default {DEFAULT_PERIOD})")
+    ap.add_argument("--per-epoch", action="store_true",
+                    help="run the per-epoch reference driver instead of "
+                         "the fused period pipeline")
+    ap.add_argument("--profile", action="store_true",
+                    help="also run the fused vs per-epoch pipeline profile "
+                         "(steady-state epochs/s + host-sync counts, with "
+                         "the ratio gate)")
     ap.add_argument("--json", default=None, help="write rows to this path")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the acceptance gate (exploratory runs)")
@@ -239,7 +382,14 @@ def main(argv=None):
 
     scenarios = [s for s in args.scenarios.split(",") if s]
     policies = [p for p in args.policies.split(",") if p]
-    rows = run_matrix(scenarios, policies, args.quick, service=args.service)
+    rows = run_matrix(scenarios, policies, args.quick, service=args.service,
+                      period=args.period, fused=not args.per_epoch,
+                      measure_steady=True)
+
+    profile_problems: list[str] = []
+    if args.profile:
+        profile_rows, profile_problems = run_profile(args.quick)
+        rows.extend(profile_rows)
 
     if args.dist:
         dist_rows = run_dist_parity(args.quick)
@@ -259,7 +409,7 @@ def main(argv=None):
         print(f"wrote {args.json} ({len(rows)} rows)")
 
     if not args.no_check:
-        problems = check_acceptance(rows, quick=args.quick)
+        problems = check_acceptance(rows, quick=args.quick) + profile_problems
         if problems:
             print("ACCEPTANCE FAILED:")
             for p in problems:
@@ -271,6 +421,10 @@ def main(argv=None):
         if "multi_hotspot" in scenarios:
             gates.append("split_hot < migrate on imbalance at <= entries moved")
         gates.append("all steps compiled once")
+        if args.profile:
+            g = PROFILE_RATIO_GATE_QUICK if args.quick else PROFILE_RATIO_GATE
+            gates.append(
+                f"fused steady epochs/s >= {g}x per-epoch at fewer syncs")
         print("acceptance: " + "; ".join(gates))
     return 0
 

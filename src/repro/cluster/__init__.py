@@ -18,7 +18,14 @@ Entry points: :class:`~repro.cluster.epoch.EpochDriver`,
 """
 
 from repro.cluster.epoch import ClusterConfig, EpochDriver
-from repro.cluster.metrics import EpochMetrics, imbalance_stats, latency_percentiles, summarize
+from repro.cluster.metrics import (
+    EpochMetrics,
+    imbalance_stats,
+    imbalance_stats_batch,
+    latency_percentiles,
+    latency_percentiles_batch,
+    summarize,
+)
 from repro.cluster.policies import (
     POLICIES,
     FullAdaptivePolicy,
@@ -32,7 +39,8 @@ from repro.cluster.scenarios import SCENARIOS, Scenario, ScenarioConfig, make_sc
 
 __all__ = [
     "ClusterConfig", "EpochDriver",
-    "EpochMetrics", "imbalance_stats", "latency_percentiles", "summarize",
+    "EpochMetrics", "imbalance_stats", "imbalance_stats_batch",
+    "latency_percentiles", "latency_percentiles_batch", "summarize",
     "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
     "FullAdaptivePolicy", "make_policy",
     "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",

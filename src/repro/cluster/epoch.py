@@ -1,7 +1,8 @@
 """The closed-loop epoch driver (paper §5.1 made to actually run).
 
-One *epoch* = one device-side batch step + one host-side control
-observation.  The device step is a single fused, jitted program —
+One *epoch* = one device-side batch step; one *control period* =
+``period`` consecutive epochs between controller pulls.  The device step
+is a single fused, jitted program —
 
     inject workload slice
     -> route (counter + load-register + count-min sketch updates)
@@ -13,16 +14,44 @@ observation.  The device step is a single fused, jitted program —
 balancing policy, execute the migration plan, graft the refreshed
 control tables back onto the live directory (``Controller.refresh`` —
 counters survive; ``stats.pull_report`` is the only reset path), and
-time the epoch's traffic on the PR-1 vectorized DES engine
+time the period's traffic on the PR-1 vectorized DES engine
 (:mod:`repro.core.des`).
+
+**Device-resident period pipeline** (the default, ``fused=True``): the
+whole control period runs as ONE jitted ``lax.scan`` over the period's
+pre-staged query batches, with the store slabs, load registers and
+sketch **donated** into the call (the slabs are the big allocation; no
+second live copy exists during the scan; the directory is deliberately
+NOT donated — its freshly-grafted zeroed counter tables can alias one
+constant buffer, which XLA rejects as a double donation, and it is tiny
+next to the slabs).  Per-epoch
+observables (hop plans, per-node ops, retries, overflow totals) come
+back as stacked device arrays, so the host syncs **once per period**
+instead of once per epoch: one batched DES engine call over the stacked
+(P, B, H) plans (``stack_plans`` semantics, see
+``des.simulate_closed_loop``), percentiles and imbalance vectorized over
+the period.  NetCache/DistCache-style designs work precisely because
+the data plane runs many intervals between control-plane pulls; so does
+this driver.
+
+The fused driver is **observationally equivalent** to per-epoch stepping
+(``fused=False``): policies only ever act on period-boundary reports, so
+fusing the epochs between two pulls changes no policy input, and the
+``run()``/:class:`EpochMetrics` stream and final store state are
+bit-identical — asserted in ``tests/test_epoch_fused.py``.  Scenario
+control events (fail/recover/rack_fail) only ever fire at epoch
+boundaries; a segment simply ends early at the next event epoch, and the
+scan's fixed length is padded with masked (no-op) epochs so the program
+still compiles exactly once per scenario.
 
 Shape discipline: scenario batches, directory tables, the sketch, and
 the load registers all keep fixed shapes across control updates (chain
 widening only rewrites ``chain_len`` values; hot-subset splits allocate
 pre-reserved directory slots — ``make_directory(r_max=, n_slots=)``
-reserves both kinds of headroom), so the device step traces **once per
-scenario** — asserted via :attr:`EpochDriver.traces` in tests and
-recorded per bench row.
+reserves both kinds of headroom), so the period scan traces **once per
+scenario** — asserted via :attr:`EpochDriver.traces` (the jit cache
+size, which also catches dist-backend retraces) in tests and recorded
+per bench row.
 """
 
 from __future__ import annotations
@@ -46,8 +75,8 @@ from repro.core.store import apply_routed, make_store
 
 from repro.cluster.metrics import (
     EpochMetrics,
-    imbalance_stats,
-    latency_percentiles,
+    imbalance_stats_batch,
+    latency_percentiles_batch,
     migration_traffic,
 )
 from repro.cluster.policies import Policy
@@ -68,9 +97,14 @@ class ClusterConfig:
     capacity: int | None = None    # per-shard slots; None -> sized from scenario
     mode: str = C.IN_SWITCH
     n_clients: int = 32            # DES closed-loop client count
-    report_every: int = 1          # epochs per controller pull
+    # epochs per controller pull == the fused scan's period length;
+    # None -> the policy's declared ``pull_every`` cadence
+    report_every: int | None = None
     sketch_width: int = 512
     sketch_depth: int = 4
+    # distinct-key window cap for the sketch pull view; uniform thinning
+    # beyond this (the split policies' quantile consumers are robust to it)
+    key_window_cap: int = 1 << 16
     latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
     # per-hop service-time distribution (fixed | lognormal | pareto)
     service_model: C.ServiceModel = dataclasses.field(
@@ -109,13 +143,44 @@ def _node_ops(decision: C.RoutingDecision, opcode: jnp.ndarray, num_nodes: int
     return ops
 
 
+def _merge_unique(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Merge two sorted-unique uint32 arrays in linear time (no re-sort of
+    the accumulated window — the incremental key-window dedupe)."""
+    if a.size == 0:
+        return b
+    if b.size == 0:
+        return a
+    pos = np.searchsorted(a, b)
+    hit = (pos < a.size) & (a[np.minimum(pos, a.size - 1)] == b)
+    fresh = b[~hit]
+    if fresh.size == 0:
+        return a
+    out = np.empty(a.size + fresh.size, a.dtype)
+    at_b = np.searchsorted(a, fresh) + np.arange(fresh.size)
+    mask = np.zeros(out.size, bool)
+    mask[at_b] = True
+    out[mask] = fresh
+    out[~mask] = a
+    return out
+
+
+def _jit_cache_size(fn, default: int = 0) -> int:
+    cs = getattr(fn, "_cache_size", None)
+    return cs() if callable(cs) else default
+
+
 class EpochDriver:
-    """Run a scenario under a policy, one epoch at a time.
+    """Run a scenario under a policy, one control period at a time.
 
     ``backend='oracle'`` (default) uses the single-program
     ``apply_routed`` path; ``backend='dist'`` shards the store over a
     mesh axis and goes through ``make_dist_apply`` (the bounded-bucket
     all_to_all data plane) — pass ``mesh``.
+
+    ``fused=True`` (default) runs each control period as one donated
+    ``lax.scan`` (oracle) or one deferred-sync step loop (dist) with a
+    single host round-trip per period; ``fused=False`` is the per-epoch
+    reference loop the fused pipeline is asserted bit-identical against.
     """
 
     def __init__(
@@ -127,6 +192,7 @@ class EpochDriver:
         backend: str = "oracle",
         mesh=None,
         dist_cfg: DistConfig | None = None,
+        fused: bool = True,
     ):
         self.scenario = scenario
         self.policy = policy
@@ -136,6 +202,10 @@ class EpochDriver:
         if backend == "dist" and mesh is None:
             raise ValueError("backend='dist' needs a mesh")
         self.backend = backend
+        self.fused = fused
+        # pull cadence: explicit config wins, else the policy declares it
+        self.period = (cfg.report_every if cfg.report_every is not None
+                       else policy.pull_every)
 
         scfg = scenario.cfg
         # keep the policy's notion of base replication honest
@@ -172,11 +242,21 @@ class EpochDriver:
         self._traces = 0
         self._period = 0
         self._last_overflow = 0
-        # distinct keys seen since the last pull: queried against the
-        # count-min sketch at pull time (StatsReport.key_sample/key_heat,
-        # the split policies' boundary-quantile view)
-        self._key_window: list[np.ndarray] = []
+        self.host_syncs = 0        # device->host round-trips (profile metric)
+        # distinct keys seen since the last pull, deduped incrementally
+        # (sorted-unique merge per epoch — pull cost no longer grows with
+        # epoch_ops x period): queried against the count-min sketch at pull
+        # time (StatsReport.key_sample/key_heat, the split policies'
+        # boundary-quantile view)
+        self._key_window: np.ndarray = np.empty(0, np.uint32)
+        # scenario control events are deterministic: precompute the epochs
+        # that force a host intervention (segment boundaries for the scan)
+        self._event_epochs = {
+            e for e in range(scfg.n_epochs) if scenario.events(e)
+        }
         self._mesh = mesh
+        self._step = None
+        self._period_fn = None
         if backend == "dist":
             base = dist_cfg or DistConfig()
             self._dist_cfg = dataclasses.replace(
@@ -187,6 +267,8 @@ class EpochDriver:
             )
             self._dist_apply = make_dist_apply(mesh, directory, self._dist_cfg)
             self._step = self._build_dist_step()
+        elif fused:
+            self._period_fn = self._build_oracle_period(policy.read_spread)
         else:
             self._step = self._build_oracle_step(policy.read_spread)
 
@@ -195,18 +277,22 @@ class EpochDriver:
     # -- properties --------------------------------------------------------
     @property
     def traces(self) -> int:
-        """How many times the epoch device step has been traced (the
-        no-retracing acceptance gate: must be 1 after any number of
-        epochs of one scenario).  On the dist backend the fused
-        shard_map program is a separate jit — its compile-cache size is
-        folded in so a retracing dist apply cannot hide behind the
-        observe step's count."""
+        """How many distinct programs the epoch/period device step has
+        compiled (the no-retracing acceptance gate: must be 1 after any
+        number of epochs of one scenario).
+
+        Counted from the jit compile-cache size wherever one exists — the
+        python-side-effect counter under-reports a ``lax.scan`` body
+        (traced more than once inside a single compile) and cannot see a
+        dist-backend retrace at all, because ``make_dist_apply`` keys its
+        own jit cache on input shardings.  Both caches are folded in so
+        neither path can hide a retrace behind the other's count."""
+        if self.backend == "oracle":
+            if self.fused:
+                return _jit_cache_size(self._period_fn, self._traces)
+            return max(self._traces, _jit_cache_size(self._step, 0))
         t = self._traces
-        if self.backend == "dist":
-            cache_size = getattr(self._dist_apply, "_cache_size", None)
-            if callable(cache_size):
-                t = max(t, cache_size())
-        return t
+        return max(t, _jit_cache_size(self._dist_apply, 0))
 
     # -- setup -------------------------------------------------------------
     def _preload(self):
@@ -223,8 +309,10 @@ class EpochDriver:
         )
         self._last_overflow = int(np.asarray(self.store.overflow).sum())
 
-    # -- device step variants ---------------------------------------------
-    def _build_oracle_step(self, spread: bool):
+    # -- device step variants ----------------------------------------------
+    def _make_oracle_body(self, spread: bool):
+        """One epoch's device math — shared verbatim by the per-epoch jit
+        and the fused period scan so the two are the same program."""
         cfg = self.cfg
         N = cfg.num_nodes
         # widened members are lazily-refreshed read replicas: the write's
@@ -236,8 +324,7 @@ class EpochDriver:
         # the trace count stays 1.
         chunks = cfg.p2c_chunks if spread else 1
 
-        def step(store, directory, load_reg, sketch, q, rng):
-            self._traces += 1  # python side effect: counts traces, not calls
+        def body(store, directory, load_reg, sketch, q, rng):
             r_route, r_plan = jax.random.split(rng)
             if spread and chunks > 1:
                 B = q.opcode.shape[0]
@@ -275,7 +362,58 @@ class EpochDriver:
             retries = jnp.zeros((), jnp.int32)
             return store, directory, load_reg, sketch, plan, node_ops, retries
 
+        return body
+
+    def _build_oracle_step(self, spread: bool):
+        body = self._make_oracle_body(spread)
+
+        def step(store, directory, load_reg, sketch, q, rng):
+            self._traces += 1  # python side effect: counts traces, not calls
+            return body(store, directory, load_reg, sketch, q, rng)
+
         return jax.jit(step)
+
+    def _build_oracle_period(self, spread: bool):
+        """The fused period program: ``period`` epoch bodies under one
+        jitted ``lax.scan`` with the store/directory/load-register/sketch
+        buffers **donated** (the store slabs are the big allocation — the
+        scan updates them in place, no second live copy).
+
+        Dead scan slots (segments cut short by a control event or the run
+        end) compute but do not commit: the carry keeps its pre-step value
+        and the host discards their output rows, so one fixed-length
+        program covers every segment length — exactly one trace per
+        scenario."""
+        body = self._make_oracle_body(spread)
+
+        def period(store, directory, load_reg, sketch, qs, rngs, live):
+            def scan_body(carry, xs):
+                store, directory, load_reg, sketch = carry
+                q, rng, lv = xs
+                (store2, directory2, load_reg2, sketch2,
+                 plan, node_ops, retries) = body(
+                    store, directory, load_reg, sketch, q, rng
+                )
+                keep = lambda new, old: jnp.where(lv, new, old)
+                store2 = jax.tree.map(keep, store2, store)
+                directory2 = jax.tree.map(keep, directory2, directory)
+                carry2 = (store2, directory2, keep(load_reg2, load_reg),
+                          keep(sketch2, sketch))
+                ovf = jnp.sum(store2.overflow)
+                return carry2, (plan, node_ops, retries, ovf)
+
+            carry, outs = jax.lax.scan(
+                scan_body, (store, directory, load_reg, sketch),
+                (qs, rngs, live),
+            )
+            return (*carry, *outs)
+
+        # donate the big buffers: store slabs, load registers, sketch.
+        # The directory is NOT donated — several of its freshly-grafted
+        # tables (e.g. the zeroed read/write counters) can alias the same
+        # constant buffer, which XLA rejects as a double donation; it is
+        # also tiny next to the slabs, so nothing is lost.
+        return jax.jit(period, donate_argnums=(0, 2, 3))
 
     def _build_dist_step(self):
         from jax.sharding import NamedSharding, PartitionSpec
@@ -337,18 +475,46 @@ class EpochDriver:
 
         return step
 
-    # -- the loop ----------------------------------------------------------
-    def run_epoch(self, e: int) -> EpochMetrics:
-        cfg = self.cfg
+    # -- host-side helpers -------------------------------------------------
+    def _sync(self, x) -> np.ndarray:
+        """Device->host transfer with bookkeeping (the profile metric the
+        fused pipeline exists to minimize)."""
+        self.host_syncs += 1
+        return np.asarray(x)
+
+    def _note_keys(self, keys) -> None:
+        """Fold one epoch's keys into the distinct-key window (sorted-unique
+        incremental merge; capped by uniform thinning)."""
+        ek = np.unique(np.asarray(keys, np.uint32).ravel())
+        self._key_window = _merge_unique(self._key_window, ek)
+        cap = self.cfg.key_window_cap
+        if cap and self._key_window.size > cap:
+            stride = -(-self._key_window.size // cap)   # ceil div
+            self._key_window = self._key_window[::stride]
+
+    def _sketch_heat(self, sample: np.ndarray) -> np.ndarray:
+        """Count-min estimates for the window, via a shape-stable padded
+        query (per-epoch sample sizes vary; padding to a power-of-two
+        bucket keeps the eager query from recompiling every pull — this
+        was the single biggest per-epoch host cost before the fused
+        pipeline)."""
+        m = sample.size
+        padded = 1 << max(6, (m - 1).bit_length())
+        buf = np.full(padded, K.EMPTY_KEY, np.uint32)
+        buf[:m] = sample
+        heat = self._sync(sketch_query(self.sketch, jnp.asarray(buf)))
+        return heat[:m].astype(np.float64)
+
+    def _handle_events(self, e: int) -> tuple[list[str], int, int]:
+        """Apply the scenario's control events for epoch ``e`` (host side;
+        events only ever fire at epoch boundaries == segment starts)."""
         scfg = self.scenario.cfg
         events: list[str] = []
         mig_entries = mig_bytes = 0
-
-        # control events fire at the epoch boundary (fail/recover mid-run)
         for kind, node in self.scenario.events(e):
             if kind == "fail":
                 # live node_load mid-period: counters are NOT reset here
-                nl = np.asarray(D.node_load(self.directory))
+                nl = self._sync(D.node_load(self.directory))
                 ops = self.controller.handle_node_failure(node, nl)
                 en, by = migration_traffic(self.store, ops, scfg.value_dim)
                 self.store = execute_migrations(self.store, ops)
@@ -356,12 +522,83 @@ class EpochDriver:
                 mig_entries += en
                 mig_bytes += by
                 events.append(f"fail:{node}")
+            elif kind == "rack_fail":
+                # correlated failure: the switch fronting a rack dies and
+                # every node behind it goes with it (paper §5.2); the
+                # controller splices all of them before re-replicating so
+                # repair copies never target a dead rack-mate
+                rack = [int(n) for n in node]
+                ops = self.controller.handle_switch_failure(rack)
+                en, by = migration_traffic(self.store, ops, scfg.value_dim)
+                self.store = execute_migrations(self.store, ops)
+                self.directory = self.controller.refresh(self.directory)
+                mig_entries += en
+                mig_bytes += by
+                events.append("rack_fail:" + "+".join(map(str, rack)))
             elif kind == "recover":
                 self.controller.recover_node(node)
                 events.append(f"recover:{node}")
+        return events, mig_entries, mig_bytes
+
+    def _control_pull(self) -> tuple[list[str], int, int]:
+        """The period-boundary controller pull: harvest + reset counters,
+        run the policy, execute its migration plan, graft the refreshed
+        tables.  The ONLY counter/load-register reset path."""
+        scfg = self.scenario.cfg
+        self.host_syncs += 1   # pull_report harvests the device counters
+        report, self.directory = pull_report(self.directory, self._period)
+        self._period += 1
+        if self._key_window.size:
+            # count-min view of the period: distinct keys seen, with
+            # their sketch heat estimates — the split policies place
+            # boundaries at heat quantiles inside hot ranges
+            sample = self._key_window
+            heat = self._sketch_heat(sample)
+            report = dataclasses.replace(
+                report, key_sample=sample, key_heat=heat
+            )
+            self._key_window = np.empty(0, np.uint32)
+        if self.policy.read_spread:
+            # directory.node_load charges every read to the chain tail;
+            # under p2c spreading the data-plane load registers are the
+            # truthful per-node picture — hand those to the policy so
+            # widen/balance target selection doesn't chase tails
+            report = dataclasses.replace(
+                report,
+                node_load=self._sync(self.load_reg).astype(np.float64),
+            )
+        ops = self.policy.on_report(self.controller, report)
+        events: list[str] = []
+        mig_entries = mig_bytes = 0
+        if ops:
+            mig_entries, mig_bytes = migration_traffic(
+                self.store, ops, scfg.value_dim
+            )
+            self.store = execute_migrations(self.store, ops)
+            events.extend(f"{op.kind}:{op.src}->{op.dst}" for op in ops)
+        self.directory = self.controller.refresh(self.directory)
+        # halve rather than zero: p2c needs *recent* load signal to keep
+        # steering reads off write-busy heads; a hard reset degenerates
+        # it to a uniform-random replica pick for the whole next period
+        self.load_reg = self.load_reg // 2
+        self.sketch = jnp.zeros_like(self.sketch)
+        return events, mig_entries, mig_bytes
+
+    # -- the per-epoch reference loop --------------------------------------
+    def run_epoch(self, e: int) -> EpochMetrics:
+        """One epoch, one host round-trip (the ``fused=False`` loop the
+        period pipeline is asserted bit-identical against)."""
+        if self._step is None:
+            raise RuntimeError(
+                "per-epoch stepping is unavailable on the fused oracle "
+                "driver; use run(), or construct with fused=False"
+            )
+        cfg = self.cfg
+        scfg = self.scenario.cfg
+        events, mig_entries, mig_bytes = self._handle_events(e)
 
         opcodes, keys, end_keys, values = self.scenario.epoch(e)
-        self._key_window.append(np.asarray(keys, np.uint32))
+        self._note_keys(keys)
         q = C.make_queries(
             jnp.asarray(keys), jnp.asarray(opcodes),
             jnp.asarray(values), jnp.asarray(end_keys),
@@ -372,6 +609,7 @@ class EpochDriver:
             self.store, self.directory, self.load_reg, self.sketch, q, rng
         )
 
+        self.host_syncs += 1   # the DES engine pulls the plan to the host
         latency, makespan = C.simulate_closed_loop(
             plan,
             n_clients=cfg.n_clients,
@@ -379,58 +617,26 @@ class EpochDriver:
             link=cfg.latency.link,
             backend=cfg.des_backend,
         )
-        p50, p99 = latency_percentiles(np.asarray(latency))
+        (p50,), (p99,) = latency_percentiles_batch(np.asarray(latency)[None])
         mk = float(np.asarray(makespan))
 
         live = np.array(
             [n not in self.controller.failed for n in range(cfg.num_nodes)]
         )
-        imb, cov = imbalance_stats(np.asarray(node_ops), live)
+        (imb,), (cov,) = imbalance_stats_batch(
+            self._sync(node_ops)[None], live
+        )
 
-        overflow_now = int(np.asarray(self.store.overflow).sum())
+        overflow_now = int(self._sync(self.store.overflow).sum())
         drops = overflow_now - self._last_overflow
         self._last_overflow = overflow_now
 
         # ---- control pull: the only counter/load-register reset path ----
-        if (e + 1) % cfg.report_every == 0:
-            report, self.directory = pull_report(self.directory, self._period)
-            self._period += 1
-            if self._key_window:
-                # count-min view of the period: distinct keys seen, with
-                # their sketch heat estimates — the split policies place
-                # boundaries at heat quantiles inside hot ranges
-                sample = np.unique(np.concatenate(self._key_window))
-                heat = np.asarray(
-                    sketch_query(self.sketch, jnp.asarray(sample))
-                ).astype(np.float64)
-                report = dataclasses.replace(
-                    report, key_sample=sample, key_heat=heat
-                )
-                self._key_window = []
-            if self.policy.read_spread:
-                # directory.node_load charges every read to the chain tail;
-                # under p2c spreading the data-plane load registers are the
-                # truthful per-node picture — hand those to the policy so
-                # widen/balance target selection doesn't chase tails
-                report = dataclasses.replace(
-                    report,
-                    node_load=np.asarray(self.load_reg, np.float64),
-                )
-            ops = self.policy.on_report(self.controller, report)
-            if ops:
-                en, by = migration_traffic(self.store, ops, scfg.value_dim)
-                self.store = execute_migrations(self.store, ops)
-                mig_entries += en
-                mig_bytes += by
-                events.extend(
-                    f"{op.kind}:{op.src}->{op.dst}" for op in ops
-                )
-            self.directory = self.controller.refresh(self.directory)
-            # halve rather than zero: p2c needs *recent* load signal to keep
-            # steering reads off write-busy heads; a hard reset degenerates
-            # it to a uniform-random replica pick for the whole next period
-            self.load_reg = self.load_reg // 2
-            self.sketch = jnp.zeros_like(self.sketch)
+        if (e + 1) % self.period == 0:
+            pev, pen, pby = self._control_pull()
+            events.extend(pev)
+            mig_entries += pen
+            mig_bytes += pby
 
         return EpochMetrics(
             epoch=e,
@@ -446,10 +652,157 @@ class EpochDriver:
             migration_entries=mig_entries,
             migration_bytes=mig_bytes,
             drops=drops,
-            retries=int(np.asarray(retries)),
+            retries=int(self._sync(retries)),
             compiled_steps=self.traces,
             events=events,
         )
 
+    # -- the fused period loop ---------------------------------------------
+    def _segment_len(self, e0: int, n: int) -> int:
+        """Epochs until the next host intervention: the period boundary,
+        the run end, or the next scenario control event."""
+        next_pull = ((e0 // self.period) + 1) * self.period
+        end = min(next_pull, n)
+        for e2 in range(e0 + 1, end):
+            if e2 in self._event_epochs:
+                return e2 - e0
+        return end - e0
+
+    def _scan_segment(self, e0: int, L: int):
+        """Stage a segment's queries and run the donated period scan."""
+        P = self.period
+        op_l, key_l, end_l, val_l = [], [], [], []
+        for i in range(L):
+            opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
+            self._note_keys(keys)
+            op_l.append(opcodes)
+            key_l.append(keys)
+            end_l.append(end_keys)
+            val_l.append(values)
+        for _ in range(L, P):   # pad with masked no-op epochs
+            op_l.append(op_l[-1])
+            key_l.append(key_l[-1])
+            end_l.append(end_l[-1])
+            val_l.append(val_l[-1])
+        qs = C.make_queries(
+            jnp.asarray(np.stack(key_l)), jnp.asarray(np.stack(op_l)),
+            jnp.asarray(np.stack(val_l)), jnp.asarray(np.stack(end_l)),
+        )
+        rngs = jax.vmap(lambda i: jax.random.fold_in(self.key, i))(
+            jnp.arange(e0, e0 + P)
+        )
+        live = jnp.asarray(np.arange(P) < L)
+        (self.store, self.directory, self.load_reg, self.sketch,
+         plan, node_ops, retries, ovf) = self._period_fn(
+            self.store, self.directory, self.load_reg, self.sketch,
+            qs, rngs, live,
+        )
+        return (jax.tree.map(lambda x: x[:L], plan),
+                node_ops[:L], retries[:L], ovf[:L])
+
+    def _step_segment(self, e0: int, L: int):
+        """Dist-backend segment: per-epoch device steps (shard_map programs
+        do not nest under a scan) with all host syncs deferred to the
+        period boundary — plans/metrics stay on device until then."""
+        plans, nops_l, rtr_l, ovf_l = [], [], [], []
+        for i in range(L):
+            opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
+            self._note_keys(keys)
+            q = C.make_queries(
+                jnp.asarray(keys), jnp.asarray(opcodes),
+                jnp.asarray(values), jnp.asarray(end_keys),
+            )
+            rng = jax.random.fold_in(self.key, e0 + i)
+            (self.store, self.directory, self.load_reg, self.sketch,
+             plan, node_ops, retries) = self._step(
+                self.store, self.directory, self.load_reg, self.sketch, q, rng
+            )
+            plans.append(plan)
+            nops_l.append(node_ops)
+            rtr_l.append(retries)
+            ovf_l.append(jnp.sum(self.store.overflow))
+        plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+        return (plan, jnp.stack(nops_l), jnp.stack(rtr_l), jnp.stack(ovf_l))
+
+    def _run_segment(self, e0: int, n: int) -> list[EpochMetrics]:
+        ev0, en0, by0 = self._handle_events(e0)
+        L = self._segment_len(e0, n)
+        if self.backend == "oracle":
+            plan, node_ops, retries, ovf = self._scan_segment(e0, L)
+        else:
+            plan, node_ops, retries, ovf = self._step_segment(e0, L)
+
+        cfg = self.cfg
+        scfg = self.scenario.cfg
+        # ---- ONE host round-trip for the whole segment ----
+        self.host_syncs += 1   # the DES engine pulls the stacked plans
+        latency, makespan = C.simulate_closed_loop(
+            plan,
+            n_clients=cfg.n_clients,
+            num_nodes=cfg.num_nodes,
+            link=cfg.latency.link,
+            backend=cfg.des_backend,
+        )
+        lat = np.asarray(latency)
+        mks = np.asarray(makespan)
+        node_ops_h = self._sync(node_ops)
+        retries_h = self._sync(retries)
+        ovf_h = self._sync(ovf).astype(np.int64)
+
+        p50s, p99s = latency_percentiles_batch(lat)
+        live = np.array(
+            [m not in self.controller.failed for m in range(cfg.num_nodes)]
+        )
+        imbs, covs = imbalance_stats_batch(node_ops_h, live)
+        drops = np.diff(ovf_h, prepend=np.int64(self._last_overflow))
+        self._last_overflow = int(ovf_h[-1])
+
+        pulled = (e0 + L) % self.period == 0
+        pev: list[str] = []
+        pen = pby = 0
+        if pulled:
+            pev, pen, pby = self._control_pull()
+
+        rows = []
+        for i in range(L):
+            mk = float(mks[i])
+            events: list[str] = []
+            mig_entries = mig_bytes = 0
+            if i == 0:
+                events.extend(ev0)
+                mig_entries += en0
+                mig_bytes += by0
+            if i == L - 1 and pulled:
+                events.extend(pev)
+                mig_entries += pen
+                mig_bytes += pby
+            rows.append(EpochMetrics(
+                epoch=e0 + i,
+                scenario=self.scenario.name,
+                policy=self.policy.name,
+                ops=scfg.epoch_ops,
+                throughput=scfg.epoch_ops / mk if mk > 0 else 0.0,
+                p50=float(p50s[i]),
+                p99=float(p99s[i]),
+                makespan=mk,
+                imbalance=float(imbs[i]),
+                cov=float(covs[i]),
+                migration_entries=mig_entries,
+                migration_bytes=mig_bytes,
+                drops=int(drops[i]),
+                retries=int(retries_h[i]),
+                compiled_steps=self.traces,
+                events=events,
+            ))
+        return rows
+
     def run(self) -> list[EpochMetrics]:
-        return [self.run_epoch(e) for e in range(self.scenario.cfg.n_epochs)]
+        n = self.scenario.cfg.n_epochs
+        if not self.fused:
+            return [self.run_epoch(e) for e in range(n)]
+        rows: list[EpochMetrics] = []
+        e = 0
+        while e < n:
+            rows.extend(self._run_segment(e, n))
+            e = rows[-1].epoch + 1
+        return rows

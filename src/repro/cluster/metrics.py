@@ -52,6 +52,42 @@ def latency_percentiles(latency: np.ndarray) -> tuple[float, float]:
     return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
 
 
+def latency_percentiles_batch(latency: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-epoch (p50s, p99s) over a period's stacked (P, B) latency matrix
+    — one vectorized percentile pass; each row's result is exactly what
+    :func:`latency_percentiles` computes on that row alone."""
+    lat = np.asarray(latency, np.float64)
+    if lat.ndim != 2:
+        raise ValueError(f"expected (P, B) latency, got shape {lat.shape}")
+    if lat.shape[1] == 0:
+        z = np.zeros(lat.shape[0])
+        return z, z.copy()
+    qs = np.percentile(lat, (50, 99), axis=1)
+    return qs[0], qs[1]
+
+
+def imbalance_stats_batch(node_ops: np.ndarray, live: np.ndarray | None = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-epoch (max/mean, CoV) over a period's stacked (P, N) node-ops
+    matrix; row-identical to :func:`imbalance_stats` (the node liveness
+    mask is constant within a period — control events only fire at
+    segment boundaries)."""
+    ops = np.asarray(node_ops, np.float64)
+    if ops.ndim != 2:
+        raise ValueError(f"expected (P, N) node_ops, got shape {ops.shape}")
+    if live is not None:
+        ops = ops[:, np.asarray(live, bool)]
+    P = ops.shape[0]
+    if ops.shape[1] == 0:
+        return np.ones(P), np.zeros(P)
+    mean = ops.mean(axis=1)
+    ok = mean > 0
+    safe = np.where(ok, mean, 1.0)
+    imb = np.where(ok, ops.max(axis=1) / safe, 1.0)
+    cov = np.where(ok, ops.std(axis=1) / safe, 0.0)
+    return imb, cov
+
+
 def imbalance_stats(node_ops: np.ndarray, live: np.ndarray | None = None
                     ) -> tuple[float, float]:
     """(max/mean, CoV) of per-node served ops, over live nodes only.

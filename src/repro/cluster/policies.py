@@ -68,6 +68,14 @@ class Policy:
 
     name = "frozen"
     read_spread = False     # epoch driver compiles tail-read step
+    # declared pull cadence: epochs per controller pull.  This is the
+    # period the fused epoch driver runs device-resident between host
+    # round-trips when ``ClusterConfig.report_every`` is left unset — a
+    # policy that tolerates staler reports can raise it and trade control
+    # lag for data-plane throughput (NetCache-style: many data intervals
+    # per control pull).  Policy decisions are a pure function of the
+    # period-boundary report either way.
+    pull_every = 1
 
     def __init__(self, config: PolicyConfig | None = None):
         self.config = config or PolicyConfig()

@@ -25,6 +25,11 @@ Scenario zoo:
   the record set exists at load time and the active frontier (where both
   inserts and reads concentrate) climbs through the key space, shifting
   range occupancy against the static genesis bounds.
+* ``rack_failure_hotspot`` — correlated failure: a whole rack (= the
+  switch fronting it, paper §5.2) dies mid-run while a Zipf hotspot is
+  rotating through the key space — the two PR-2 stressors composed, so
+  the splice-the-whole-rack path is exercised by the scenario library,
+  not just unit tests.
 """
 
 from __future__ import annotations
@@ -267,6 +272,36 @@ class KeyspaceGrowth(Scenario):
         return 1.0 - self.write_ratio
 
 
+class RackFailureHotspot(ShiftingHotspot):
+    """Correlated failure under load: the Zipf hot block keeps rotating
+    (as in ``shifting_hotspot``) and at ``fail_epoch`` a whole rack of
+    storage nodes drops out at once — a switch failure takes down every
+    node behind it (paper §5.2).  The driver routes the event through
+    ``Controller.handle_switch_failure`` so all rack members are spliced
+    *before* any chain is repaired (repair copies must never target a
+    dead rack-mate).  Optional per-node recovery later in the run.
+    """
+
+    name = "rack_failure_hotspot"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 1.2,
+                 shift_every: int = 3, fail_epoch: int = 4,
+                 rack: tuple[int, ...] = (0, 1),
+                 recover_epoch: int | None = None):
+        super().__init__(cfg, theta=theta, shift_every=shift_every)
+        self.fail_epoch = fail_epoch
+        self.rack = tuple(int(n) for n in rack)
+        self.recover_epoch = recover_epoch
+
+    def events(self, epoch: int) -> list[tuple[str, object]]:
+        ev: list[tuple[str, object]] = []
+        if epoch == self.fail_epoch:
+            ev.append(("rack_fail", self.rack))
+        if self.recover_epoch is not None and epoch == self.recover_epoch:
+            ev.extend(("recover", n) for n in self.rack)
+        return ev
+
+
 SCENARIOS = {
     "stationary": Scenario,
     "shifting_hotspot": ShiftingHotspot,
@@ -275,6 +310,7 @@ SCENARIOS = {
     "node_failure": NodeFailure,
     "multi_hotspot": MultiHotspot,
     "keyspace_growth": KeyspaceGrowth,
+    "rack_failure_hotspot": RackFailureHotspot,
 }
 
 

@@ -18,7 +18,14 @@ engine instead
   slots squeezed out, per-query live hop counts, initial event calendar),
 * **fuses scenarios**: plans stacked along a leading ``S`` axis are
   simulated in one engine call (``benchmarks/paper_tables.py`` runs its
-  whole mode × workload sweep in a single pass),
+  whole mode × workload sweep in a single pass).  This is also the
+  **period-batched entry point** of the ``repro.cluster`` fused epoch
+  driver: its donated ``lax.scan`` returns the control period's hop
+  plans as one stacked (P, B, H) device array, and a single
+  :func:`simulate_closed_loop` call times every epoch of the period —
+  one plan transfer and one engine pass per controller pull, per-epoch
+  results bit-identical to P separate calls (each scenario row carries
+  its own queue/clock state),
 * **folds finish events** into the last service hop (they carry no side
   effects beyond scheduling the successor, so times are unchanged), and
 * runs the event loop itself in one of two exact backends:

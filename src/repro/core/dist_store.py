@@ -26,7 +26,13 @@ Two routing strategies, both bit-identical to the single-program oracle
 The serving engine reuses ``bucket_a2a`` for KV-cache page routing, and
 the ``repro.cluster`` epoch driver uses this module as its ``dist``
 backend (``DistConfig.read_spread`` turns on the load-aware p2c read
-path, ``return_decision`` feeds the DES hop planner).
+path, ``return_decision`` feeds the DES hop planner).  Slab mutations go
+through ``store.shard_apply`` -> ``slab_put``/``slab_delete``, so the
+PR-4 searchsorted rank merge applies here verbatim and oracle/dist
+parity stays bit-exact; the fused epoch driver steps this backend
+per-epoch (shard_map programs are not scanned) but defers every host
+sync to the period boundary, stacking the per-epoch plans/metrics on
+device until then.
 """
 
 from __future__ import annotations

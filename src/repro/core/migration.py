@@ -11,12 +11,13 @@ traffic (entries counted on the source before the move).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import keys as K
-from repro.core.store import StoreState, slab_put, slab_delete
+from repro.core.store import StoreState, _compact_sorted, slab_put, slab_delete
 
 EMPTY = K.EMPTY_KEY
 
@@ -42,13 +43,15 @@ def _extract_range(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, lo, hi):
     """All entries with key in [lo, hi], EMPTY-padded to capacity."""
     in_range = (slab_keys >= lo) & (slab_keys <= hi) & (slab_keys != EMPTY)
     ex_keys = jnp.where(in_range, slab_keys, EMPTY)
-    ex_vals = jnp.where(in_range[:, None], slab_vals, 0.0)
-    perm = jnp.argsort(ex_keys)
-    return ex_keys[perm], ex_vals[perm]
+    # the hits are a sorted subsequence of the sorted slab: gather-compact
+    # them to a prefix instead of re-sorting the whole slab
+    return _compact_sorted(ex_keys, slab_vals, in_range)
 
 
+@partial(jax.jit, static_argnames=("move",))
 def apply_migration(store: StoreState, lo, hi, src: jnp.ndarray, dst: jnp.ndarray, *, move: bool) -> StoreState:
-    """Execute one migration/copy op (jittable; src/dst may be traced)."""
+    """Execute one migration/copy op (jitted; lo/hi/src/dst are traced, so
+    every op of a plan reuses one compiled program per store shape)."""
     lo = jnp.asarray(lo, jnp.uint32)
     hi = jnp.asarray(hi, jnp.uint32)
     ex_keys, ex_vals = _extract_range(store.keys[src], store.values[src], lo, hi)
@@ -65,6 +68,7 @@ def apply_migration(store: StoreState, lo, hi, src: jnp.ndarray, dst: jnp.ndarra
     return StoreState(keys=keys, values=values, overflow=store.overflow.at[dst].add(dropped))
 
 
+@jax.jit
 def apply_reclaim(store: StoreState, lo, hi, node: jnp.ndarray) -> StoreState:
     """Delete [lo, hi] at ``node`` (chain-narrowing space reclamation)."""
     lo = jnp.asarray(lo, jnp.uint32)
@@ -83,11 +87,14 @@ def apply_reclaim(store: StoreState, lo, hi, node: jnp.ndarray) -> StoreState:
 def execute(store: StoreState, ops: list[MigrationOp]) -> StoreState:
     """Run a controller migration plan (host loop over jitted movers)."""
     for op in ops:
+        # spans are uint32 (up to 0xFFFFFFFE): cast before the jit boundary
+        # so python ints never canonicalize to (overflowing) int32
+        lo, hi = jnp.uint32(op.lo), jnp.uint32(op.hi)
         if op.kind == "reclaim":
-            store = apply_reclaim(store, op.lo, op.hi, jnp.int32(op.src))
+            store = apply_reclaim(store, lo, hi, jnp.int32(op.src))
         else:
             store = apply_migration(
-                store, op.lo, op.hi, jnp.int32(op.src), jnp.int32(op.dst),
+                store, lo, hi, jnp.int32(op.src), jnp.int32(op.dst),
                 move=(op.kind == "move"),
             )
     return store

@@ -7,7 +7,17 @@ packets into store API calls.  The JAX-native stand-in (DESIGN.md §2) is a
 ascending order (``EMPTY_KEY = 0xFFFFFFFF`` padding at the tail) plus a
 parallel value array.  Sorted order gives O(log C) batched lookups
 (``searchsorted``), natural range scans, and static-shape insert/delete via
-sort-and-truncate — the moral equivalent of an SST memtable merge.
+a searchsorted **rank merge** of the two already-sorted runs (the slab and
+the deduped batch) — the moral equivalent of an SST memtable merge, at
+O(C+B) gather work (plus O(B log) binary searches) instead of a full
+O((C+B) log(C+B)) sort of the concatenation, and with no XLA scatter on
+the hot path (CPU scatters serialize).  The merge reproduces the old
+sort-and-truncate layout exactly on the live prefix (asserted in
+``tests/test_store_merge.py``); dead tail slots now hold zeroed values
+instead of stale garbage — a deliberate tightening.  The jnp oracle
+(``apply_routed``), the ``shard_apply`` twin inside
+``dist_store.make_dist_apply`` and the migration movers all share these
+primitives, so oracle/dist parity stays bit-exact.
 
 Batch semantics: GET/SCAN observe the *pre-batch* state; DELs apply next;
 PUTs apply last (a PUT and DEL of the same key in one batch resolves to the
@@ -101,11 +111,29 @@ def make_store(num_shards: int, capacity: int, value_dim: int) -> StoreState:
 # ---------------------------------------------------------------------------
 
 
+def _compact_sorted(keys: jnp.ndarray, vals: jnp.ndarray, live: jnp.ndarray):
+    """Gather the ``live`` entries (a sorted-in-index-order subsequence) to
+    a sorted prefix; EMPTY keys / zero values beyond.
+
+    Scatter-free compaction: destination ``d`` pulls the (d+1)-th live
+    index, found by a binary search over the inclusive liveness prefix sum
+    — O(n log n) binary searches, no sort, no scatter.
+    """
+    n = keys.shape[0]
+    cum = jnp.cumsum(live.astype(jnp.int32))
+    d = jnp.arange(n, dtype=jnp.int32)
+    src = jnp.minimum(jnp.searchsorted(cum, d + 1, side="left"), n - 1)
+    in_live = d < cum[-1]
+    out_k = jnp.where(in_live, keys[src], EMPTY)
+    out_v = jnp.where(in_live[:, None], vals[src], 0.0)
+    return out_k, out_v
+
+
 def _dedupe_last_write(qkeys: jnp.ndarray, qvals: jnp.ndarray):
     """Sort a PUT batch by key; last write in batch order wins.
 
     Returns (sorted_keys, sorted_vals) with duplicate keys' earlier writes
-    replaced by EMPTY (then re-sorted so live entries are a sorted prefix).
+    dropped: live entries are a sorted prefix, EMPTY/zero beyond.
     """
     B = qkeys.shape[0]
     # primary: key asc; secondary: original index desc (later writes first)
@@ -113,8 +141,7 @@ def _dedupe_last_write(qkeys: jnp.ndarray, qvals: jnp.ndarray):
     sk, sv = qkeys[perm], qvals[perm]
     first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
     sk = jnp.where(first, sk, EMPTY)
-    p2 = jnp.argsort(sk)
-    return sk[p2], sv[p2]
+    return _compact_sorted(sk, sv, sk != EMPTY)
 
 
 def _member_sorted(sorted_keys: jnp.ndarray, probe: jnp.ndarray) -> jnp.ndarray:
@@ -187,29 +214,61 @@ def slab_scan(
 
 
 def slab_delete(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, del_keys: jnp.ndarray):
-    """Delete a key set (del_keys need not be sorted; EMPTY entries ignored)."""
+    """Delete a key set (del_keys need not be sorted; EMPTY entries ignored).
+
+    Hit entries become EMPTY holes and the survivors (already a sorted
+    subsequence) are gather-compacted back to a sorted prefix — no re-sort
+    of the slab, no scatter."""
     sorted_del = jnp.sort(del_keys)
     hit = _member_sorted(sorted_del, slab_keys)
     new_keys = jnp.where(hit, EMPTY, slab_keys)
-    perm = jnp.argsort(new_keys)  # stable: pushes EMPTY to the tail
-    return new_keys[perm], slab_vals[perm]
+    return _compact_sorted(new_keys, slab_vals, new_keys != EMPTY)
+
+
+def _merge_sorted_runs(ak, av, bk, bv, out_len: int):
+    """Gather-style stable merge of two sorted runs (EMPTY tails sink, run-a
+    holes ahead of run-b holes, matching the old stable concat-argsort).
+
+    ``searchsorted(a, b, 'right') + arange`` gives every b element's
+    merged position — strictly increasing, so the *inverse* permutation
+    needs no scatter: destination ``d`` binary-searches that position
+    vector to learn how many b elements landed before it (and whether it
+    is itself a b slot), then gathers from the right run.
+    """
+    B = bk.shape[0]
+    C = ak.shape[0]
+    idx_b = jnp.searchsorted(ak, bk, side="right") + jnp.arange(B, dtype=jnp.int32)
+    d = jnp.arange(out_len, dtype=jnp.int32)
+    cb = jnp.searchsorted(idx_b, d, side="left")       # b elements before d
+    cb_c = jnp.minimum(cb, B - 1)
+    from_b = idx_b[cb_c] == d
+    ai = jnp.clip(d - cb, 0, C - 1)
+    out_k = jnp.where(from_b, bk[cb_c], ak[ai])
+    out_v = jnp.where(from_b[:, None], bv[cb_c], av[ai])
+    return out_k, out_v
 
 
 def slab_put(slab_keys: jnp.ndarray, slab_vals: jnp.ndarray, put_keys: jnp.ndarray, put_vals: jnp.ndarray):
-    """Insert/overwrite a batch. Returns (keys, vals, dropped_count)."""
+    """Insert/overwrite a batch. Returns (keys, vals, dropped_count).
+
+    The slab (overwritten entries evicted, survivors gather-compacted) and
+    the deduped batch are two sorted runs; a searchsorted rank merge
+    (:func:`_merge_sorted_runs`) produces the combined sorted slab in
+    O(C+B) gather work — no log-factor sort of the concatenation, same
+    sorted-prefix invariant.  Capacity overflow drops the largest keys and
+    reports the dropped count, as before.
+    """
     C = slab_keys.shape[0]
     pk, pv = _dedupe_last_write(put_keys, put_vals)
     # evict slab entries being overwritten
     overwritten = _member_sorted(pk, slab_keys)
-    base_keys = jnp.where(overwritten, EMPTY, slab_keys)
-    # merge, sort, truncate (SST-style memtable merge)
-    all_keys = jnp.concatenate([base_keys, pk])
-    all_vals = jnp.concatenate([slab_vals, pv])
-    perm = jnp.argsort(all_keys)
-    all_keys, all_vals = all_keys[perm], all_vals[perm]
-    live = jnp.sum((all_keys != EMPTY).astype(jnp.int32))
-    dropped = jnp.maximum(live - C, 0)
-    return all_keys[:C], all_vals[:C], dropped
+    live = ~overwritten & (slab_keys != EMPTY)
+    ak, av = _compact_sorted(slab_keys, slab_vals, live)
+    # only the C smallest merged entries survive truncation: merge those
+    out_keys, out_vals = _merge_sorted_runs(ak, av, pk, pv, C)
+    n_live = jnp.sum(live.astype(jnp.int32)) + jnp.sum((pk != EMPTY).astype(jnp.int32))
+    dropped = jnp.maximum(n_live - C, 0)
+    return out_keys, out_vals, dropped
 
 
 # ---------------------------------------------------------------------------

@@ -370,7 +370,8 @@ def test_merge_credits_live_counters_to_parent():
 
 def test_scenarios_fixed_shapes_and_valid_probs():
     cfg = ScenarioConfig(n_epochs=4, epoch_ops=128, n_records=256, value_dim=2)
-    for name in ("shifting_hotspot", "flash_crowd", "diurnal", "node_failure"):
+    for name in ("shifting_hotspot", "flash_crowd", "diurnal", "node_failure",
+                 "rack_failure_hotspot"):
         scen = make_scenario(name, cfg)
         for e in range(cfg.n_epochs):
             p = scen.record_probs(e)
