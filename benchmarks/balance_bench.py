@@ -26,15 +26,25 @@ Extras:
 * ``--period N`` sets the control-pull cadence (= the fused scan length;
   default 1 so the gate matrix's policy decisions stay comparable to the
   per-epoch PR-3 rows — raise it to trade control lag for throughput);
+  ``--period auto`` turns on the drift-adaptive cadence
+  (``Policy.pull_every="auto"``): each report picks the next period from
+  report-to-report load drift inside ``ClusterConfig.auto_band``;
 * ``--profile`` runs the epoch-pipeline comparison: fused vs per-epoch
   driver on the same scenario with the whole run fused into one period,
   reporting compile vs steady-state epochs/s and host-sync counts, and
   **gating** on the fused driver beating the per-epoch one (the CI smoke
-  ratio + host-sync gates).
+  ratio + host-sync gates);
+* ``--replication`` runs the ``repro.replication`` three-mode comparison
+  (eventual / chain / craq over diurnal, write-heavy flash-crowd and
+  YCSB-A mixes) with its own gates: craq clean-read p99 must not exceed
+  chain tail-read p99 on the read-heavy diurnal phase, only craq may
+  (and must, under writes) report dirty-read bounces, and every step
+  compiles once.  The gate matrix itself stays in ``eventual`` mode, so
+  PR-2/3/4 comparisons are untouched.
 
 Run: ``PYTHONPATH=src python -m benchmarks.balance_bench
 [--quick] [--scenarios a,b] [--policies x,y] [--service kind] [--dist]
-[--period N] [--profile] [--json BENCH_balance.json]``
+[--period N|auto] [--profile] [--replication] [--json BENCH_balance.json]``
 """
 
 from __future__ import annotations
@@ -75,7 +85,7 @@ PROFILE_RATIO_GATE_QUICK = 0.9
 # the acceptance-gate cluster geometry: fine ranges so a Zipf hot block
 # spans several chains, headroom for selective replication and splitting
 def cluster_config(quick: bool, service: str = "fixed",
-                   period: int = DEFAULT_PERIOD):
+                   period=DEFAULT_PERIOD):
     from repro.cluster import ClusterConfig
     from repro.core import ServiceModel
 
@@ -117,6 +127,7 @@ def scenario_kwargs(name: str, scfg) -> dict:
             fail_epoch=mid, rack=(0, 1),
             recover_epoch=mid + 2 if mid + 2 < scfg.n_epochs else None,
         ),
+        "ycsb_a": {},
         "stationary": {},
     }[name]
 
@@ -136,7 +147,7 @@ def _steady_epochs_per_s(drv, n_epochs: int, repeats: int = 1) -> float:
 
 def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
                backend: str = "oracle", mesh=None, dist_cfg=None,
-               period: int = DEFAULT_PERIOD, fused: bool = True,
+               period=DEFAULT_PERIOD, fused: bool = True,
                measure_steady: bool = False, verbose: bool = True):
     from repro.cluster import EpochDriver, make_policy, make_scenario, summarize
 
@@ -160,6 +171,8 @@ def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
             row["period"] = period
             row["fused"] = fused
             row["host_syncs"] = drv.host_syncs
+            if drv.period_history:
+                row["auto_periods"] = list(drv.period_history)
             if measure_steady and backend == "oracle":
                 # the re-drive mutates driver state (fine for timing) but
                 # runs AFTER the row's metrics are captured
@@ -191,7 +204,8 @@ def check_acceptance(rows, *, quick: bool = False) -> list[str]:
     must hold at any size.
     """
     by = {(r["scenario"], r["policy"]): r for r in rows
-          if r.get("backend", "oracle") == "oracle" and not r.get("profile")}
+          if r.get("backend", "oracle") == "oracle" and not r.get("profile")
+          and r.get("bench") != "replication"}
     problems = []
     f = by.get(("shifting_hotspot", "frozen"))
     a = by.get(("shifting_hotspot", "full_adaptive"))
@@ -362,9 +376,10 @@ def main(argv=None):
                          "(8-device host mesh subprocess)")
     ap.add_argument("--dist-worker", action="store_true",
                     help=argparse.SUPPRESS)  # internal: the forked mesh run
-    ap.add_argument("--period", type=int, default=DEFAULT_PERIOD,
+    ap.add_argument("--period", default=str(DEFAULT_PERIOD),
                     help="control-pull cadence = fused scan length "
-                         f"(default {DEFAULT_PERIOD})")
+                         f"(default {DEFAULT_PERIOD}); 'auto' adapts the "
+                         "cadence to report-to-report load drift")
     ap.add_argument("--per-epoch", action="store_true",
                     help="run the per-epoch reference driver instead of "
                          "the fused period pipeline")
@@ -372,6 +387,9 @@ def main(argv=None):
                     help="also run the fused vs per-epoch pipeline profile "
                          "(steady-state epochs/s + host-sync counts, with "
                          "the ratio gate)")
+    ap.add_argument("--replication", action="store_true",
+                    help="also run the three-mode replication comparison "
+                         "(eventual/chain/craq tail latencies + gates)")
     ap.add_argument("--json", default=None, help="write rows to this path")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the acceptance gate (exploratory runs)")
@@ -380,16 +398,26 @@ def main(argv=None):
     if args.dist_worker:
         return dist_worker(args.quick)
 
+    period = args.period if args.period == "auto" else int(args.period)
     scenarios = [s for s in args.scenarios.split(",") if s]
     policies = [p for p in args.policies.split(",") if p]
     rows = run_matrix(scenarios, policies, args.quick, service=args.service,
-                      period=args.period, fused=not args.per_epoch,
+                      period=period, fused=not args.per_epoch,
                       measure_steady=True)
 
     profile_problems: list[str] = []
     if args.profile:
         profile_rows, profile_problems = run_profile(args.quick)
         rows.extend(profile_rows)
+
+    replication_problems: list[str] = []
+    if args.replication:
+        from repro.replication.bench import (
+            check_replication, run_replication_matrix,
+        )
+        repl_rows = run_replication_matrix(args.quick)
+        replication_problems = check_replication(repl_rows)
+        rows.extend(repl_rows)
 
     if args.dist:
         dist_rows = run_dist_parity(args.quick)
@@ -409,7 +437,8 @@ def main(argv=None):
         print(f"wrote {args.json} ({len(rows)} rows)")
 
     if not args.no_check:
-        problems = check_acceptance(rows, quick=args.quick) + profile_problems
+        problems = (check_acceptance(rows, quick=args.quick)
+                    + profile_problems + replication_problems)
         if problems:
             print("ACCEPTANCE FAILED:")
             for p in problems:
@@ -425,6 +454,10 @@ def main(argv=None):
             g = PROFILE_RATIO_GATE_QUICK if args.quick else PROFILE_RATIO_GATE
             gates.append(
                 f"fused steady epochs/s >= {g}x per-epoch at fewer syncs")
+        if args.replication:
+            gates.append(
+                "craq clean-read p99 <= chain tail-read p99 on read-heavy "
+                "diurnal; dirty bounces only (and always) under craq writes")
         print("acceptance: " + "; ".join(gates))
     return 0
 

@@ -24,6 +24,8 @@ from repro.cluster.metrics import (
     imbalance_stats_batch,
     latency_percentiles,
     latency_percentiles_batch,
+    masked_p99_batch,
+    p999_batch,
     summarize,
 )
 from repro.cluster.policies import (
@@ -40,7 +42,8 @@ from repro.cluster.scenarios import SCENARIOS, Scenario, ScenarioConfig, make_sc
 __all__ = [
     "ClusterConfig", "EpochDriver",
     "EpochMetrics", "imbalance_stats", "imbalance_stats_batch",
-    "latency_percentiles", "latency_percentiles_batch", "summarize",
+    "latency_percentiles", "latency_percentiles_batch",
+    "masked_p99_batch", "p999_batch", "summarize",
     "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
     "FullAdaptivePolicy", "make_policy",
     "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",

@@ -19,8 +19,10 @@ time the period's traffic on the PR-1 vectorized DES engine
 
 **Device-resident period pipeline** (the default, ``fused=True``): the
 whole control period runs as ONE jitted ``lax.scan`` over the period's
-pre-staged query batches, with the store slabs, load registers and
-sketch **donated** into the call (the slabs are the big allocation; no
+pre-staged query batches, with the store slabs, load registers, sketch
+and the replication version/dirty register file
+(:mod:`repro.replication`) **donated** into the call (the slabs are the
+big allocation; no
 second live copy exists during the scan; the directory is deliberately
 NOT donated — its freshly-grafted zeroed counter tables can alias one
 constant buffer, which XLA rejects as a double donation, and it is tiny
@@ -72,12 +74,15 @@ from repro.core.dist_store import DistConfig, make_dist_apply
 from repro.core.migration import execute as execute_migrations
 from repro.core.stats import make_sketch, pull_report, sketch_query, sketch_update
 from repro.core.store import apply_routed, make_store
+from repro import replication as RPL
 
 from repro.cluster.metrics import (
     EpochMetrics,
     imbalance_stats_batch,
     latency_percentiles_batch,
+    masked_p99_batch,
     migration_traffic,
+    p999_batch,
 )
 from repro.cluster.policies import Policy
 from repro.cluster.scenarios import Scenario
@@ -97,9 +102,21 @@ class ClusterConfig:
     capacity: int | None = None    # per-shard slots; None -> sized from scenario
     mode: str = C.IN_SWITCH
     n_clients: int = 32            # DES closed-loop client count
+    # consistency mode over the replica chains (repro.replication):
+    # "eventual" (pre-subsystem behaviour, bit-identical), "chain"
+    # (CR: tail reads, full-chain writes) or "craq" (apportioned reads
+    # with dirty-bit tail bounces)
+    replication_mode: str = "eventual"
     # epochs per controller pull == the fused scan's period length;
-    # None -> the policy's declared ``pull_every`` cadence
-    report_every: int | None = None
+    # None -> the policy's declared ``pull_every`` cadence; "auto" ->
+    # adaptive cadence: the next period is picked from report-to-report
+    # load drift inside ``auto_band`` (the fused scan is sized at the
+    # band maximum and shorter periods run as masked-padded segments,
+    # so the program still compiles once)
+    report_every: int | str | None = None
+    auto_band: tuple = (1, 8)
+    auto_drift_lo: float = 0.1     # drift below this doubles the period
+    auto_drift_hi: float = 0.4     # drift above this halves it
     sketch_width: int = 512
     sketch_depth: int = 4
     # distinct-key window cap for the sketch pull view; uniform thinning
@@ -203,9 +220,34 @@ class EpochDriver:
             raise ValueError("backend='dist' needs a mesh")
         self.backend = backend
         self.fused = fused
-        # pull cadence: explicit config wins, else the policy declares it
-        self.period = (cfg.report_every if cfg.report_every is not None
-                       else policy.pull_every)
+        # consistency mode wiring: how routing / hop planning / the
+        # version register file behave (repro.replication.resolve_mode)
+        self.mode_plan = RPL.resolve_mode(
+            cfg.replication_mode, policy.read_spread, cfg.replication
+        )
+        # pull cadence: explicit config wins, else the policy declares it.
+        # "auto" picks each period from report-to-report load drift within
+        # cfg.auto_band; the fused scan is sized at the band maximum.
+        pe = (cfg.report_every if cfg.report_every is not None
+              else policy.pull_every)
+        self.period_history: list[int] = []
+        if pe == "auto":
+            lo, hi = int(cfg.auto_band[0]), int(cfg.auto_band[1])
+            if not (1 <= lo <= hi):
+                raise ValueError(f"bad auto_band {cfg.auto_band}")
+            self.auto_period = True
+            self.period = hi               # scan length = band maximum
+            self._cur_period = lo          # start controlling tightly
+            self._next_pull = lo
+            self._prev_load: np.ndarray | None = None
+            self._last_pull_epoch = 0
+            # spread modes: load registers are halved (not reset) at each
+            # pull, so drift must difference out the post-halving floor
+            # or a decayed tail of prior periods pollutes the signal
+            self._reg_floor = np.zeros((cfg.num_nodes,), np.float64)
+        else:
+            self.auto_period = False
+            self.period = int(pe)
 
         scfg = scenario.cfg
         # keep the policy's notion of base replication honest
@@ -237,6 +279,10 @@ class EpochDriver:
         self.directory = directory
         self.load_reg = jnp.zeros((cfg.num_nodes,), jnp.uint32)
         self.sketch = make_sketch(cfg.sketch_width, cfg.sketch_depth)
+        # the (n_slots, r_max) version/dirty register file, device-resident
+        # next to the load registers; carried (and donated) through the
+        # fused period scan for chain/craq, inert zeros under eventual
+        self.repl = RPL.make_state(n_slots, cfg.r_max)
         self.key = jax.random.PRNGKey(cfg.seed)
 
         self._traces = 0
@@ -261,16 +307,17 @@ class EpochDriver:
             base = dist_cfg or DistConfig()
             self._dist_cfg = dataclasses.replace(
                 base,
-                read_spread=policy.read_spread,
+                read_spread=self.mode_plan.spread,
                 return_decision=True,
+                replication_mode=cfg.replication_mode,
                 max_scan_results=cfg.max_scan_results,
             )
             self._dist_apply = make_dist_apply(mesh, directory, self._dist_cfg)
             self._step = self._build_dist_step()
         elif fused:
-            self._period_fn = self._build_oracle_period(policy.read_spread)
+            self._period_fn = self._build_oracle_period(self.mode_plan)
         else:
-            self._step = self._build_oracle_step(policy.read_spread)
+            self._step = self._build_oracle_step(self.mode_plan)
 
         self._preload()
 
@@ -310,43 +357,72 @@ class EpochDriver:
         self._last_overflow = int(np.asarray(self.store.overflow).sum())
 
     # -- device step variants ----------------------------------------------
-    def _make_oracle_body(self, spread: bool):
+    def _make_oracle_body(self, mp: RPL.ModePlan):
         """One epoch's device math — shared verbatim by the per-epoch jit
-        and the fused period scan so the two are the same program."""
+        and the fused period scan so the two are the same program.
+
+        ``mp`` wires the replication mode: p2c read spreading on or off,
+        CRAQ dirty-bit tail bounces, the write path's client-visible
+        chain cap, and whether the version register file advances."""
         cfg = self.cfg
         N = cfg.num_nodes
-        # widened members are lazily-refreshed read replicas: the write's
-        # client-visible path is the base chain only (see plan_hops)
-        cap = cfg.replication if spread else None
+        spread = mp.spread
+        # eventual mode under a spreading policy: widened members are
+        # lazily-refreshed read replicas, the write's client-visible path
+        # is the base chain only.  chain/craq broadcast down the whole
+        # chain (see plan_hops / repro.replication.protocol).
+        cap = mp.write_cap_spread
         # intra-epoch p2c freshness: sub-chunk the batch so the load
         # registers the p2c rule reads are at most 1/chunks of an epoch
         # stale.  The chunk loop unrolls inside the single jitted step —
         # the trace count stays 1.
         chunks = cfg.p2c_chunks if spread else 1
 
-        def body(store, directory, load_reg, sketch, q, rng):
+        def route_chunk(directory, load_reg, dirty, qs, rng_c):
+            if mp.dirty_reads:
+                dec, directory, load_reg, picked, bounced = (
+                    R.route_load_aware_dirty(directory, qs, load_reg, dirty, rng_c)
+                )
+            elif spread:
+                dec, directory, load_reg = R.route_load_aware(
+                    directory, qs, load_reg, rng_c
+                )
+                picked = bounced = None
+            else:
+                dec, directory = R.route(directory, qs)
+                picked = bounced = None
+            return dec, directory, load_reg, picked, bounced
+
+        def body(store, directory, load_reg, sketch, repl, q, rng):
             r_route, r_plan = jax.random.split(rng)
+            B = q.opcode.shape[0]
+            # reads consult the PRE-epoch dirty state, exactly as they
+            # observe the pre-batch store (repro.replication.state)
+            dirty = RPL.dirty_bits(repl) if mp.dirty_reads else None
             if spread and chunks > 1:
-                B = q.opcode.shape[0]
                 csize = B // chunks
-                decs = []
+                decs, picks, bncs = [], [], []
                 for ci in range(chunks):
                     qs = jax.tree.map(
                         lambda x: x[ci * csize : (ci + 1) * csize], q
                     )
-                    dec, directory, load_reg = R.route_load_aware(
-                        directory, qs, load_reg, jax.random.fold_in(r_route, ci)
+                    dec, directory, load_reg, picked, bounced = route_chunk(
+                        directory, load_reg, dirty, qs,
+                        jax.random.fold_in(r_route, ci),
                     )
                     decs.append(dec)
+                    picks.append(picked)
+                    bncs.append(bounced)
                 decision = jax.tree.map(
                     lambda *xs: jnp.concatenate(xs, axis=0), *decs
                 )
-            elif spread:
-                decision, directory, load_reg = R.route_load_aware(
-                    directory, q, load_reg, r_route
-                )
+                if mp.dirty_reads:
+                    picked = jnp.concatenate(picks, axis=0)
+                    bounced = jnp.concatenate(bncs, axis=0)
             else:
-                decision, directory = R.route(directory, q)
+                decision, directory, load_reg, picked, bounced = route_chunk(
+                    directory, load_reg, dirty, q, r_route
+                )
             node_ops = _node_ops(decision, q.opcode, N)
             if not spread:
                 # tail-read path: registers tracked for parity (same units)
@@ -355,25 +431,36 @@ class EpochDriver:
             store, resp = apply_routed(
                 store, q, decision, max_scan_results=cfg.max_scan_results
             )
+            bounce_kw = (
+                dict(read_via=picked, read_bounce=bounced)
+                if mp.dirty_reads else {}
+            )
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=r_plan, num_nodes=N,
                 write_chain_cap=cap, service_model=cfg.service_model,
+                **bounce_kw,
             )
+            if mp.track_state:
+                is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+                repl = RPL.advance(repl, decision.ridx, is_write)
             retries = jnp.zeros((), jnp.int32)
-            return store, directory, load_reg, sketch, plan, node_ops, retries
+            bounced_out = (bounced if mp.dirty_reads
+                           else jnp.zeros((B,), jnp.bool_))
+            return (store, directory, load_reg, sketch, repl,
+                    plan, node_ops, retries, bounced_out)
 
         return body
 
-    def _build_oracle_step(self, spread: bool):
-        body = self._make_oracle_body(spread)
+    def _build_oracle_step(self, mp: RPL.ModePlan):
+        body = self._make_oracle_body(mp)
 
-        def step(store, directory, load_reg, sketch, q, rng):
+        def step(store, directory, load_reg, sketch, repl, q, rng):
             self._traces += 1  # python side effect: counts traces, not calls
-            return body(store, directory, load_reg, sketch, q, rng)
+            return body(store, directory, load_reg, sketch, repl, q, rng)
 
         return jax.jit(step)
 
-    def _build_oracle_period(self, spread: bool):
+    def _build_oracle_period(self, mp: RPL.ModePlan):
         """The fused period program: ``period`` epoch bodies under one
         jitted ``lax.scan`` with the store/directory/load-register/sketch
         buffers **donated** (the store slabs are the big allocation — the
@@ -384,43 +471,46 @@ class EpochDriver:
         and the host discards their output rows, so one fixed-length
         program covers every segment length — exactly one trace per
         scenario."""
-        body = self._make_oracle_body(spread)
+        body = self._make_oracle_body(mp)
 
-        def period(store, directory, load_reg, sketch, qs, rngs, live):
+        def period(store, directory, load_reg, sketch, repl, qs, rngs, live):
             def scan_body(carry, xs):
-                store, directory, load_reg, sketch = carry
+                store, directory, load_reg, sketch, repl = carry
                 q, rng, lv = xs
-                (store2, directory2, load_reg2, sketch2,
-                 plan, node_ops, retries) = body(
-                    store, directory, load_reg, sketch, q, rng
+                (store2, directory2, load_reg2, sketch2, repl2,
+                 plan, node_ops, retries, bounced) = body(
+                    store, directory, load_reg, sketch, repl, q, rng
                 )
                 keep = lambda new, old: jnp.where(lv, new, old)
                 store2 = jax.tree.map(keep, store2, store)
                 directory2 = jax.tree.map(keep, directory2, directory)
                 carry2 = (store2, directory2, keep(load_reg2, load_reg),
-                          keep(sketch2, sketch))
+                          keep(sketch2, sketch),
+                          jax.tree.map(keep, repl2, repl))
                 ovf = jnp.sum(store2.overflow)
-                return carry2, (plan, node_ops, retries, ovf)
+                return carry2, (plan, node_ops, retries, ovf, bounced)
 
             carry, outs = jax.lax.scan(
-                scan_body, (store, directory, load_reg, sketch),
+                scan_body, (store, directory, load_reg, sketch, repl),
                 (qs, rngs, live),
             )
             return (*carry, *outs)
 
-        # donate the big buffers: store slabs, load registers, sketch.
+        # donate the big buffers: store slabs, load registers, sketch and
+        # the replication register file (version/dirty tables).
         # The directory is NOT donated — several of its freshly-grafted
         # tables (e.g. the zeroed read/write counters) can alias the same
         # constant buffer, which XLA rejects as a double donation; it is
         # also tiny next to the slabs, so nothing is lost.
-        return jax.jit(period, donate_argnums=(0, 2, 3))
+        return jax.jit(period, donate_argnums=(0, 2, 3, 4))
 
     def _build_dist_step(self):
         from jax.sharding import NamedSharding, PartitionSpec
 
         cfg = self.cfg
         N = cfg.num_nodes
-        spread = self.policy.read_spread
+        mp = self.mode_plan
+        spread = mp.spread
         dist_apply = self._dist_apply
         # canonical layouts: replicated control state, node-sharded store.
         # Every call re-commits its inputs to these (a no-op at steady
@@ -432,11 +522,12 @@ class EpochDriver:
         rep = NamedSharding(self._mesh, PartitionSpec())
         shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
 
-        def observe(q, target, chain, chain_len, sketch, rng):
+        def observe(q, ridx, target, chain, chain_len, sketch, rng, repl,
+                    picked, bounced):
             """Jitted post-processing of the dist apply's decision."""
             self._traces += 1
             decision = C.RoutingDecision(
-                ridx=jnp.zeros_like(target),
+                ridx=ridx,
                 target=target,
                 chain=chain,
                 chain_len=chain_len,
@@ -444,34 +535,54 @@ class EpochDriver:
             )
             node_ops = _node_ops(decision, q.opcode, N)
             sketch = sketch_update(sketch, q.key)
+            bounce_kw = (dict(read_via=picked, read_bounce=bounced)
+                         if mp.dirty_reads else {})
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=rng, num_nodes=N,
-                write_chain_cap=cfg.replication if spread else None,
-                service_model=cfg.service_model,
+                write_chain_cap=mp.write_cap_spread,
+                service_model=cfg.service_model, **bounce_kw,
             )
-            return sketch, plan, node_ops
+            if mp.track_state:
+                is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+                repl = RPL.advance(repl, ridx, is_write)
+            return sketch, plan, node_ops, repl
 
         observe = jax.jit(observe)
 
-        def step(store, directory, load_reg, sketch, q, rng):
+        def step(store, directory, load_reg, sketch, repl, q, rng):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
             load_reg = jax.device_put(load_reg, rep)
             sketch = jax.device_put(sketch, rep)
+            repl = jax.device_put(repl, rep)
             r_route, r_plan = jax.random.split(rng)
-            if spread:
+            B = q.opcode.shape[0]
+            if mp.dirty_reads:
+                dirty = jax.device_put(RPL.dirty_bits(repl), rep)
+                store, _resp, directory, load_reg, m = dist_apply(
+                    store, directory, load_reg, dirty, q, r_route
+                )
+                picked, bounced = m["picked"], m["bounced"]
+            elif spread:
                 store, _resp, directory, load_reg, m = dist_apply(
                     store, directory, load_reg, q, r_route
                 )
+                picked = bounced = None
             else:
                 store, _resp, directory, m = dist_apply(store, directory, q)
-            sketch, plan, node_ops = observe(
-                q, m["target"], m["chain"], m["chain_len"], sketch, r_plan
+                picked = bounced = None
+            if picked is None:
+                # placeholders keep observe's signature mode-independent
+                picked = m["target"]
+                bounced = jnp.zeros((B,), jnp.bool_)
+            sketch, plan, node_ops, repl = observe(
+                q, m["ridx"], m["target"], m["chain"], m["chain_len"], sketch,
+                r_plan, repl, picked, bounced,
             )
             if not spread:
                 load_reg = load_reg + node_ops.astype(jnp.uint32)
-            return (store, directory, load_reg, sketch, plan, node_ops,
-                    m["bucket_overflow"])
+            return (store, directory, load_reg, sketch, repl, plan, node_ops,
+                    m["bucket_overflow"], bounced)
 
         return step
 
@@ -538,12 +649,26 @@ class EpochDriver:
             elif kind == "recover":
                 self.controller.recover_node(node)
                 events.append(f"recover:{node}")
+        self._sync_repl()
         return events, mig_entries, mig_bytes
 
-    def _control_pull(self) -> tuple[list[str], int, int]:
+    def _sync_repl(self) -> None:
+        """Replay the controller's reconfiguration journal onto the
+        device-resident version/dirty register file (chain membership
+        changes dirty conservatively, split children inherit — see
+        ``repro.replication.state.apply_events``).  The journal is always
+        drained (it must not grow unbounded) but only the tracking modes
+        pay the host round-trip."""
+        events = self.controller.drain_repl_log()
+        if events and self.mode_plan.track_state:
+            self.host_syncs += 1   # apply_events pulls the register file
+            self.repl = RPL.apply_events(self.repl, events)
+
+    def _control_pull(self, now: int) -> tuple[list[str], int, int]:
         """The period-boundary controller pull: harvest + reset counters,
         run the policy, execute its migration plan, graft the refreshed
-        tables.  The ONLY counter/load-register reset path."""
+        tables.  The ONLY counter/load-register reset path.  ``now`` is
+        the epoch count at the pull (the boundary just completed)."""
         scfg = self.scenario.cfg
         self.host_syncs += 1   # pull_report harvests the device counters
         report, self.directory = pull_report(self.directory, self._period)
@@ -558,7 +683,7 @@ class EpochDriver:
                 report, key_sample=sample, key_heat=heat
             )
             self._key_window = np.empty(0, np.uint32)
-        if self.policy.read_spread:
+        if self.mode_plan.spread:
             # directory.node_load charges every read to the chain tail;
             # under p2c spreading the data-plane load registers are the
             # truthful per-node picture — hand those to the policy so
@@ -577,12 +702,53 @@ class EpochDriver:
             self.store = execute_migrations(self.store, ops)
             events.extend(f"{op.kind}:{op.src}->{op.dst}" for op in ops)
         self.directory = self.controller.refresh(self.directory)
+        self._sync_repl()
+        if self.auto_period:
+            nl = np.asarray(report.node_load, np.float64)
+            if self.mode_plan.spread:
+                # registers are cumulative-with-decay; the drift input is
+                # this period's delta over the post-halving floor (the
+                # non-spread path feeds pull_report counters, which ARE
+                # reset per period — same semantics either way)
+                self._auto_retune(nl - self._reg_floor, now)
+                self._reg_floor = np.floor_divide(nl, 2)
+            else:
+                self._auto_retune(nl, now)
         # halve rather than zero: p2c needs *recent* load signal to keep
         # steering reads off write-busy heads; a hard reset degenerates
         # it to a uniform-random replica pick for the whole next period
         self.load_reg = self.load_reg // 2
         self.sketch = jnp.zeros_like(self.sketch)
         return events, mig_entries, mig_bytes
+
+    def _auto_retune(self, node_load: np.ndarray, now: int) -> None:
+        """Adaptive pull cadence: pick the next control period from
+        report-to-report load drift, inside ``cfg.auto_band``.
+
+        Drift is the L1 change of the *per-epoch-normalized* node-load
+        vector relative to its previous mass (periods vary in length, so
+        raw register sums are not comparable).  High drift (a moving
+        hotspot) halves the period — control tightens; low drift doubles
+        it — the data plane runs longer between host round-trips.  The
+        fused scan is sized at the band maximum, so every period length
+        in the band runs as a masked-padded segment of the one compiled
+        program."""
+        cfg = self.cfg
+        lo, hi = int(cfg.auto_band[0]), int(cfg.auto_band[1])
+        span = max(now - self._last_pull_epoch, 1)
+        load = np.asarray(node_load, np.float64) / span
+        prev = self._prev_load
+        if prev is not None:
+            mass = max(prev.sum(), 1e-9)
+            drift = float(np.abs(load - prev).sum() / mass)
+            if drift > cfg.auto_drift_hi:
+                self._cur_period = max(lo, self._cur_period // 2)
+            elif drift < cfg.auto_drift_lo:
+                self._cur_period = min(hi, self._cur_period * 2)
+        self._prev_load = load
+        self._last_pull_epoch = now
+        self._next_pull = now + self._cur_period
+        self.period_history.append(self._cur_period)
 
     # -- the per-epoch reference loop --------------------------------------
     def run_epoch(self, e: int) -> EpochMetrics:
@@ -604,9 +770,10 @@ class EpochDriver:
             jnp.asarray(values), jnp.asarray(end_keys),
         )
         rng = jax.random.fold_in(self.key, e)
-        (self.store, self.directory, self.load_reg, self.sketch,
-         plan, node_ops, retries) = self._step(
-            self.store, self.directory, self.load_reg, self.sketch, q, rng
+        (self.store, self.directory, self.load_reg, self.sketch, self.repl,
+         plan, node_ops, retries, bounced) = self._step(
+            self.store, self.directory, self.load_reg, self.sketch,
+            self.repl, q, rng
         )
 
         self.host_syncs += 1   # the DES engine pulls the plan to the host
@@ -617,8 +784,19 @@ class EpochDriver:
             link=cfg.latency.link,
             backend=cfg.des_backend,
         )
-        (p50,), (p99,) = latency_percentiles_batch(np.asarray(latency)[None])
+        lat = np.asarray(latency)[None]
+        (p50,), (p99,) = latency_percentiles_batch(lat)
+        (p999,) = p999_batch(lat)
         mk = float(np.asarray(makespan))
+
+        is_read = ((opcodes == K.OP_GET) | (opcodes == K.OP_SCAN))[None]
+        if self.mode_plan.dirty_reads:
+            bounced_h = self._sync(bounced).astype(bool)[None]
+        else:
+            bounced_h = np.zeros_like(is_read)
+        (read_p99,) = masked_p99_batch(lat, is_read)
+        (clean_p99,) = masked_p99_batch(lat, is_read & ~bounced_h)
+        dirty_reads = int(bounced_h.sum())
 
         live = np.array(
             [n not in self.controller.failed for n in range(cfg.num_nodes)]
@@ -632,8 +810,10 @@ class EpochDriver:
         self._last_overflow = overflow_now
 
         # ---- control pull: the only counter/load-register reset path ----
-        if (e + 1) % self.period == 0:
-            pev, pen, pby = self._control_pull()
+        pull = ((e + 1) == self._next_pull if self.auto_period
+                else (e + 1) % self.period == 0)
+        if pull:
+            pev, pen, pby = self._control_pull(e + 1)
             events.extend(pev)
             mig_entries += pen
             mig_bytes += pby
@@ -655,18 +835,29 @@ class EpochDriver:
             retries=int(self._sync(retries)),
             compiled_steps=self.traces,
             events=events,
+            p999=float(p999),
+            read_p99=float(read_p99),
+            clean_read_p99=float(clean_p99),
+            dirty_reads=dirty_reads,
+            replication=cfg.replication_mode,
         )
 
     # -- the fused period loop ---------------------------------------------
     def _segment_len(self, e0: int, n: int) -> int:
         """Epochs until the next host intervention: the period boundary,
         the run end, or the next scenario control event."""
-        next_pull = ((e0 // self.period) + 1) * self.period
-        end = min(next_pull, n)
+        if self.auto_period:
+            next_pull = self._next_pull
+        else:
+            next_pull = ((e0 // self.period) + 1) * self.period
+        # clamp to the scan length: a stale _next_pull (e.g. a timing
+        # re-drive of an already-run auto-cadence driver) must never ask
+        # for a segment longer than the compiled program
+        end = min(next_pull, e0 + self.period, n)
         for e2 in range(e0 + 1, end):
             if e2 in self._event_epochs:
                 return e2 - e0
-        return end - e0
+        return max(end - e0, 1)
 
     def _scan_segment(self, e0: int, L: int):
         """Stage a segment's queries and run the donated period scan."""
@@ -679,6 +870,7 @@ class EpochDriver:
             key_l.append(keys)
             end_l.append(end_keys)
             val_l.append(values)
+        opcodes_h = np.stack(op_l)        # (L, B) host view for read masks
         for _ in range(L, P):   # pad with masked no-op epochs
             op_l.append(op_l[-1])
             key_l.append(key_l[-1])
@@ -692,45 +884,53 @@ class EpochDriver:
             jnp.arange(e0, e0 + P)
         )
         live = jnp.asarray(np.arange(P) < L)
-        (self.store, self.directory, self.load_reg, self.sketch,
-         plan, node_ops, retries, ovf) = self._period_fn(
+        (self.store, self.directory, self.load_reg, self.sketch, self.repl,
+         plan, node_ops, retries, ovf, bounced) = self._period_fn(
             self.store, self.directory, self.load_reg, self.sketch,
-            qs, rngs, live,
+            self.repl, qs, rngs, live,
         )
         return (jax.tree.map(lambda x: x[:L], plan),
-                node_ops[:L], retries[:L], ovf[:L])
+                node_ops[:L], retries[:L], ovf[:L], bounced[:L], opcodes_h)
 
     def _step_segment(self, e0: int, L: int):
         """Dist-backend segment: per-epoch device steps (shard_map programs
         do not nest under a scan) with all host syncs deferred to the
         period boundary — plans/metrics stay on device until then."""
-        plans, nops_l, rtr_l, ovf_l = [], [], [], []
+        plans, nops_l, rtr_l, ovf_l, bnc_l, op_l = [], [], [], [], [], []
         for i in range(L):
             opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
             self._note_keys(keys)
+            op_l.append(opcodes)
             q = C.make_queries(
                 jnp.asarray(keys), jnp.asarray(opcodes),
                 jnp.asarray(values), jnp.asarray(end_keys),
             )
             rng = jax.random.fold_in(self.key, e0 + i)
             (self.store, self.directory, self.load_reg, self.sketch,
-             plan, node_ops, retries) = self._step(
-                self.store, self.directory, self.load_reg, self.sketch, q, rng
+             self.repl, plan, node_ops, retries, bounced) = self._step(
+                self.store, self.directory, self.load_reg, self.sketch,
+                self.repl, q, rng
             )
             plans.append(plan)
             nops_l.append(node_ops)
             rtr_l.append(retries)
             ovf_l.append(jnp.sum(self.store.overflow))
+            bnc_l.append(bounced)
         plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
-        return (plan, jnp.stack(nops_l), jnp.stack(rtr_l), jnp.stack(ovf_l))
+        return (plan, jnp.stack(nops_l), jnp.stack(rtr_l), jnp.stack(ovf_l),
+                jnp.stack(bnc_l), np.stack(op_l))
 
     def _run_segment(self, e0: int, n: int) -> list[EpochMetrics]:
         ev0, en0, by0 = self._handle_events(e0)
         L = self._segment_len(e0, n)
         if self.backend == "oracle":
-            plan, node_ops, retries, ovf = self._scan_segment(e0, L)
+            plan, node_ops, retries, ovf, bounced, opcodes_h = (
+                self._scan_segment(e0, L)
+            )
         else:
-            plan, node_ops, retries, ovf = self._step_segment(e0, L)
+            plan, node_ops, retries, ovf, bounced, opcodes_h = (
+                self._step_segment(e0, L)
+            )
 
         cfg = self.cfg
         scfg = self.scenario.cfg
@@ -750,6 +950,15 @@ class EpochDriver:
         ovf_h = self._sync(ovf).astype(np.int64)
 
         p50s, p99s = latency_percentiles_batch(lat)
+        p999s = p999_batch(lat)
+        is_read = (opcodes_h == K.OP_GET) | (opcodes_h == K.OP_SCAN)
+        if self.mode_plan.dirty_reads:
+            bounced_h = self._sync(bounced).astype(bool)
+        else:
+            bounced_h = np.zeros_like(is_read)
+        read_p99s = masked_p99_batch(lat, is_read)
+        clean_p99s = masked_p99_batch(lat, is_read & ~bounced_h)
+        dirty_counts = bounced_h.sum(axis=1)
         live = np.array(
             [m not in self.controller.failed for m in range(cfg.num_nodes)]
         )
@@ -757,11 +966,12 @@ class EpochDriver:
         drops = np.diff(ovf_h, prepend=np.int64(self._last_overflow))
         self._last_overflow = int(ovf_h[-1])
 
-        pulled = (e0 + L) % self.period == 0
+        pulled = ((e0 + L) == self._next_pull if self.auto_period
+                  else (e0 + L) % self.period == 0)
         pev: list[str] = []
         pen = pby = 0
         if pulled:
-            pev, pen, pby = self._control_pull()
+            pev, pen, pby = self._control_pull(e0 + L)
 
         rows = []
         for i in range(L):
@@ -793,6 +1003,11 @@ class EpochDriver:
                 retries=int(retries_h[i]),
                 compiled_steps=self.traces,
                 events=events,
+                p999=float(p999s[i]),
+                read_p99=float(read_p99s[i]),
+                clean_read_p99=float(clean_p99s[i]),
+                dirty_reads=int(dirty_counts[i]),
+                replication=cfg.replication_mode,
             ))
         return rows
 

@@ -37,6 +37,13 @@ class EpochMetrics:
     retries: int              # bucket overflows (dist backend; 0 for oracle)
     compiled_steps: int       # cumulative device-step trace count
     events: list[str] = dataclasses.field(default_factory=list)
+    # ---- replication-mode observables (repro.replication) ----
+    p999: float = 0.0         # extreme tail (p99.9) over all ops
+    read_p99: float = 0.0     # p99 over GET/SCAN ops only
+    clean_read_p99: float = 0.0   # p99 over reads served WITHOUT a CRAQ
+                                  # tail bounce (== read_p99 off-craq)
+    dirty_reads: int = 0      # reads that bounced to the tail this epoch
+    replication: str = "eventual"
 
     def to_row(self) -> dict:
         row = dataclasses.asdict(self)
@@ -64,6 +71,35 @@ def latency_percentiles_batch(latency: np.ndarray) -> tuple[np.ndarray, np.ndarr
         return z, z.copy()
     qs = np.percentile(lat, (50, 99), axis=1)
     return qs[0], qs[1]
+
+
+def p999_batch(latency: np.ndarray) -> np.ndarray:
+    """Per-epoch p99.9 over a (P, B) latency matrix — the extreme-tail
+    column of the replication-mode comparison (coordination overheads and
+    tail bounces live out there)."""
+    lat = np.asarray(latency, np.float64)
+    if lat.ndim != 2:
+        raise ValueError(f"expected (P, B) latency, got shape {lat.shape}")
+    if lat.shape[1] == 0:
+        return np.zeros(lat.shape[0])
+    return np.percentile(lat, 99.9, axis=1)
+
+
+def masked_p99_batch(latency: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Per-epoch p99 over the masked entries of a (P, B) latency matrix
+    (e.g. reads only, or clean reads only).  Rows whose mask is empty
+    report 0.0.  P is small (a control period), so the row loop is cheap
+    — ragged masks rule out one vectorized percentile call."""
+    lat = np.asarray(latency, np.float64)
+    m = np.asarray(mask, bool)
+    if lat.shape != m.shape or lat.ndim != 2:
+        raise ValueError(f"latency {lat.shape} vs mask {m.shape}")
+    out = np.zeros(lat.shape[0])
+    for i in range(lat.shape[0]):
+        row = lat[i][m[i]]
+        if row.size:
+            out[i] = np.percentile(row, 99)
+    return out
 
 
 def imbalance_stats_batch(node_ops: np.ndarray, live: np.ndarray | None = None
@@ -135,11 +171,16 @@ def summarize(rows: list[EpochMetrics]) -> dict:
     return {
         "scenario": rows[0].scenario,
         "policy": rows[0].policy,
+        "replication": rows[0].replication,
         "epochs": len(rows),
         "mean_throughput": float(f("throughput").mean()),
         "mean_p50": float(f("p50").mean()),
         "mean_p99": float(f("p99").mean()),
         "max_p99": float(f("p99").max()),
+        "mean_p999": float(f("p999").mean()),
+        "mean_read_p99": float(f("read_p99").mean()),
+        "mean_clean_read_p99": float(f("clean_read_p99").mean()),
+        "total_dirty_reads": int(f("dirty_reads").sum()),
         "mean_imbalance": float(f("imbalance").mean()),
         "max_imbalance": float(f("imbalance").max()),
         "mean_cov": float(f("cov").mean()),

@@ -61,6 +61,13 @@ class PolicyConfig:
     merge_factor: float = 0.75
     # ... for this many consecutive reports
     merge_patience: int = 2
+    # lineage compaction: re-parent dangling/deep split lineage each
+    # report so `generation` stays bounded (Controller.compact_lineage).
+    # None (default) leaves the lineage untouched — rescued orphans merge
+    # where they previously could not, which perturbs the hysteresis and
+    # would break the gate matrix's bit-comparability with the PR-3/4
+    # rows; long-running deployments should set a bound.
+    max_lineage_depth: int | None = None
 
 
 class Policy:
@@ -73,9 +80,12 @@ class Policy:
     # round-trips when ``ClusterConfig.report_every`` is left unset — a
     # policy that tolerates staler reports can raise it and trade control
     # lag for data-plane throughput (NetCache-style: many data intervals
-    # per control pull).  Policy decisions are a pure function of the
-    # period-boundary report either way.
-    pull_every = 1
+    # per control pull).  The string ``"auto"`` delegates the choice to
+    # the driver's drift-adaptive cadence (``ClusterConfig.auto_band``):
+    # each report's node-load drift against the previous one shortens or
+    # lengthens the next period inside the band.  Policy decisions are a
+    # pure function of the period-boundary report either way.
+    pull_every: int | str = 1
 
     def __init__(self, config: PolicyConfig | None = None):
         self.config = config or PolicyConfig()
@@ -196,6 +206,13 @@ class _SplitMergeMixin:
         for s in list(self._cool):
             if s not in live_children:
                 self._cool.pop(s)
+
+        # lineage upkeep (opt-in): merges can orphan grandchildren (their
+        # parent slot died or was reused) and adversarial split runs
+        # deepen the lineage; re-parenting onto adjacent live slots keeps
+        # every child mergeable and bounds `generation` depth
+        if cfg.max_lineage_depth is not None:
+            controller.compact_lineage(cfg.max_lineage_depth)
         return ops
 
 

@@ -30,6 +30,11 @@ Scenario zoo:
   rotating through the key space — the two PR-2 stressors composed, so
   the splice-the-whole-rack path is exercised by the scenario library,
   not just unit tests.
+* ``ycsb_a``          — the classic update-heavy 50/50 mix (YCSB
+  workload A) over stationary Zipf heat: the write-path stressor the
+  replication-mode comparison (``repro.replication``) runs — chain-mode
+  write broadcasts and CRAQ dirty windows both scale with the update
+  share, which the read-heavy default mixes barely exercise.
 """
 
 from __future__ import annotations
@@ -272,6 +277,24 @@ class KeyspaceGrowth(Scenario):
         return 1.0 - self.write_ratio
 
 
+class YcsbA(Scenario):
+    """YCSB workload A: ``update_ratio`` of ops are writes (default the
+    canonical 50/50), Zipf-popular keys, stationary heat.  Write-heavy
+    enough that replication write paths — not read spreading — set the
+    tail: the headline mix for comparing ``eventual``/``chain``/``craq``.
+    """
+
+    name = "ycsb_a"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.99,
+                 update_ratio: float = 0.5):
+        super().__init__(cfg, theta=theta)
+        self.update_ratio = min(max(update_ratio, 0.0), 1.0)
+
+    def read_ratio(self, epoch: int) -> float:
+        return 1.0 - self.update_ratio
+
+
 class RackFailureHotspot(ShiftingHotspot):
     """Correlated failure under load: the Zipf hot block keeps rotating
     (as in ``shifting_hotspot``) and at ``fail_epoch`` a whole rack of
@@ -311,6 +334,7 @@ SCENARIOS = {
     "multi_hotspot": MultiHotspot,
     "keyspace_growth": KeyspaceGrowth,
     "rack_failure_hotspot": RackFailureHotspot,
+    "ycsb_a": YcsbA,
 }
 
 

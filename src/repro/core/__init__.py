@@ -23,6 +23,7 @@ from repro.core.routing import (
     RoutingDecision,
     route,
     route_load_aware,
+    route_load_aware_dirty,
     expand_scans,
     make_queries,
 )
@@ -54,7 +55,7 @@ __all__ = [
     "keys", "OP_GET", "OP_PUT", "OP_DEL", "OP_SCAN", "hash_key",
     "Directory", "make_directory", "lookup_range", "node_load", "range_order",
     "QueryBatch", "RoutingDecision", "route", "route_load_aware",
-    "expand_scans", "make_queries",
+    "route_load_aware_dirty", "expand_scans", "make_queries",
     "StoreState", "Responses", "make_store", "apply_routed", "store_fill",
     "LatencyModel", "ServiceModel", "HopPlan", "plan_hops",
     "simulate", "simulate_closed_loop",

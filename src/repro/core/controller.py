@@ -55,6 +55,12 @@ class Controller:
         # merge bookkeeping: (dead_child, absorber) pairs whose *live*
         # device counters must be credited over at the next refresh
         self._credits: list[tuple[int, int]] = []
+        # replication-state journal: every control action that changes a
+        # record's chain membership or lineage appends an event here; the
+        # epoch driver drains it at sync points and replays it onto the
+        # device-resident version/dirty register file
+        # (repro.replication.state.apply_events — see the grammar there)
+        self.repl_log: list[tuple] = []
 
     # -- directory snapshot back to device arrays -------------------------
     def directory(self) -> Directory:
@@ -213,6 +219,7 @@ class Controller:
             lo, hi = self._range_span(ridx)
             ops.append(MigrationOp(lo=lo, hi=hi, src=hot_node, dst=cold_node, kind="move"))
             d["chains"][ridx, pos] = cold_node
+            self.repl_log.append(("reset", ridx))
             moved = heat[ridx]
             load[hot_node] -= moved
             load[cold_node] += moved
@@ -249,6 +256,7 @@ class Controller:
         newcomer = min(candidates, key=lambda n: node_load[n])
         chain[clen] = newcomer
         d["chain_len"][ridx] = clen + 1
+        self.repl_log.append(("reset", ridx))
         lo, hi = self._range_span(ridx)
         self.log.append(f"widen: range {ridx} replica {newcomer} (r={clen + 1})")
         return MigrationOp(lo=lo, hi=hi, src=int(chain[0]), dst=newcomer, kind="copy")
@@ -271,6 +279,7 @@ class Controller:
         victim = int(d["chains"][ridx, clen - 1])
         d["chains"][ridx, clen - 1] = NO_NODE
         d["chain_len"][ridx] = clen - 1
+        self.repl_log.append(("reset", ridx))
         lo, hi = self._range_span(ridx)
         self.log.append(f"narrow: range {ridx} dropped replica {victim} (r={clen - 1})")
         return MigrationOp(lo=lo, hi=hi, src=victim, dst=victim, kind="reclaim")
@@ -311,6 +320,9 @@ class Controller:
         d["read_count"][child] = 0
         d["write_count"][child] = 0
         d["live"][child] = True
+        # the child's keys were the parent's keys: same outstanding writes,
+        # so it inherits the parent's version/dirty row verbatim
+        self.repl_log.append(("inherit", ridx, child))
         self.log.append(
             f"split: range {ridx} at {boundary} -> child slot {child} "
             f"[{boundary + 1}, {hi}]"
@@ -358,7 +370,9 @@ class Controller:
         d["slot_hi"][p] = np.uint32(max(phi, chi))
         d["read_count"][p] += d["read_count"][child]
         d["write_count"][p] += d["write_count"][child]
+        self.repl_log.append(("merge", child, p))
         self._kill_slot(child)
+        self.repl_log.append(("kill", child))
         self._credits.append((child, p))
         self.log.append(f"merge: child slot {child} -> range {p} [{min(plo, clo)}, {max(phi, chi)}]")
         return ops
@@ -395,8 +409,113 @@ class Controller:
         d["generation"] = np.concatenate([d["generation"], np.zeros((extra,), np.int32)])
         d["read_count"] = np.concatenate([d["read_count"], np.zeros((extra,), np.uint32)])
         d["write_count"] = np.concatenate([d["write_count"], np.zeros((extra,), np.uint32)])
+        self.repl_log.append(("grow", self.num_slots))
         self.log.append(f"grow_pool: {self.num_slots - extra} -> {self.num_slots} slots")
         return self.num_slots
+
+    def drain_repl_log(self) -> list[tuple]:
+        """Hand the accumulated replication-state events to the driver
+        (and clear them) — the replication analogue of ``_credits``."""
+        events, self.repl_log = self.repl_log, []
+        return events
+
+    # ------------------------------------------------------------------
+    # lineage compaction: bound split-lineage depth over long runs
+    # ------------------------------------------------------------------
+    def compact_lineage(self, max_depth: int = 3) -> int:
+        """Re-parent split lineage so ``generation`` depth stays bounded.
+
+        Adversarial split sequences leave two kinds of rot in the lineage
+        metadata (spans and chains are untouched — this is bookkeeping
+        only, the data plane never sees it):
+
+        * **dangling parents** — a child whose parent slot died (merged
+          away) or was reused for an unrelated span can never pass
+          ``merge_range``'s liveness/adjacency check, so the slot leaks
+          from the merge hysteresis forever;
+        * **deep chains** — child-of-child-of-child lineage whose
+          ``generation`` grows without bound.
+
+        Repair: every live split child is re-parented onto the live slot
+        whose span is *adjacent* to it (left neighbour preferred, then
+        right — the natural merge partner; live slots partition the key
+        space, so one exists unless the child spans everything), then
+        generations are recomputed as depth in the repaired forest and
+        any slot deeper than ``max_depth`` is promoted to a genesis range
+        (``parent = NO_SLOT``, generation 0) — it simply stops
+        auto-merging.  Lookups are bit-identical before and after
+        (asserted by the hypothesis round-trip test) and no replication
+        event is journaled: chain membership did not change.
+
+        Returns the number of slots whose lineage was rewritten.
+        """
+        d = self._dir
+        live = np.where(d["live"])[0]
+        by_lo = {int(d["slot_lo"][s]): int(s) for s in live}
+        by_hi = {int(d["slot_hi"][s]): int(s) for s in live}
+        changed = 0
+
+        for s in live:
+            s = int(s)
+            p = int(d["parent"][s])
+            if p == NO_SLOT:
+                continue
+            lo, hi = self._range_span(s)
+            # a valid parent is live and span-adjacent (mergeable)
+            p_ok = (
+                0 <= p < self.num_slots and bool(d["live"][p])
+                and (int(d["slot_hi"][p]) + 1 == lo or int(d["slot_lo"][p]) == hi + 1)
+            )
+            if p_ok:
+                continue
+            left = by_hi.get(lo - 1)
+            right = by_lo.get(hi + 1)
+            new_p = left if left is not None else right
+            if new_p is None or new_p == s:
+                d["parent"][s] = NO_SLOT
+                d["generation"][s] = 0
+            else:
+                d["parent"][s] = new_p
+            changed += 1
+
+        # recompute generation = depth in the repaired forest, promoting
+        # anything deeper than max_depth (or on a cycle) to genesis
+        depth: dict[int, int] = {}
+
+        def resolve(s: int) -> int:
+            path = []
+            cur = s
+            while cur not in depth:
+                p = int(d["parent"][cur])
+                if p == NO_SLOT or not (0 <= p < self.num_slots) or not d["live"][p]:
+                    depth[cur] = 0 if p == NO_SLOT else 1
+                    break
+                if p in path or p == cur:        # cycle: promote the root
+                    depth[cur] = 0
+                    d["parent"][cur] = NO_SLOT
+                    break
+                path.append(cur)
+                cur = p
+            for cur in reversed(path):
+                depth[cur] = depth[int(d["parent"][cur])] + 1
+            return depth[s]
+
+        for s in live:
+            s = int(s)
+            if not d["live"][s]:
+                continue
+            g = resolve(s)
+            if int(d["parent"][s]) != NO_SLOT and g > max_depth:
+                d["parent"][s] = NO_SLOT
+                g = 0
+                depth[s] = 0
+                changed += 1
+            if int(d["generation"][s]) != g:
+                d["generation"][s] = g
+                changed += 1
+        if changed:
+            self.log.append(f"compact_lineage: rewrote {changed} slots")
+        return changed
 
     # ------------------------------------------------------------------
     # failure handling (paper §5.2): splice, then restore replication
@@ -425,6 +544,7 @@ class Controller:
             chain[p : clen - 1] = chain[p + 1 : clen]
             chain[clen - 1] = NO_NODE
             d["chain_len"][ridx] = clen - 1
+            self.repl_log.append(("reset", ridx))
             self.log.append(f"failure: spliced node {node} from range {ridx} (pos {p})")
 
             # restore replication: append the least-loaded live node not in
@@ -488,6 +608,7 @@ class Controller:
         ops: list[MigrationOp] = []
         if target is not None:
             d["chains"][child, 0] = target
+            self.repl_log.append(("reset", child))
             ops.append(MigrationOp(lo=mid + 1, hi=hi, src=old_head, dst=target, kind="move"))
             self.log.append(f"split: range {ridx} at {mid}; upper half head {old_head} -> {target}")
         return ops

@@ -147,16 +147,26 @@ def plan_hops(
     num_nodes: int,
     write_chain_cap: int | None = None,
     service_model: ServiceModel | None = None,
+    read_via: jnp.ndarray | None = None,
+    read_bounce: jnp.ndarray | None = None,
 ) -> HopPlan:
     """Build the per-query hop plan for a coordination model.
 
     ``write_chain_cap`` bounds the number of chain members on a write's
     *client-visible* path: members beyond the cap are lazily-refreshed
-    read replicas (the ``repro.cluster`` selective-replication design —
+    read replicas (the ``repro.replication`` *eventual* mode —
     chain semantics hold on the base prefix, widened replicas sync off
     the reply path via the controller's periodic refresh copies, whose
     traffic the cluster metrics charge as migration bytes).  ``None``
-    (default) keeps the paper's strict full-chain write path.
+    (default) keeps the paper's strict full-chain write path — which is
+    also the CRAQ/chain-replication write broadcast.
+
+    ``read_via`` / ``read_bounce`` (both (B,), together or not at all)
+    encode CRAQ dirty-read tail bounces: a bounced read first visits its
+    picked replica ``read_via`` — which only *version-checks* and
+    forwards (deterministic ``model.lookup`` cost) — then the serving
+    tail ``decision.target`` pays the full storage service.  Unbounced
+    reads and all writes are planned exactly as without the arguments.
 
     ``service_model`` draws seeded mean-one multipliers onto the per-hop
     *storage service* cost (lookup/coordination overheads stay
@@ -166,6 +176,8 @@ def plan_hops(
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
+    if (read_via is None) != (read_bounce is None):
+        raise ValueError("read_via and read_bounce must be passed together")
     B, r_max = decision.chain.shape
     is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
     visit_len = decision.chain_len
@@ -173,11 +185,27 @@ def plan_hops(
         visit_len = jnp.minimum(visit_len, write_chain_cap)
     live = jnp.arange(r_max)[None, :] < visit_len[:, None]
 
-    # chain visit sequence: writes walk head..tail, reads visit the tail only
+    # chain visit sequence: writes walk head..tail; reads visit the tail
+    # only — unless a CRAQ dirty check bounces them through their picked
+    # replica first
     write_nodes = jnp.where(live, decision.chain, NO_HOP)           # (B, r)
-    read_nodes = jnp.concatenate(
-        [decision.target[:, None], jnp.full((B, r_max - 1), NO_HOP, jnp.int32)], axis=1
-    )
+    if read_bounce is None:
+        rb = None
+        read_nodes = jnp.concatenate(
+            [decision.target[:, None], jnp.full((B, r_max - 1), NO_HOP, jnp.int32)],
+            axis=1,
+        )
+    else:
+        if r_max < 2:
+            raise ValueError("dirty-read tail bounces need r_max >= 2")
+        rb = read_bounce & ~is_write
+        first = jnp.where(rb, read_via, decision.target)
+        second = jnp.where(rb, decision.target, NO_HOP)
+        read_nodes = jnp.concatenate(
+            [first[:, None], second[:, None],
+             jnp.full((B, r_max - 2), NO_HOP, jnp.int32)],
+            axis=1,
+        )
     chain_nodes = jnp.where(is_write[:, None], write_nodes, read_nodes)
 
     # per-visit service: base; +lookup when the node must resolve the next
@@ -188,6 +216,11 @@ def plan_hops(
         # deterministic model's coordinator draws are unchanged
         rng, r_service = jax.random.split(rng)
         base = base * service_model.draw(r_service, (B, r_max))
+    if rb is not None:
+        # the bounced read's first visit is a version check + forward at
+        # the dirty replica, not a storage op: deterministic lookup cost
+        col0 = jnp.where(rb, jnp.float32(model.lookup), base[:, 0])
+        base = jnp.concatenate([col0[:, None], base[:, 1:]], axis=1)
     needs_lookup = (
         is_write[:, None]
         & (chain_nodes != NO_HOP)

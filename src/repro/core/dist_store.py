@@ -111,9 +111,20 @@ class DistConfig:
     # Changes the apply signature: (store, directory, load_reg, q, rng)
     #   -> (store, responses, directory', load_reg', metrics)
     read_spread: bool = False
-    # include the routing decision (target/chain/chain_len, sharded) in the
-    # metrics dict so a caller can build DES hop plans without re-routing
+    # include the routing decision (ridx/target/chain/chain_len, sharded)
+    # in the metrics dict so a caller can build DES hop plans and advance
+    # the replication version registers without re-routing
     return_decision: bool = False
+    # consistency mode over the replica chains (repro.replication).  The
+    # write path already broadcasts along the whole chain (the r_max
+    # sequential all_to_all rounds of Fig 9a — literal chain replication);
+    # "craq" additionally threads the (S, r_max) dirty table into the
+    # in-mesh routing: the apply signature gains a replicated ``dirty``
+    # input after load_reg, reads whose p2c pick is dirty are served by
+    # the chain tail, and metrics carry the sharded picked/bounced
+    # vectors.  "chain" needs no dist-side change (tail reads == the
+    # read_spread=False path); "eventual" is the unchanged default.
+    replication_mode: str = "eventual"
 
 
 def _local_slab(store: StoreState):
@@ -144,16 +155,29 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
     n_shards = mesh.shape[cfg.axis]
     axis = cfg.axis
     spread = cfg.read_spread
+    craq = cfg.replication_mode == "craq"
+    if cfg.replication_mode not in ("eventual", "chain", "craq"):
+        raise ValueError(
+            f"unknown replication_mode {cfg.replication_mode!r}"
+        )
+    if craq and not spread:
+        raise ValueError("replication_mode='craq' needs read_spread=True "
+                         "(apportioned reads are the protocol)")
 
     def per_device(store: StoreState, directory: Directory, q: R.QueryBatch,
-                   load_reg=None, rng=None):
+                   load_reg=None, rng=None, dirty=None):
         me = jax.lax.axis_index(axis)
         slab_keys, slab_vals = _local_slab(store)
+        picked = bounced = None
 
         if cfg.strategy == "allgather":
             gq = jax.tree.map(lambda x: _ag(x, axis), q)
-            if spread:
+            if craq:
                 # identical rng on every device -> identical global decision
+                decision, directory, load_reg, picked, bounced = (
+                    R.route_load_aware_dirty(directory, gq, load_reg, dirty, rng)
+                )
+            elif spread:
                 decision, directory, load_reg = R.route_load_aware(
                     directory, gq, load_reg, rng
                 )
@@ -186,6 +210,13 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             }
             if cfg.return_decision:
                 metrics.update(_slice_decision(decision, me, q.opcode.shape[0]))
+                if craq:
+                    Bl = q.opcode.shape[0]
+                    sl = lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, me * Bl, Bl, axis=0
+                    )
+                    metrics["picked"] = sl(picked)
+                    metrics["bounced"] = sl(bounced)
             # counters were bumped identically everywhere; keep one copy
             if spread:
                 return new_store, resp, directory, load_reg, metrics
@@ -193,7 +224,15 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
 
         # ---- bucket_a2a ----
         base_dir = directory
-        if spread:
+        if craq:
+            base_load = load_reg
+            decision, directory, load_reg, picked, bounced = (
+                R.route_load_aware_dirty(
+                    directory, q, load_reg, dirty, jax.random.fold_in(rng, me)
+                )
+            )
+            load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
+        elif spread:
             base_load = load_reg
             # distinct draws per device (each routes its own batch slice)
             decision, directory, load_reg = R.route_load_aware(
@@ -287,10 +326,14 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
         }
         if cfg.return_decision:
             metrics.update({
+                "ridx": decision.ridx,
                 "target": decision.target,
                 "chain": decision.chain,
                 "chain_len": decision.chain_len,
             })
+            if craq:
+                metrics["picked"] = picked
+                metrics["bounced"] = bounced
         if spread:
             return new_store, resp, directory, load_reg, metrics
         return new_store, resp, directory, metrics
@@ -298,6 +341,7 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
     def _slice_decision(decision, me, Bl):
         sl = lambda x: jax.lax.dynamic_slice_in_dim(x, me * Bl, Bl, axis=0)
         return {
+            "ridx": sl(decision.ridx),
             "target": sl(decision.target),
             "chain": sl(decision.chain),
             "chain_len": sl(decision.chain_len),
@@ -340,9 +384,18 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
     )
     metric_spec = {"bucket_overflow": P(), "a2a_rounds": P()}
     if cfg.return_decision:
-        metric_spec.update({"target": P(axis), "chain": P(axis), "chain_len": P(axis)})
+        metric_spec.update({"ridx": P(axis), "target": P(axis),
+                            "chain": P(axis), "chain_len": P(axis)})
+        if craq:
+            metric_spec.update({"picked": P(axis), "bounced": P(axis)})
 
-    if spread:
+    if craq:
+        def entry(store, directory, load_reg, dirty, q, rng):
+            return per_device(store, directory, q, load_reg, rng, dirty)
+
+        in_specs = (store_spec, dir_spec, P(), P(), q_spec, P())
+        out_specs = (store_spec, resp_spec, dir_spec, P(), metric_spec)
+    elif spread:
         def entry(store, directory, load_reg, q, rng):
             return per_device(store, directory, q, load_reg, rng)
 

@@ -137,24 +137,49 @@ def route_load_aware(
     registers bumped, shapes unchanged (jit-stable).
     """
     ridx, chain, clen, is_write = _match_and_fetch(directory, q)
-    B, r_max = chain.shape
     head = chain[:, 0]
 
-    # two independent uniform picks over the live chain positions
+    picked, _ppos = _p2c_pick(chain, clen, load_reg, rng)
+    target = jnp.where(is_write, head, picked)
+    clength = jnp.where(is_write, clen + 1, 2)
+
+    directory = D.bump_counters(directory, ridx, is_write)
+    load_reg = _bump_load(load_reg, chain, clen, is_write, target)
+
+    decision = RoutingDecision(
+        ridx=ridx, target=target, chain=chain, chain_len=clen, clength=clength
+    )
+    return decision, directory, load_reg
+
+
+def _p2c_pick(chain: jnp.ndarray, clen: jnp.ndarray, load_reg: jnp.ndarray,
+              rng: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The power-of-two-choices replica pick, shared by the plain and the
+    dirty-aware (CRAQ) spread paths so their sampling is *structurally*
+    identical — the bit-parity contract between them (and with the
+    ``range_match_spread*`` kernels) hangs on this one draw.
+
+    Returns ``(picked (B,) node, ppos (B,) chain position)``: two
+    independent uniforms over the live chain positions; the replica with
+    the smaller load register wins, first pick on ties.
+    """
+    B = chain.shape[0]
     u = jax.random.randint(rng, (B, 2), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
     c = jnp.maximum(clen, 1)
     p1, p2 = u[:, 0] % c, u[:, 1] % c
     n1 = jnp.take_along_axis(chain, p1[:, None], axis=1)[:, 0]
     n2 = jnp.take_along_axis(chain, p2[:, None], axis=1)[:, 0]
     s1, s2 = jnp.maximum(n1, 0), jnp.maximum(n2, 0)  # NO_NODE guard
-    read_target = jnp.where(load_reg[s1] <= load_reg[s2], n1, n2)
-    target = jnp.where(is_write, head, read_target)
-    clength = jnp.where(is_write, clen + 1, 2)
+    first_wins = load_reg[s1] <= load_reg[s2]
+    return jnp.where(first_wins, n1, n2), jnp.where(first_wins, p1, p2)
 
-    directory = D.bump_counters(directory, ridx, is_write)
 
-    # load-register bump: reads hit their chosen replica, writes hit every
-    # live chain member (same units as directory.node_load)
+def _bump_load(load_reg: jnp.ndarray, chain: jnp.ndarray, clen: jnp.ndarray,
+               is_write: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Load-register bump shared by the spread paths: reads hit their
+    serving node, writes hit every live chain member (same units as
+    ``directory.node_load``)."""
+    B, r_max = chain.shape
     live = (jnp.arange(r_max)[None, :] < clen[:, None]) & (chain != D.NO_NODE)
     w_hit = live & is_write[:, None]
     safe_chain = jnp.where(w_hit, chain, 0)
@@ -163,14 +188,60 @@ def route_load_aware(
         w_hit.reshape(-1).astype(jnp.uint32)
     )
     # mode="drop": a NO_NODE target (fully-spliced chain) charges nobody
-    load_reg = load_reg.at[target].add(
+    return load_reg.at[target].add(
         jnp.where(is_write, jnp.uint32(0), ones), mode="drop"
     )
+
+
+def route_load_aware_dirty(
+    directory: D.Directory,
+    q: QueryBatch,
+    load_reg: jnp.ndarray,
+    dirty: jnp.ndarray,
+    rng: jax.Array,
+) -> tuple[RoutingDecision, D.Directory, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """CRAQ apportioned reads: p2c replica pick + dirty-bit tail bounce.
+
+    Identical p2c draw and pick to :func:`route_load_aware` (same rng →
+    same candidate replicas), plus the CRAQ serving rule: the picked
+    replica answers a GET/SCAN locally only while its per-slot dirty bit
+    (``dirty`` (S, r_max) bool, see ``repro.replication.state``) is
+    clear; a dirty non-tail pick forwards the version check to the chain
+    tail — the read *bounces* and the tail serves it.  The tail itself is
+    the commit point and never bounces.  Writes enter at the head and
+    broadcast down the whole chain, exactly as in :func:`route`.
+
+    Returns ``(decision, directory', load_reg', picked, bounced)``:
+    ``decision.target`` is the **serving** node (tail when bounced),
+    ``picked`` the p2c winner the packet visits first, ``bounced`` the
+    (B,) bool tail-bounce mask (always False for writes).  The load
+    registers charge the read to its serving node — the replica that only
+    version-checks does negligible store work.
+    """
+    ridx, chain, clen, is_write = _match_and_fetch(directory, q)
+    head = chain[:, 0]
+
+    # the identical p2c draw route_load_aware makes (shared helper), so
+    # eventual and craq modes sample the same candidates given one rng
+    picked, ppos = _p2c_pick(chain, clen, load_reg, rng)
+
+    tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[:, None], axis=1)[:, 0]
+    d_pick = dirty[ridx, ppos]
+    bounced = (
+        (~is_write) & d_pick & (ppos != clen - 1) & (picked != D.NO_NODE)
+    )
+    read_target = jnp.where(bounced, tail, picked)
+    target = jnp.where(is_write, head, read_target)
+    # writes walk the chain then reply; clean reads pay 2 hops, bounced 3
+    clength = jnp.where(is_write, clen + 1, jnp.where(bounced, 3, 2))
+
+    directory = D.bump_counters(directory, ridx, is_write)
+    load_reg = _bump_load(load_reg, chain, clen, is_write, target)
 
     decision = RoutingDecision(
         ridx=ridx, target=target, chain=chain, chain_len=clen, clength=clength
     )
-    return decision, directory, load_reg
+    return decision, directory, load_reg, picked, bounced
 
 
 def expand_scans(

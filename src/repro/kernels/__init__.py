@@ -10,8 +10,15 @@ public wrapper), ref.py (pure-jnp oracle).  Kernels are written for TPU
 CPU; tests sweep shapes/dtypes asserting allclose against the oracles.
 """
 
-from repro.kernels.range_match.ops import range_match
+from repro.kernels.range_match.ops import (
+    range_match,
+    range_match_spread,
+    range_match_spread_dirty,
+)
 from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.ssd_chunk.ops import ssd_scan, ssd_decode_step
 
-__all__ = ["range_match", "decode_attn", "ssd_scan", "ssd_decode_step"]
+__all__ = [
+    "range_match", "range_match_spread", "range_match_spread_dirty",
+    "decode_attn", "ssd_scan", "ssd_decode_step",
+]

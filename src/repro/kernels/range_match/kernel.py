@@ -52,6 +52,53 @@ def _slot_match_tile(mvals, lo, hi, num_slots: int):
     return jnp.minimum(ridx, num_slots - 1)
 
 
+def _gather_rows_tile(ridx, rows):
+    """One-hot contraction: (Bb, 128) slot ids vs each (Spad,) row of a
+    (R, Spad) register table -> list of R (Bb, 128) per-packet values.
+    Shared by every kernel's chain/clen/dirty fetch (TPU gathers from
+    dynamic vectors are slow; the one-hot contraction is MXU-friendly)."""
+    spad = rows.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, spad), 2)
+    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)
+    return [jnp.sum(onehot * rows[p][None, None, :], axis=-1)
+            for p in range(rows.shape[0])]
+
+
+def _select_pos_tile(cols, pos):
+    """cols[pos] over static chain positions (r_max small): the tile-level
+    take_along_axis all three kernels share."""
+    out = cols[0]
+    for p in range(1, len(cols)):
+        out = jnp.where(pos == p, cols[p], out)
+    return out
+
+
+def _load_gather_tile(n, loads):
+    """(Bb, 128) node ids -> their (1, Npad) load-register values (one-hot
+    contraction over the node axis; negative ids clamp to node 0)."""
+    npad = loads.shape[-1]
+    niota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, npad), 2)
+    return jnp.sum((jnp.maximum(n, 0)[:, :, None] == niota).astype(jnp.int32)
+                   * loads[0][None, None, :], axis=-1)
+
+
+def _p2c_tile(chain_cols, clen_b, u1, u2, loads):
+    """The power-of-two-choices pick, shared by the spread and the dirty
+    (CRAQ) kernels — the bit-parity contract with ``routing._p2c_pick``
+    and the jnp refs hangs on this one formula.  Returns
+    ``(picked, ppos, p1, p2, first_wins)``."""
+    c = jnp.maximum(clen_b, 1)
+    p1 = u1 % c
+    p2 = u2 % c
+    n1 = _select_pos_tile(chain_cols, p1)
+    n2 = _select_pos_tile(chain_cols, p2)
+    l1 = _load_gather_tile(n1, loads)
+    l2 = _load_gather_tile(n2, loads)
+    first_wins = l1 <= l2
+    return (jnp.where(first_wins, n1, n2), jnp.where(first_wins, p1, p2),
+            p1, p2, first_wins)
+
+
 def _kernel(mvals_ref, opcodes_ref, lo_ref, hi_ref, chains_ref, clen_ref,
             ridx_ref, target_ref, chain_ref, *, num_slots: int, r_max: int):
     mvals = mvals_ref[...]            # (Bb, 128) uint32
@@ -65,23 +112,14 @@ def _kernel(mvals_ref, opcodes_ref, lo_ref, hi_ref, chains_ref, clen_ref,
     ridx = _slot_match_tile(mvals, lo, hi, num_slots)   # (Bb, 128)
 
     # --- one-hot chain fetch (action-data registers) ---
-    spad = lo.shape[-1]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, spad), 2)
-    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)       # (Bb,128,Spad)
-    # chain position p of each packet: sum(onehot * chains[p])
-    chain_cols = []
-    for p in range(r_max):
-        chain_cols.append(jnp.sum(onehot * chains[p][None, None, :], axis=-1))
+    chain_cols = _gather_rows_tile(ridx, chains)
     chain = jnp.stack(chain_cols, axis=0)                       # (r, Bb, 128)
-    clen_b = jnp.sum(onehot * clen[0][None, None, :], axis=-1)  # (Bb, 128)
+    (clen_b,) = _gather_rows_tile(ridx, clen)                   # (Bb, 128)
 
     # --- opcode action: PUT/DEL -> head, GET/SCAN -> tail ---
     is_write = (opcodes == 1) | (opcodes == 2)
     head = chain[0]
-    # tail = chain[clen-1]: select over static positions (r_max small)
-    tail = chain[0]
-    for p in range(1, r_max):
-        tail = jnp.where(clen_b - 1 == p, chain[p], tail)
+    tail = _select_pos_tile(chain_cols, clen_b - 1)
     target = jnp.where(is_write, head, tail)
 
     ridx_ref[...] = ridx
@@ -111,41 +149,151 @@ def _kernel_spread(mvals_ref, opcodes_ref, u1_ref, u2_ref, lo_ref, hi_ref,
     loads = loads_ref[...]            # (1, Npad) int32 load registers
 
     ridx = _slot_match_tile(mvals, lo, hi, num_slots)
-
-    spad = lo.shape[-1]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, spad), 2)
-    onehot = (ridx[:, :, None] == iota).astype(jnp.int32)
-    chain_cols = []
-    for p in range(r_max):
-        chain_cols.append(jnp.sum(onehot * chains[p][None, None, :], axis=-1))
+    chain_cols = _gather_rows_tile(ridx, chains)
     chain = jnp.stack(chain_cols, axis=0)
-    clen_b = jnp.sum(onehot * clen[0][None, None, :], axis=-1)
+    (clen_b,) = _gather_rows_tile(ridx, clen)
 
-    # p2c candidate positions among the live chain prefix
-    c = jnp.maximum(clen_b, 1)
-    p1 = u1 % c
-    p2 = u2 % c
-    # chain[p] select over static positions (r_max small)
-    n1 = chain[0]
-    n2 = chain[0]
-    for p in range(1, r_max):
-        n1 = jnp.where(p1 == p, chain[p], n1)
-        n2 = jnp.where(p2 == p, chain[p], n2)
-    # load-register gather: one-hot contraction over the node axis
-    npad = loads.shape[-1]
-    niota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, npad), 2)
-    l1 = jnp.sum((jnp.maximum(n1, 0)[:, :, None] == niota).astype(jnp.int32)
-                 * loads[0][None, None, :], axis=-1)
-    l2 = jnp.sum((jnp.maximum(n2, 0)[:, :, None] == niota).astype(jnp.int32)
-                 * loads[0][None, None, :], axis=-1)
-    read_target = jnp.where(l1 <= l2, n1, n2)
+    picked, _ppos, _p1, _p2, _fw = _p2c_tile(chain_cols, clen_b, u1, u2, loads)
 
     is_write = (opcodes == 1) | (opcodes == 2)
+    target = jnp.where(is_write, chain[0], picked)
+
+    ridx_ref[...] = ridx
+    target_ref[...] = target
+    chain_ref[...] = chain
+
+
+def _kernel_spread_dirty(mvals_ref, opcodes_ref, u1_ref, u2_ref, lo_ref, hi_ref,
+                         chains_ref, clen_ref, loads_ref, dirty_ref,
+                         ridx_ref, target_ref, chain_ref, picked_ref, bounced_ref,
+                         *, num_slots: int, r_max: int):
+    """Match-action stage with CRAQ apportioned reads.
+
+    The p2c pick of ``_kernel_spread`` plus the dirty-bit serving rule:
+    ``dirty_ref`` is the (r_max, Spad) per-(position, slot) dirty table
+    (``repro.replication.state.dirty_bits``, transposed like the chain
+    registers); a read whose picked position is dirty and not the tail
+    bounces to the tail.  Emits the picked replica and the bounce mask so
+    the DES hop planner can charge the extra hop.
+    """
+    mvals = mvals_ref[...]
+    opcodes = opcodes_ref[...]
+    u1 = u1_ref[...]
+    u2 = u2_ref[...]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    chains = chains_ref[...]
+    clen = clen_ref[...]
+    loads = loads_ref[...]
+    dirty = dirty_ref[...]            # (r_max, Spad) int32 dirty bits
+
+    ridx = _slot_match_tile(mvals, lo, hi, num_slots)
+    chain_cols = _gather_rows_tile(ridx, chains)
+    dirty_cols = _gather_rows_tile(ridx, dirty)
+    chain = jnp.stack(chain_cols, axis=0)
+    (clen_b,) = _gather_rows_tile(ridx, clen)
+
+    picked, ppos, p1, p2, first_wins = _p2c_tile(
+        chain_cols, clen_b, u1, u2, loads
+    )
+    d1 = _select_pos_tile(dirty_cols, p1)
+    d2 = _select_pos_tile(dirty_cols, p2)
+    d_pick = jnp.where(first_wins, d1, d2)
+    tail = _select_pos_tile(chain_cols, clen_b - 1)
+
+    is_write = (opcodes == 1) | (opcodes == 2)
+    bounced = (
+        (~is_write) & (d_pick != 0) & (ppos != clen_b - 1) & (picked >= 0)
+    )
+    read_target = jnp.where(bounced, tail, picked)
     target = jnp.where(is_write, chain[0], read_target)
 
     ridx_ref[...] = ridx
     target_ref[...] = target
     chain_ref[...] = chain
+    picked_ref[...] = picked
+    bounced_ref[...] = bounced.astype(jnp.int32)
+
+
+def range_match_spread_dirty_pallas(
+    mvals: jnp.ndarray,            # (B,) uint32 matching values
+    opcodes: jnp.ndarray,          # (B,) int32
+    u1: jnp.ndarray,               # (B,) int32 nonneg uniform draws
+    u2: jnp.ndarray,               # (B,) int32
+    slot_lo: jnp.ndarray,          # (Spad,) uint32 dead-masked span starts
+    slot_hi: jnp.ndarray,          # (Spad,) uint32 dead-masked span ends
+    chains: jnp.ndarray,           # (r_max, Spad) int32
+    chain_len: jnp.ndarray,        # (Spad,) int32
+    loads: jnp.ndarray,            # (Npad,) int32 per-node load registers
+    dirty: jnp.ndarray,            # (r_max, Spad) int32 dirty bits
+    *,
+    num_slots: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Launch the CRAQ apportioned-read match-action kernel.
+
+    Same contract as :func:`range_match_spread_pallas` plus the dirty
+    table; returns ``(ridx, target, chain, picked, bounced)`` with
+    ``target`` the serving node (tail for bounced dirty reads).
+    """
+    B = mvals.shape[0]
+    rows = B // LANES
+    r_max, spad = chains.shape
+    npad = loads.shape[0]
+
+    grid = (rows // block_rows,)
+    kernel = functools.partial(
+        _kernel_spread_dirty, num_slots=num_slots, r_max=r_max
+    )
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((r_max, rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+    )
+    whole = lambda i: (0, 0)
+    tile = lambda i: (i, 0)
+    ridx, target, chain, picked, bounced = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((r_max, spad), lambda i: (0, 0)),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((1, npad), whole),
+            pl.BlockSpec((r_max, spad), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((r_max, block_rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        mvals.reshape(rows, LANES),
+        opcodes.reshape(rows, LANES),
+        u1.reshape(rows, LANES),
+        u2.reshape(rows, LANES),
+        slot_lo.reshape(1, spad),
+        slot_hi.reshape(1, spad),
+        chains,
+        chain_len.reshape(1, spad),
+        loads.reshape(1, npad),
+        dirty,
+    )
+    return (ridx.reshape(B), target.reshape(B), chain.reshape(r_max, B),
+            picked.reshape(B), bounced.reshape(B))
 
 
 def range_match_spread_pallas(

@@ -35,10 +35,15 @@ from repro.core.directory import Directory
 from repro.kernels.range_match.kernel import (
     range_match_pallas,
     range_match_spread_pallas,
+    range_match_spread_dirty_pallas,
     LANES,
     DEFAULT_BLOCK_ROWS,
 )
-from repro.kernels.range_match.ref import range_match_ref, range_match_spread_ref
+from repro.kernels.range_match.ref import (
+    range_match_ref,
+    range_match_spread_ref,
+    range_match_spread_dirty_ref,
+)
 
 
 def default_interpret() -> bool:
@@ -181,6 +186,35 @@ def range_match(
     )
 
 
+def _prep_spread_inputs(keys, opcodes, load_reg, rng, *, hash_partitioned,
+                        block_rows):
+    """Shared front half of the spread / dirty-spread launches: the p2c
+    draw (identical to ``routing._p2c_pick``'s one (B, 2) randint), tile
+    padding of the packet vectors, and lane padding of the load
+    registers.  Returns ``(mvals, opcodes, u1, u2, loads_p, B)``."""
+    B = keys.shape[0]
+    mvals = K.matching_value(keys, hash_partitioned=hash_partitioned)
+    u = jax.random.randint(rng, (B, 2), 0, jnp.iinfo(jnp.int32).max,
+                           dtype=jnp.int32)
+    u1, u2 = u[:, 0], u[:, 1]
+
+    tile = LANES * block_rows
+    Bp = ((B + tile - 1) // tile) * tile
+    if Bp != B:
+        z = jnp.zeros((Bp - B,), jnp.int32)
+        mvals = jnp.concatenate([mvals, jnp.zeros((Bp - B,), mvals.dtype)])
+        opcodes = jnp.concatenate([opcodes, z])
+        u1 = jnp.concatenate([u1, z])
+        u2 = jnp.concatenate([u2, z])
+
+    n = load_reg.shape[0]
+    npad = max(LANES, ((n + LANES - 1) // LANES) * LANES)
+    loads_p = jnp.concatenate(
+        [load_reg.astype(jnp.int32), jnp.zeros((npad - n,), jnp.int32)]
+    )
+    return mvals, opcodes, u1, u2, loads_p, B
+
+
 @partial(
     jax.jit,
     static_argnames=(
@@ -203,28 +237,10 @@ def _range_match_spread_packed(
     interpret: bool,
     block_rows: int,
 ):
-    B = keys.shape[0]
-    mvals = K.matching_value(keys, hash_partitioned=hash_partitioned)
-    # identical p2c draw to routing.route_load_aware: one (B, 2) randint
-    u = jax.random.randint(rng, (B, 2), 0, jnp.iinfo(jnp.int32).max,
-                           dtype=jnp.int32)
-    u1, u2 = u[:, 0], u[:, 1]
-
-    tile = LANES * block_rows
-    Bp = ((B + tile - 1) // tile) * tile
-    if Bp != B:
-        z = jnp.zeros((Bp - B,), jnp.int32)
-        mvals = jnp.concatenate([mvals, jnp.zeros((Bp - B,), mvals.dtype)])
-        opcodes = jnp.concatenate([opcodes, z])
-        u1 = jnp.concatenate([u1, z])
-        u2 = jnp.concatenate([u2, z])
-
-    n = load_reg.shape[0]
-    npad = max(LANES, ((n + LANES - 1) // LANES) * LANES)
-    loads_p = jnp.concatenate(
-        [load_reg.astype(jnp.int32), jnp.zeros((npad - n,), jnp.int32)]
+    mvals, opcodes, u1, u2, loads_p, B = _prep_spread_inputs(
+        keys, opcodes, load_reg, rng,
+        hash_partitioned=hash_partitioned, block_rows=block_rows,
     )
-
     if use_pallas:
         ridx, target, chain = range_match_spread_pallas(
             mvals, opcodes.astype(jnp.int32), u1, u2,
@@ -263,6 +279,92 @@ def range_match_spread(
     lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
     return _range_match_spread_packed(
         lo_p, hi_p, chains_p, clen_p, keys, opcodes, load_reg, rng,
+        num_slots=directory.num_slots,
+        hash_partitioned=bool(directory.hash_partitioned),
+        use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
+    )
+
+
+def pack_dirty(directory: Directory, dirty: jnp.ndarray) -> jnp.ndarray:
+    """(S, r_max) bool dirty table -> (r_max, Spad) int32 kernel layout.
+
+    Transposed like the chain registers; padded tail slots are clean (a
+    padded slot can never win a lookup anyway)."""
+    S = directory.num_slots
+    spad = max(LANES, ((S + LANES - 1) // LANES) * LANES)
+    d = dirty.astype(jnp.int32).T                          # (r_max, S)
+    pad = jnp.zeros((directory.r_max, spad - S), jnp.int32)
+    return jnp.concatenate([d, pad], axis=1)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "num_slots", "hash_partitioned", "use_pallas", "interpret", "block_rows",
+    ),
+)
+def _range_match_spread_dirty_packed(
+    lo_p,
+    hi_p,
+    chains_p,
+    clen_p,
+    dirty_p,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    rng,
+    *,
+    num_slots: int,
+    hash_partitioned: bool,
+    use_pallas: bool,
+    interpret: bool,
+    block_rows: int,
+):
+    mvals, opcodes, u1, u2, loads_p, B = _prep_spread_inputs(
+        keys, opcodes, load_reg, rng,
+        hash_partitioned=hash_partitioned, block_rows=block_rows,
+    )
+    if use_pallas:
+        ridx, target, chain, picked, bounced = range_match_spread_dirty_pallas(
+            mvals, opcodes.astype(jnp.int32), u1, u2,
+            lo_p, hi_p, chains_p, clen_p, loads_p, dirty_p,
+            num_slots=num_slots, block_rows=block_rows, interpret=interpret,
+        )
+        bounced = bounced != 0
+    else:
+        ridx, target, chain, picked, bounced = range_match_spread_dirty_ref(
+            mvals, opcodes.astype(jnp.int32), u1, u2,
+            lo_p, hi_p, chains_p, clen_p, loads_p, dirty_p,
+            num_slots=num_slots,
+        )
+    return ridx[:B], target[:B], chain[:, :B], picked[:B], bounced[:B]
+
+
+def range_match_spread_dirty(
+    directory: Directory,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    dirty: jnp.ndarray,
+    rng,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """CRAQ apportioned-read hot path: p2c pick + dirty-bit tail bounce.
+
+    Identical target selection to ``core.routing.route_load_aware_dirty``
+    (sans counter/load-register bumps) given the same ``rng`` and the
+    (S, r_max) bool ``dirty`` table (``repro.replication.state``).
+    Returns ``(ridx, target, chain, picked, bounced)``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
+    dirty_p = pack_dirty(directory, dirty)
+    return _range_match_spread_dirty_packed(
+        lo_p, hi_p, chains_p, clen_p, dirty_p, keys, opcodes, load_reg, rng,
         num_slots=directory.num_slots,
         hash_partitioned=bool(directory.hash_partitioned),
         use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,

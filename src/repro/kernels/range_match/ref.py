@@ -48,6 +48,21 @@ def range_match_ref(
     return ridx, target, chain
 
 
+def _p2c_ref(chain, clen, u1, u2, loads):
+    """The p2c pick shared by the spread and dirty (CRAQ) refs — one
+    formula, mirroring ``routing._p2c_pick`` and the kernels' _p2c_tile.
+    Returns ``(picked, ppos, p1, p2, first_wins)``."""
+    c = jnp.maximum(clen, 1)
+    p1, p2 = u1 % c, u2 % c
+    n1 = jnp.take_along_axis(chain, p1[None, :], axis=0)[0]
+    n2 = jnp.take_along_axis(chain, p2[None, :], axis=0)[0]
+    l1 = loads[jnp.maximum(n1, 0)]
+    l2 = loads[jnp.maximum(n2, 0)]
+    first_wins = l1 <= l2
+    return (jnp.where(first_wins, n1, n2), jnp.where(first_wins, p1, p2),
+            p1, p2, first_wins)
+
+
 def range_match_spread_ref(
     mvals: jnp.ndarray,
     opcodes: jnp.ndarray,
@@ -69,14 +84,44 @@ def range_match_spread_ref(
     ridx = _slot_match(mvals, slot_lo, slot_hi, num_slots)
     chain = chains[:, ridx]
     clen = chain_len[ridx]
-    head = chain[0]
-    c = jnp.maximum(clen, 1)
-    p1, p2 = u1 % c, u2 % c
-    n1 = jnp.take_along_axis(chain, p1[None, :], axis=0)[0]
-    n2 = jnp.take_along_axis(chain, p2[None, :], axis=0)[0]
-    l1 = loads[jnp.maximum(n1, 0)]
-    l2 = loads[jnp.maximum(n2, 0)]
-    read_target = jnp.where(l1 <= l2, n1, n2)
+    picked, _ppos, _p1, _p2, _fw = _p2c_ref(chain, clen, u1, u2, loads)
     is_write = (opcodes == 1) | (opcodes == 2)
-    target = jnp.where(is_write, head, read_target)
+    target = jnp.where(is_write, chain[0], picked)
     return ridx, target, chain
+
+
+def range_match_spread_dirty_ref(
+    mvals: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    u1: jnp.ndarray,
+    u2: jnp.ndarray,
+    slot_lo: jnp.ndarray,
+    slot_hi: jnp.ndarray,
+    chains: jnp.ndarray,
+    chain_len: jnp.ndarray,
+    loads: jnp.ndarray,
+    dirty: jnp.ndarray,
+    *,
+    num_slots: int,
+):
+    """jnp oracle for kernel.range_match_spread_dirty_pallas (CRAQ reads).
+
+    ``dirty`` (r_max, Spad) int32 per-(position, slot) dirty bits (padded
+    slots clean).  Same p2c pick as :func:`range_match_spread_ref`, plus
+    the CRAQ serving rule of ``core.routing.route_load_aware_dirty``: a
+    dirty non-tail pick bounces the read to the chain tail.  Returns
+    ``(ridx, target, chain, picked, bounced)`` — ``target`` is the
+    serving node.
+    """
+    ridx = _slot_match(mvals, slot_lo, slot_hi, num_slots)
+    chain = chains[:, ridx]
+    clen = chain_len[ridx]
+    picked, ppos, _p1, _p2, _fw = _p2c_ref(chain, clen, u1, u2, loads)
+    tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[None, :], axis=0)[0]
+    dirty_b = dirty[:, ridx]                              # (r_max, B)
+    d_pick = jnp.take_along_axis(dirty_b, ppos[None, :], axis=0)[0]
+    is_write = (opcodes == 1) | (opcodes == 2)
+    bounced = (~is_write) & (d_pick != 0) & (ppos != clen - 1) & (picked >= 0)
+    read_target = jnp.where(bounced, tail, picked)
+    target = jnp.where(is_write, chain[0], read_target)
+    return ridx, target, chain, picked, bounced

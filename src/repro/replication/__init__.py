@@ -1,0 +1,36 @@
+"""repro.replication — versioned chain replication with apportioned reads.
+
+The consistency layer over the slot-pool directory's replica chains:
+three selectable modes (``eventual`` / ``chain`` / ``craq``), a
+shape-stable device-resident version/dirty register file sized
+``(n_slots, r_max)``, and the control-plane journal that keeps it
+coherent across splits, merges, chain widening and failures.
+
+    protocol.py — mode semantics + driver wiring (ModePlan)
+    state.py    — ReplState register file: advance / dirty_bits /
+                  apply_events
+    bench.py    — the three-mode tail-latency comparison behind
+                  ``balance_bench --replication``
+"""
+
+from repro.replication.protocol import (
+    CHAIN,
+    CRAQ,
+    EVENTUAL,
+    ModePlan,
+    REPLICATION_MODES,
+    resolve_mode,
+)
+from repro.replication.state import (
+    ReplState,
+    advance,
+    apply_events,
+    dirty_bits,
+    make_state,
+)
+
+__all__ = [
+    "EVENTUAL", "CHAIN", "CRAQ", "REPLICATION_MODES",
+    "ModePlan", "resolve_mode",
+    "ReplState", "make_state", "advance", "apply_events", "dirty_bits",
+]

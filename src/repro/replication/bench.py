@@ -1,0 +1,216 @@
+"""The three-mode replication comparison behind ``balance_bench --replication``.
+
+Runs ``eventual`` / ``chain`` / ``craq`` (``repro.replication``) over
+write-mix workloads — a diurnal read/write swing, a write-heavy flash
+crowd and the canonical YCSB-A 50/50 mix — under one adaptive policy, and
+reports the consistency/latency trade as per-mode tail latencies:
+
+* ``chain`` pays at both ends: reads pile on the tail, writes traverse
+  the whole (possibly widened) chain;
+* ``craq`` keeps chain's write broadcast but apportions clean reads over
+  all replicas, paying a tail bounce only inside the dirty window;
+* ``eventual`` is the latency floor (no consistency guarantees: widened
+  replicas serve reads while syncing lazily off the reply path).
+
+The matrix runs each (scenario × mode) pair under two policies:
+``frozen`` — the *protocol-pure* comparison (no migration or widening,
+so the only difference between modes is who serves which read and how
+far writes travel) — and ``full_adaptive``, which documents how the
+modes compose with the adaptive machinery (widened chains make
+chain/craq write broadcasts longer; migration evens chain-mode tails).
+
+Gates (deterministic at any size, checked by the CI replication smoke;
+gate 1 keys on the frozen rows — the adaptive rows are reporting, not
+gating, because migration can legitimately even out chain-mode tails):
+
+1. **apportioned-read gate** — on the *read-heavy phase* of the diurnal
+   swing under ``frozen``, craq's clean-read p99 must not exceed chain's
+   tail-read p99 (if it does, apportioning reads bought nothing);
+2. **consistency-invariant gate** — craq must report dirty-read bounces
+   under a write-heavy mix (the dirty window exists; a craq run whose
+   dirty accounting broke reports zero and fails), and under ``frozen``
+   the chain rows must be **numerically identical** to the eventual
+   rows: with no widening, chain replication *is* tail reads over the
+   base chain, so any divergence means chain-mode routing or hop
+   accounting drifted off the tail.  (eventual/chain ``dirty_reads`` is
+   structurally zero — the driver never computes bounces off-craq — so
+   that column alone would be a vacuous check; the equality gate is the
+   behavioural one.);
+3. every run's device step must have compiled exactly once.
+
+Imports of ``repro.cluster`` stay inside functions: the cluster package
+imports ``repro.replication`` at module load, and the bench hooks are the
+one place the dependency points the other way.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.replication.protocol import REPLICATION_MODES
+
+# read_ratio(e) at or above this marks a "read-heavy" epoch (gate 1)
+READ_HEAVY = 0.8
+BENCH_POLICIES = ("frozen", "full_adaptive")
+
+
+def _scenario(name: str, quick: bool):
+    from repro.cluster import ScenarioConfig, make_scenario
+
+    if quick:
+        base = dict(n_epochs=6, epoch_ops=512, n_records=1024, value_dim=4,
+                    seed=1)
+    else:
+        base = dict(n_epochs=12, epoch_ops=1024, n_records=2048, value_dim=4,
+                    seed=1)
+    if name == "diurnal":
+        # full day/night swing: read-heavy crest for gate 1, write-heavy
+        # trough so the dirty window actually opens
+        return make_scenario("diurnal", ScenarioConfig(**base),
+                             lo=0.35, hi=0.98)
+    if name == "flash_crowd":
+        cfg = ScenarioConfig(**base, read_ratio=0.75)
+        return make_scenario("flash_crowd", cfg,
+                             t0=cfg.n_epochs // 3, t1=2 * cfg.n_epochs // 3)
+    if name == "ycsb_a":
+        return make_scenario("ycsb_a", ScenarioConfig(**base))
+    raise ValueError(f"unknown replication bench scenario {name!r}")
+
+
+def _cluster_cfg(quick: bool, mode: str):
+    from repro.cluster import ClusterConfig
+
+    return ClusterConfig(
+        num_nodes=8,
+        num_ranges=32 if quick else 128,
+        replication=2,
+        r_max=4 if quick else 5,
+        n_clients=32,
+        report_every=1,
+        imbalance_threshold=1.1,
+        max_moves_per_round=8,
+        replication_mode=mode,
+    )
+
+
+REPLICATION_SCENARIOS = ("diurnal", "flash_crowd", "ycsb_a")
+
+
+def run_replication_matrix(quick: bool, *, policies=BENCH_POLICIES,
+                           verbose: bool = True) -> list[dict]:
+    """One JSON row per (scenario × replication mode × policy), plus the
+    phase split the gate needs: read-heavy vs write-heavy epoch means."""
+    from repro.cluster import EpochDriver, make_policy, summarize
+
+    rows = []
+    for sname in REPLICATION_SCENARIOS:
+        for policy, mode in (
+            (p, m) for p in policies for m in REPLICATION_MODES
+        ):
+            scen = _scenario(sname, quick)
+            drv = EpochDriver(scen, make_policy(policy),
+                              _cluster_cfg(quick, mode))
+            t0 = time.perf_counter()
+            epochs = drv.run()
+            wall = time.perf_counter() - t0
+
+            heavy = np.array([
+                scen.read_ratio(r.epoch) >= READ_HEAVY for r in epochs
+            ])
+            read_p99 = np.array([r.read_p99 for r in epochs])
+            clean_p99 = np.array([r.clean_read_p99 for r in epochs])
+            p99 = np.array([r.p99 for r in epochs])
+
+            row = summarize(epochs)
+            row.update({
+                "bench": "replication",
+                "wall_s": round(wall, 3),
+                "traces": drv.traces,
+                "backend": "oracle",
+                "period": 1,
+                "fused": True,
+                "host_syncs": drv.host_syncs,
+                "read_heavy_epochs": int(heavy.sum()),
+                "read_heavy_read_p99": (
+                    float(read_p99[heavy].mean()) if heavy.any() else 0.0
+                ),
+                "read_heavy_clean_p99": (
+                    float(clean_p99[heavy].mean()) if heavy.any() else 0.0
+                ),
+                "write_heavy_p99": (
+                    float(p99[~heavy].mean()) if (~heavy).any() else 0.0
+                ),
+            })
+            rows.append(row)
+            if verbose:
+                print(
+                    f"[replication] {sname:12s} {policy:13s} {mode:8s} "
+                    f"p99 {row['mean_p99']:6.1f} p999 {row['mean_p999']:6.1f} "
+                    f"read_p99 {row['mean_read_p99']:6.1f} "
+                    f"clean_p99 {row['mean_clean_read_p99']:6.1f} "
+                    f"dirty {row['total_dirty_reads']:5d} "
+                    f"traces {row['traces']}"
+                )
+    return rows
+
+
+def check_replication(rows: list[dict]) -> list[str]:
+    """The replication acceptance gates (see module docstring)."""
+    by = {(r["scenario"], r["replication"], r["policy"]): r for r in rows
+          if r.get("bench") == "replication"}
+    problems: list[str] = []
+
+    craq = by.get(("diurnal", "craq", "frozen"))
+    chain = by.get(("diurnal", "chain", "frozen"))
+    if craq and chain:
+        if craq["read_heavy_epochs"] == 0:
+            problems.append("replication: diurnal sweep has no read-heavy "
+                            "phase — gate 1 is vacuous")
+        elif not (craq["read_heavy_clean_p99"]
+                  <= chain["read_heavy_read_p99"]):
+            problems.append(
+                f"replication: craq clean-read p99 "
+                f"{craq['read_heavy_clean_p99']:.1f} !<= chain tail-read "
+                f"p99 {chain['read_heavy_read_p99']:.1f} on the diurnal "
+                f"read-heavy phase (frozen)"
+            )
+
+    for (sname, mode, policy), r in by.items():
+        if mode in ("eventual", "chain") and r["total_dirty_reads"] != 0:
+            problems.append(
+                f"replication: {sname}/{mode}/{policy} reported "
+                f"{r['total_dirty_reads']} dirty-read bounces (must be 0)"
+            )
+        # frozen chain == frozen eventual, numerically: no widening means
+        # chain replication degenerates to exactly the eventual tail-read
+        # path — the behavioural check that chain-mode routing/planning
+        # stayed on the tail (dirty_reads above is zero by construction)
+        if mode == "chain" and policy == "frozen":
+            ev = by.get((sname, "eventual", "frozen"))
+            if ev is not None:
+                for k in ("mean_p99", "mean_read_p99", "mean_throughput",
+                          "mean_imbalance"):
+                    if r[k] != ev[k]:
+                        problems.append(
+                            f"replication: {sname}/frozen chain {k} "
+                            f"{r[k]:.4f} != eventual {ev[k]:.4f} (with no "
+                            f"widening these must coincide exactly)"
+                        )
+    for policy in ("frozen", "full_adaptive"):
+        ya = by.get(("ycsb_a", "craq", policy))
+        if ya and ya["total_dirty_reads"] <= 0:
+            problems.append(
+                f"replication: craq/{policy} reported no dirty-read bounces "
+                "on the write-heavy ycsb_a mix — the dirty window never "
+                "opened"
+            )
+
+    for r in rows:
+        if r.get("bench") == "replication" and r["traces"] != 1:
+            problems.append(
+                f"replication: {r['scenario']}/{r['replication']} step "
+                f"traced {r['traces']}x (expected 1)"
+            )
+    return problems

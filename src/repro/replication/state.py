@@ -1,0 +1,166 @@
+"""Versioned chain-replication state (the CRAQ register file).
+
+CRAQ (Terrace & Freedman, USENIX ATC'09 — PAPERS.md: NetChain carries the
+same chain discipline into the switch) keeps, at every chain member, the
+highest version it has *applied* and the highest version it *knows
+committed* (the tail's ack, propagated back up the chain).  A member whose
+applied version is ahead of its committed knowledge holds a **dirty**
+object: it must not serve it locally, because the tail may still be the
+only node whose value is safe to expose.
+
+Here the whole register file is two shape-stable device arrays sized like
+the directory's slot pool — the replication analogue of the per-record
+statistics counters:
+
+* ``version``  (S,)        — committed version per slot record (the tail
+  commit counter; bumped once per write the slot receives);
+* ``acked``    (S, r_max)  — highest committed version each chain
+  *position* has seen the ack for.
+
+The dirty bit is derived, never stored: ``dirty[s, j] = acked[s, j] <
+version[s]``.  Under the epoch-batched data plane the protocol rounds
+quantize naturally:
+
+* writes of epoch *e* commit at the tail within *e* (the store applies
+  the batch along the whole chain — paper §4.1.2 batch convergence);
+* ack propagation takes one epoch: at the end of *e* every position has
+  acked everything committed *before* *e*, so the slots written during
+  *e* are exactly the dirty ones the *next* epoch's reads must respect
+  (:func:`advance` — pure, jittable, lives inside the fused period scan
+  as a donated carry).
+
+Control-plane reconfigurations (chain membership changes, splits, merges)
+edit the table conservatively through :func:`apply_events` — the host-side
+consumer of ``Controller.drain_repl_log``.  Any membership change zeroes
+the slot's acks (every member dirty until the next ack round — safe, and
+self-healing after one epoch); a split child inherits its parent's row
+verbatim (the child's keys were the parent's keys, with the same
+outstanding writes); a merge keeps the max version and conservatively
+dirties the surviving record.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("version", "acked"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class ReplState:
+    """The (n_slots, r_max) version/dirty register file (device-resident).
+
+    version: (S,) uint32 committed (tail) version per slot record.
+    acked:   (S, r_max) uint32 highest committed version acked at each
+             chain position.  ``acked < version`` == dirty.
+    """
+
+    version: jnp.ndarray
+    acked: jnp.ndarray
+
+    @property
+    def num_slots(self) -> int:
+        return self.version.shape[0]
+
+    @property
+    def r_max(self) -> int:
+        return self.acked.shape[1]
+
+
+def make_state(n_slots: int, r_max: int) -> ReplState:
+    """Fresh register file: version 0 everywhere, everything clean
+    (the load phase commits before epoch 0, like the YCSB load phase)."""
+    return ReplState(
+        version=jnp.zeros((n_slots,), jnp.uint32),
+        acked=jnp.zeros((n_slots, r_max), jnp.uint32),
+    )
+
+
+def dirty_bits(state: ReplState) -> jnp.ndarray:
+    """(S, r_max) bool — position j of slot s holds an uncommitted-to-j
+    version.  The chain tail is exempted at the *routing* layer (it is the
+    commit point by definition), not here: keeping the raw comparison
+    makes the table position-agnostic under chain_len changes."""
+    return state.acked < state.version[:, None]
+
+
+def advance(state: ReplState, ridx: jnp.ndarray, is_write: jnp.ndarray) -> ReplState:
+    """One epoch's protocol round (pure, jittable, shape-stable).
+
+    ``ridx``: (B,) matched slot per query; ``is_write``: (B,) bool.
+    Writes bump their slot's committed version (the tail applies and
+    commits within the batch); the ack round for everything committed
+    *before* this epoch completes, so the new dirty set is exactly the
+    slots written this epoch.  Reads must consult :func:`dirty_bits` of
+    the *pre-advance* state (they observe pre-batch protocol state, just
+    as they observe the pre-batch store).
+    """
+    S = state.num_slots
+    w = jnp.zeros((S,), jnp.uint32).at[ridx].add(
+        jnp.where(is_write, jnp.uint32(1), jnp.uint32(0))
+    )
+    acked = jnp.broadcast_to(state.version[:, None], state.acked.shape)
+    return ReplState(version=state.version + w, acked=acked)
+
+
+def apply_events(state: ReplState, events: list[tuple]) -> ReplState:
+    """Replay a controller reconfiguration journal onto the register file.
+
+    Host-side (control plane, period boundaries only).  Event grammar —
+    what ``Controller`` appends to ``repl_log``:
+
+    * ``("reset", s)``        — chain membership of slot s changed
+      (migrate / widen / narrow / failure splice): zero the acks, every
+      member dirty until the next ack round;
+    * ``("inherit", p, c)``   — split: child c takes parent p's row
+      verbatim (same keys, same outstanding writes);
+    * ``("merge", c, p)``     — merge: p keeps ``max(version)`` and is
+      conservatively dirtied (its chain just absorbed c's span);
+    * ``("kill", s)``         — slot returned to the pool: zero the row
+      so a later split reusing it starts clean;
+    * ``("grow", S')``        — pool growth: pad zero rows to S' (the
+      epoch step is rebuilt anyway — shapes changed).
+
+    No-op (same object) on an empty journal, so the eventual-mode driver
+    pays nothing.
+    """
+    if not events:
+        return state
+    version = np.asarray(state.version).astype(np.uint32).copy()
+    acked = np.asarray(state.acked).astype(np.uint32).copy()
+    for ev in events:
+        kind = ev[0]
+        if kind == "reset":
+            acked[ev[1], :] = 0
+        elif kind == "inherit":
+            p, c = ev[1], ev[2]
+            version[c] = version[p]
+            acked[c, :] = acked[p, :]
+        elif kind == "merge":
+            c, p = ev[1], ev[2]
+            version[p] = max(version[p], version[c])
+            acked[p, :] = 0
+        elif kind == "kill":
+            version[ev[1]] = 0
+            acked[ev[1], :] = 0
+        elif kind == "grow":
+            new_s = int(ev[1])
+            r = acked.shape[1]
+            if new_s > version.shape[0]:
+                version = np.concatenate(
+                    [version, np.zeros((new_s - version.shape[0],), np.uint32)]
+                )
+                acked = np.concatenate(
+                    [acked, np.zeros((new_s - acked.shape[0], r), np.uint32)]
+                )
+        else:
+            raise ValueError(f"unknown replication event {ev!r}")
+    return ReplState(version=jnp.asarray(version), acked=jnp.asarray(acked))

@@ -106,6 +106,119 @@ def test_split_merge_roundtrip_property():
         assert (ctl._dir[k] == v).all(), k
 
 
+def _assert_lineage_sane(ctl, max_depth):
+    """compact_lineage postconditions: every live parent pointer is a
+    live, span-adjacent slot (so merge_range can fire) or NO_SLOT, and
+    generation == depth in the forest, bounded by max_depth."""
+    from repro.core.directory import NO_SLOT
+
+    d = ctl._dir
+    for s in ctl.live_ranges():
+        p = int(d["parent"][s])
+        g = int(d["generation"][s])
+        assert g <= max_depth, (s, g)
+        if p == NO_SLOT:
+            assert g == 0
+            continue
+        assert d["live"][p], (s, p)
+        lo, hi = ctl.range_span(s)
+        plo, phi = ctl.range_span(p)
+        assert phi + 1 == lo or hi + 1 == plo, (s, p)
+        assert g == int(d["generation"][p]) + 1, (s, p)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_compact_lineage_bounds_depth_and_keeps_lookups(seed):
+    """Adversarial split/merge churn, then compact: lookups bit-identical,
+    every surviving child still mergeable, generation depth bounded."""
+    rng = np.random.default_rng(seed)
+    ctl = C.Controller(C.make_directory(6, 8, 2, n_slots=64))
+    _random_split_sequence(ctl, 60, rng, merge_prob=0.4)
+    d_before = ctl.directory()
+    probes = jnp.asarray(rng.integers(0, 2**32, 1024, dtype=np.uint32))
+    ridx_before = np.asarray(C.lookup_range(d_before, probes))
+
+    ctl.compact_lineage(max_depth=2)
+
+    d_after = ctl.directory()
+    # spans and chains untouched -> the data plane sees nothing
+    assert np.array_equal(np.asarray(d_before.slot_lo), np.asarray(d_after.slot_lo))
+    assert np.array_equal(np.asarray(d_before.chains), np.asarray(d_after.chains))
+    assert np.array_equal(ridx_before, np.asarray(C.lookup_range(d_after, probes)))
+    _assert_partition(d_after)
+    _assert_lineage_sane(ctl, max_depth=2)
+    # idempotent
+    assert ctl.compact_lineage(max_depth=2) == 0
+
+
+def test_compact_lineage_rescues_orphaned_grandchildren():
+    """Merging a middle generation orphans its children (dangling parent
+    -> merge_range refuses forever); compaction re-parents them onto the
+    adjacent live slot and the merge hysteresis can reclaim the pool."""
+    ctl = C.Controller(C.make_directory(2, 8, 2, n_slots=16))
+    lo, hi = ctl.range_span(0)
+    p = ctl.split_range(0, lo + (hi - lo) // 2)          # child of 0
+    plo, phi = ctl.range_span(p)
+    c = ctl.split_range(p, plo + (phi - plo) // 2)       # grandchild of 0
+    # p ([mid0+1, midp]) is still span-adjacent to 0 ([lo, mid0]): the
+    # middle generation merges away, orphaning c
+    assert ctl.merge_range(p) is not None
+    assert not ctl.is_live(p) and ctl.is_live(c)
+    # c's parent is now dead: unmergeable until compaction
+    assert ctl.merge_range(c) is None
+    changed = ctl.compact_lineage(max_depth=2)
+    assert changed > 0
+    _assert_lineage_sane(ctl, max_depth=2)
+    assert ctl.merge_range(c) is not None                # mergeable again
+    _assert_partition(ctl.directory())
+
+
+def test_compact_lineage_roundtrip_hypothesis():
+    """Hypothesis: random split/merge/compact interleavings keep the
+    partition, the lineage invariants, and lookup behaviour."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    action = st.one_of(
+        st.tuples(st.just("split"), st.integers(0, 2**32 - 2)),
+        st.tuples(st.just("merge"), st.integers(0, 63)),
+        st.tuples(st.just("compact"), st.just(0)),
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(actions=st.lists(action, min_size=1, max_size=30),
+           seed=st.integers(0, 2**16))
+    def run(actions, seed):
+        rng = np.random.default_rng(seed)
+        ctl = C.Controller(C.make_directory(4, 8, 2, n_slots=64))
+        probes = jnp.asarray(rng.integers(0, 2**32, 256, dtype=np.uint32))
+        for kind, arg in actions:
+            if kind == "split":
+                live = ctl.live_ranges()
+                ridx = live[arg % len(live)]
+                lo, hi = ctl.range_span(ridx)
+                if hi - lo >= 2:
+                    ctl.split_range(ridx, lo + (arg % (hi - lo)))
+            elif kind == "merge":
+                kids = ctl.children()
+                if kids:
+                    ctl.merge_range(kids[arg % len(kids)])
+            else:
+                d0 = ctl.directory()
+                before = np.asarray(C.lookup_range(d0, probes))
+                ctl.compact_lineage(max_depth=2)
+                d1 = ctl.directory()
+                assert np.array_equal(
+                    before, np.asarray(C.lookup_range(d1, probes)))
+                _assert_lineage_sane(ctl, max_depth=2)
+            _assert_partition(ctl.directory())
+        ctl.compact_lineage(max_depth=2)
+        _assert_lineage_sane(ctl, max_depth=2)
+        _assert_partition(ctl.directory())
+
+    run()
+
+
 def test_masked_slots_lose_lookups():
     """A key in a dead slot's stale span must land in the live covering
     slot, never the dead one (oracle and kernel alike)."""
