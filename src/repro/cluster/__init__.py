@@ -32,6 +32,7 @@ from repro.cluster.policies import (
     POLICIES,
     FullAdaptivePolicy,
     MigratePolicy,
+    OverloadAdaptivePolicy,
     Policy,
     PolicyConfig,
     ReplicatePolicy,
@@ -45,6 +46,6 @@ __all__ = [
     "latency_percentiles", "latency_percentiles_batch",
     "masked_p99_batch", "p999_batch", "summarize",
     "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
-    "FullAdaptivePolicy", "make_policy",
+    "FullAdaptivePolicy", "OverloadAdaptivePolicy", "make_policy",
     "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",
 ]

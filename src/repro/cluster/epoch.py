@@ -74,6 +74,7 @@ from repro.core.dist_store import DistConfig, make_dist_apply
 from repro.core.migration import execute as execute_migrations
 from repro.core.stats import make_sketch, pull_report, sketch_query, sketch_update
 from repro.core.store import apply_routed, make_store
+from repro import overload as OVL
 from repro import replication as RPL
 
 from repro.cluster.metrics import (
@@ -135,6 +136,22 @@ class ClusterConfig:
     max_scan_results: int = 8
     imbalance_threshold: float = 1.3   # Controller.balance trigger
     max_moves_per_round: int = 4
+    # the overload plane (repro.overload): None disables it and the run
+    # is bit-identical to pre-overload behaviour; an OverloadConfig
+    # carries bounded per-node admission queues + retry-storm dynamics
+    # through the device step (donated through the fused scan)
+    overload: OVL.OverloadConfig | None = None
+    # capacity-autoscale reserve: nodes parked into Controller.standby
+    # at init (before the preload, so they never hold data); the
+    # backpressure policies activate/park them as utilization crosses
+    # their bands
+    standby_nodes: tuple = ()
+    # capacity-driven splitting in the loop: at each control pull, split
+    # the hottest range headed at any node whose store overflowed since
+    # the last pull (Controller.split_overflowed) and — when the slot
+    # pool is exhausted — grow the pool and rebuild the compiled step
+    # (oracle backend only; `traces` then counts 1 + growth_events)
+    split_overflow: bool = False
     seed: int = 0
 
 
@@ -216,6 +233,11 @@ class EpochDriver:
         self.cfg = cfg = cfg or ClusterConfig()
         if backend not in ("oracle", "dist"):
             raise ValueError(f"unknown backend {backend!r}")
+        if cfg.split_overflow and backend != "oracle":
+            raise ValueError(
+                "split_overflow needs backend='oracle' (the dist mesh "
+                "cannot rebuild its sharded step mid-run)"
+            )
         if backend == "dist" and mesh is None:
             raise ValueError("backend='dist' needs a mesh")
         self.backend = backend
@@ -270,6 +292,15 @@ class EpochDriver:
                 max_moves_per_round=cfg.max_moves_per_round,
             ),
         )
+        # capacity autoscale: park the configured reserve BEFORE the
+        # preload, so standby nodes never hold data (the drain is free on
+        # an empty store) and the YCSB load phase routes around them
+        if cfg.standby_nodes:
+            for node in cfg.standby_nodes:
+                self.controller.park_node(int(node))
+            directory = self.controller.directory()
+            # fresh register file below: the park resets are no-ops on it
+            self.controller.drain_repl_log()
         capacity = cfg.capacity
         if capacity is None:
             # every record on up to r_max chains, plus 2x headroom for skewed
@@ -283,9 +314,22 @@ class EpochDriver:
         # next to the load registers; carried (and donated) through the
         # fused period scan for chain/craq, inert zeros under eventual
         self.repl = RPL.make_state(n_slots, cfg.r_max)
+        # the overload plane: device-resident per-node queue/retry
+        # registers, carried (and donated) through the fused scan; None
+        # when disabled — an empty pytree slot, so the step signatures
+        # stay uniform and the disabled path compiles the same program
+        # as before the subsystem existed
+        self.ovl_cfg = cfg.overload
+        self.ovl = (OVL.make_state(cfg.num_nodes, cfg.overload)
+                    if cfg.overload is not None else None)
         self.key = jax.random.PRNGKey(cfg.seed)
 
         self._traces = 0
+        # compile counts carried across split_overflow step rebuilds: the
+        # old program's jit cache size is banked here, so `traces` stays
+        # exactly 1 + growth_events when recompiles only follow growth
+        self._trace_base = 0
+        self.growth_events = 0
         self._period = 0
         self._last_overflow = 0
         self.host_syncs = 0        # device->host round-trips (profile metric)
@@ -311,6 +355,9 @@ class EpochDriver:
                 return_decision=True,
                 replication_mode=cfg.replication_mode,
                 max_scan_results=cfg.max_scan_results,
+                queue_pen=(cfg.overload is not None
+                           and cfg.overload.queue_weight > 0
+                           and self.mode_plan.spread),
             )
             self._dist_apply = make_dist_apply(mesh, directory, self._dist_cfg)
             self._step = self._build_dist_step()
@@ -336,8 +383,11 @@ class EpochDriver:
         neither path can hide a retrace behind the other's count."""
         if self.backend == "oracle":
             if self.fused:
-                return _jit_cache_size(self._period_fn, self._traces)
-            return max(self._traces, _jit_cache_size(self._step, 0))
+                return self._trace_base + _jit_cache_size(
+                    self._period_fn, self._traces
+                )
+            return max(self._traces,
+                       self._trace_base + _jit_cache_size(self._step, 0))
         t = self._traces
         return max(t, _jit_cache_size(self._dist_apply, 0))
 
@@ -354,7 +404,11 @@ class EpochDriver:
         self.store, _ = apply_routed(
             self.store, q, decision, max_scan_results=self.cfg.max_scan_results
         )
-        self._last_overflow = int(np.asarray(self.store.overflow).sum())
+        ovf = np.asarray(self.store.overflow).astype(np.int64)
+        self._last_overflow = int(ovf.sum())
+        # per-node overflow floor for capacity-driven splitting (which
+        # node's store pushed past capacity since the last control pull)
+        self._ovf_node_last = ovf
 
     # -- device step variants ----------------------------------------------
     def _make_oracle_body(self, mp: RPL.ModePlan):
@@ -377,15 +431,19 @@ class EpochDriver:
         # stale.  The chunk loop unrolls inside the single jitted step —
         # the trace count stays 1.
         chunks = cfg.p2c_chunks if spread else 1
+        # the overload plane (trace constants; None leaves every value
+        # computed below bit-identical to the pre-overload program)
+        ocfg = self.ovl_cfg
 
-        def route_chunk(directory, load_reg, dirty, qs, rng_c):
+        def route_chunk(directory, load_reg, dirty, qs, rng_c, queue_pen):
             if mp.dirty_reads:
                 dec, directory, load_reg, picked, bounced = (
-                    R.route_load_aware_dirty(directory, qs, load_reg, dirty, rng_c)
+                    R.route_load_aware_dirty(directory, qs, load_reg, dirty,
+                                             rng_c, queue_pen=queue_pen)
                 )
             elif spread:
                 dec, directory, load_reg = R.route_load_aware(
-                    directory, qs, load_reg, rng_c
+                    directory, qs, load_reg, rng_c, queue_pen=queue_pen
                 )
                 picked = bounced = None
             else:
@@ -393,9 +451,23 @@ class EpochDriver:
                 picked = bounced = None
             return dec, directory, load_reg, picked, bounced
 
-        def body(store, directory, load_reg, sketch, repl, q, rng):
+        def body(store, directory, load_reg, sketch, repl, ovl, q, rng):
+            if ocfg is not None:
+                # fold_in (not a wider split) so the disabled path's
+                # r_route/r_plan streams are untouched — routing and the
+                # hop-plan service draws stay bit-identical either way
+                r_ovl = jax.random.fold_in(rng, 0x0F10AD)
             r_route, r_plan = jax.random.split(rng)
             B = q.opcode.shape[0]
+            # deep queues repel p2c reads: the pre-epoch queue depth joins
+            # the load registers in the pick comparison (registers still
+            # bump raw, and the kernels fold the same penalty at the ops
+            # layer — parity by construction)
+            queue_pen = None
+            if ocfg is not None and ocfg.queue_weight > 0 and spread:
+                queue_pen = ovl.queue.astype(jnp.uint32) * jnp.uint32(
+                    ocfg.queue_weight
+                )
             # reads consult the PRE-epoch dirty state, exactly as they
             # observe the pre-batch store (repro.replication.state)
             dirty = RPL.dirty_bits(repl) if mp.dirty_reads else None
@@ -408,7 +480,7 @@ class EpochDriver:
                     )
                     dec, directory, load_reg, picked, bounced = route_chunk(
                         directory, load_reg, dirty, qs,
-                        jax.random.fold_in(r_route, ci),
+                        jax.random.fold_in(r_route, ci), queue_pen,
                     )
                     decs.append(dec)
                     picks.append(picked)
@@ -421,7 +493,7 @@ class EpochDriver:
                     bounced = jnp.concatenate(bncs, axis=0)
             else:
                 decision, directory, load_reg, picked, bounced = route_chunk(
-                    directory, load_reg, dirty, q, r_route
+                    directory, load_reg, dirty, q, r_route, queue_pen
                 )
             node_ops = _node_ops(decision, q.opcode, N)
             if not spread:
@@ -435,10 +507,21 @@ class EpochDriver:
                 dict(read_via=picked, read_bounce=bounced)
                 if mp.dirty_reads else {}
             )
+            # overload step: queue/retry dynamics decide each query's
+            # timing fate (the store above applied every op regardless —
+            # accounting plane, see repro.overload)
+            if ocfg is not None:
+                ovl, ovl_rej, ovl_scale, ostats = OVL.step(
+                    ovl, decision.target, r_ovl, ocfg
+                )
+                ovl_kw = dict(shed=ovl_rej, service_scale=ovl_scale)
+            else:
+                ostats = jnp.zeros((len(OVL.STAT_FIELDS),), jnp.int32)
+                ovl_kw = {}
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=r_plan, num_nodes=N,
                 write_chain_cap=cap, service_model=cfg.service_model,
-                **bounce_kw,
+                **bounce_kw, **ovl_kw,
             )
             if mp.track_state:
                 is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
@@ -446,17 +529,17 @@ class EpochDriver:
             retries = jnp.zeros((), jnp.int32)
             bounced_out = (bounced if mp.dirty_reads
                            else jnp.zeros((B,), jnp.bool_))
-            return (store, directory, load_reg, sketch, repl,
-                    plan, node_ops, retries, bounced_out)
+            return (store, directory, load_reg, sketch, repl, ovl,
+                    plan, node_ops, retries, bounced_out, ostats)
 
         return body
 
     def _build_oracle_step(self, mp: RPL.ModePlan):
         body = self._make_oracle_body(mp)
 
-        def step(store, directory, load_reg, sketch, repl, q, rng):
+        def step(store, directory, load_reg, sketch, repl, ovl, q, rng):
             self._traces += 1  # python side effect: counts traces, not calls
-            return body(store, directory, load_reg, sketch, repl, q, rng)
+            return body(store, directory, load_reg, sketch, repl, ovl, q, rng)
 
         return jax.jit(step)
 
@@ -473,36 +556,40 @@ class EpochDriver:
         scenario."""
         body = self._make_oracle_body(mp)
 
-        def period(store, directory, load_reg, sketch, repl, qs, rngs, live):
+        def period(store, directory, load_reg, sketch, repl, ovl,
+                   qs, rngs, live):
             def scan_body(carry, xs):
-                store, directory, load_reg, sketch, repl = carry
+                store, directory, load_reg, sketch, repl, ovl = carry
                 q, rng, lv = xs
-                (store2, directory2, load_reg2, sketch2, repl2,
-                 plan, node_ops, retries, bounced) = body(
-                    store, directory, load_reg, sketch, repl, q, rng
+                (store2, directory2, load_reg2, sketch2, repl2, ovl2,
+                 plan, node_ops, retries, bounced, ostats) = body(
+                    store, directory, load_reg, sketch, repl, ovl, q, rng
                 )
                 keep = lambda new, old: jnp.where(lv, new, old)
                 store2 = jax.tree.map(keep, store2, store)
                 directory2 = jax.tree.map(keep, directory2, directory)
                 carry2 = (store2, directory2, keep(load_reg2, load_reg),
                           keep(sketch2, sketch),
-                          jax.tree.map(keep, repl2, repl))
+                          jax.tree.map(keep, repl2, repl),
+                          jax.tree.map(keep, ovl2, ovl))
                 ovf = jnp.sum(store2.overflow)
-                return carry2, (plan, node_ops, retries, ovf, bounced)
+                return carry2, (plan, node_ops, retries, ovf, bounced, ostats)
 
             carry, outs = jax.lax.scan(
-                scan_body, (store, directory, load_reg, sketch, repl),
+                scan_body, (store, directory, load_reg, sketch, repl, ovl),
                 (qs, rngs, live),
             )
             return (*carry, *outs)
 
-        # donate the big buffers: store slabs, load registers, sketch and
-        # the replication register file (version/dirty tables).
+        # donate the big buffers: store slabs, load registers, sketch, the
+        # replication register file (version/dirty tables) and the
+        # overload queue/retry registers (an empty pytree when disabled —
+        # donating it is a no-op).
         # The directory is NOT donated — several of its freshly-grafted
         # tables (e.g. the zeroed read/write counters) can alias the same
         # constant buffer, which XLA rejects as a double donation; it is
         # also tiny next to the slabs, so nothing is lost.
-        return jax.jit(period, donate_argnums=(0, 2, 3, 4))
+        return jax.jit(period, donate_argnums=(0, 2, 3, 4, 5))
 
     def _build_dist_step(self):
         from jax.sharding import NamedSharding, PartitionSpec
@@ -521,9 +608,11 @@ class EpochDriver:
         # retrace the `traces` gate now catches).
         rep = NamedSharding(self._mesh, PartitionSpec())
         shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
+        ocfg = self.ovl_cfg
+        use_qpen = self._dist_cfg.queue_pen
 
         def observe(q, ridx, target, chain, chain_len, sketch, rng, repl,
-                    picked, bounced):
+                    picked, bounced, ovl, r_ovl):
             """Jitted post-processing of the dist apply's decision."""
             self._traces += 1
             decision = C.RoutingDecision(
@@ -537,35 +626,56 @@ class EpochDriver:
             sketch = sketch_update(sketch, q.key)
             bounce_kw = (dict(read_via=picked, read_bounce=bounced)
                          if mp.dirty_reads else {})
+            # overload step: same accounting-plane placement as the oracle
+            # body — after the distributed apply, deciding timing fate only
+            if ocfg is not None:
+                ovl, ovl_rej, ovl_scale, ostats = OVL.step(
+                    ovl, target, r_ovl, ocfg
+                )
+                ovl_kw = dict(shed=ovl_rej, service_scale=ovl_scale)
+            else:
+                ostats = jnp.zeros((len(OVL.STAT_FIELDS),), jnp.int32)
+                ovl_kw = {}
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=rng, num_nodes=N,
                 write_chain_cap=mp.write_cap_spread,
-                service_model=cfg.service_model, **bounce_kw,
+                service_model=cfg.service_model, **bounce_kw, **ovl_kw,
             )
             if mp.track_state:
                 is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
                 repl = RPL.advance(repl, ridx, is_write)
-            return sketch, plan, node_ops, repl
+            return sketch, plan, node_ops, repl, ovl, ostats
 
         observe = jax.jit(observe)
 
-        def step(store, directory, load_reg, sketch, repl, q, rng):
+        def step(store, directory, load_reg, sketch, repl, ovl, q, rng):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
             load_reg = jax.device_put(load_reg, rep)
             sketch = jax.device_put(sketch, rep)
             repl = jax.device_put(repl, rep)
+            if ovl is not None:
+                ovl = jax.device_put(ovl, rep)
+                r_ovl = jax.random.fold_in(rng, 0x0F10AD)
+            else:
+                r_ovl = rng  # unused placeholder, keeps observe uniform
             r_route, r_plan = jax.random.split(rng)
             B = q.opcode.shape[0]
+            qp = ()
+            if use_qpen:
+                qp = (jax.device_put(
+                    ovl.queue.astype(jnp.uint32)
+                    * jnp.uint32(ocfg.queue_weight), rep
+                ),)
             if mp.dirty_reads:
                 dirty = jax.device_put(RPL.dirty_bits(repl), rep)
                 store, _resp, directory, load_reg, m = dist_apply(
-                    store, directory, load_reg, dirty, q, r_route
+                    store, directory, load_reg, *qp, dirty, q, r_route
                 )
                 picked, bounced = m["picked"], m["bounced"]
             elif spread:
                 store, _resp, directory, load_reg, m = dist_apply(
-                    store, directory, load_reg, q, r_route
+                    store, directory, load_reg, *qp, q, r_route
                 )
                 picked = bounced = None
             else:
@@ -575,14 +685,14 @@ class EpochDriver:
                 # placeholders keep observe's signature mode-independent
                 picked = m["target"]
                 bounced = jnp.zeros((B,), jnp.bool_)
-            sketch, plan, node_ops, repl = observe(
+            sketch, plan, node_ops, repl, ovl, ostats = observe(
                 q, m["ridx"], m["target"], m["chain"], m["chain_len"], sketch,
-                r_plan, repl, picked, bounced,
+                r_plan, repl, picked, bounced, ovl, r_ovl,
             )
             if not spread:
                 load_reg = load_reg + node_ops.astype(jnp.uint32)
-            return (store, directory, load_reg, sketch, repl, plan, node_ops,
-                    m["bucket_overflow"], bounced)
+            return (store, directory, load_reg, sketch, repl, ovl, plan,
+                    node_ops, m["bucket_overflow"], bounced, ostats)
 
         return step
 
@@ -692,8 +802,49 @@ class EpochDriver:
                 report,
                 node_load=self._sync(self.load_reg).astype(np.float64),
             )
+        if self.ovl is not None:
+            # queue/retry view for the backpressure policies (host syncs
+            # gated on the subsystem so the disabled path's sync count is
+            # untouched)
+            self.host_syncs += 1
+            qd = np.asarray(self.ovl.queue).astype(np.int64)
+            rb = np.asarray(self.ovl.retry).sum(axis=1).astype(np.int64)
+            report = dataclasses.replace(
+                report,
+                queue_depth=qd,
+                retry_backlog=rb,
+                queue_limit=int(self.ovl_cfg.queue_cap),
+                service_limit=int(self.ovl_cfg.service_rate),
+            )
+        if self.auto_period:
+            # cadence-aware budgets: a period of k x the band minimum
+            # gets k rounds' worth of per-round move/widen/split budget,
+            # keeping the migration *rate* cadence-invariant
+            span = max(now - self._last_pull_epoch, 1)
+            report = dataclasses.replace(
+                report,
+                budget_scale=float(span) / float(self.cfg.auto_band[0]),
+            )
         ops = self.policy.on_report(self.controller, report)
         events: list[str] = []
+        # backpressure control channel: policies publish per-node
+        # admission probabilities / retry budgets and free-form event
+        # notes; graft them onto the device registers for the next period
+        if self.ovl is not None:
+            ap = getattr(self.policy, "admit_prob", None)
+            if ap is not None:
+                self.ovl = dataclasses.replace(
+                    self.ovl, admit_prob=jnp.asarray(ap, jnp.float32)
+                )
+            rbud = getattr(self.policy, "retry_budget", None)
+            if rbud is not None:
+                self.ovl = dataclasses.replace(
+                    self.ovl, retry_budget=jnp.asarray(rbud, jnp.int32)
+                )
+        notes = getattr(self.policy, "notes", None)
+        if notes:
+            events.extend(notes)
+            notes.clear()
         mig_entries = mig_bytes = 0
         if ops:
             mig_entries, mig_bytes = migration_traffic(
@@ -701,7 +852,26 @@ class EpochDriver:
             )
             self.store = execute_migrations(self.store, ops)
             events.extend(f"{op.kind}:{op.src}->{op.dst}" for op in ops)
-        self.directory = self.controller.refresh(self.directory)
+        if self.cfg.split_overflow:
+            sops = self._capacity_splits(report)
+            if sops:
+                en, by = migration_traffic(self.store, sops, scfg.value_dim)
+                self.store = execute_migrations(self.store, sops)
+                mig_entries += en
+                mig_bytes += by
+                events.extend(f"{op.kind}:{op.src}->{op.dst}" for op in sops)
+        if self.controller.num_slots != self.directory.chains.shape[0]:
+            # the slot pool grew under split_overflowed: shapes changed,
+            # so refresh refuses by design — rebuild the device directory
+            # and recompile the step.  The live counters were harvested
+            # and reset by this very pull, so pending merge credits would
+            # land on zeros; drop them with the old tables.
+            self.controller.drop_credits()
+            self.directory = self.controller.directory()
+            self._rebuild_step()
+            events.append(f"grow_pool:{self.controller.num_slots}")
+        else:
+            self.directory = self.controller.refresh(self.directory)
         self._sync_repl()
         if self.auto_period:
             nl = np.asarray(report.node_load, np.float64)
@@ -750,6 +920,45 @@ class EpochDriver:
         self._next_pull = now + self._cur_period
         self.period_history.append(self._cur_period)
 
+    def _capacity_splits(self, report) -> list:
+        """Capacity-driven splitting in the loop (paper §4.1.1): for each
+        node whose store overflowed since the last pull, split the hottest
+        live range it heads (``Controller.split_overflowed`` — which grows
+        the slot pool when exhausted; the caller rebuilds the step)."""
+        ovf = self._sync(self.store.overflow).astype(np.int64)
+        delta = ovf - self._ovf_node_last
+        self._ovf_node_last = ovf
+        hot_nodes = [int(n) for n in np.argsort(-delta) if delta[n] > 0]
+        if not hot_nodes:
+            return []
+        heat = (report.read_count + report.write_count).astype(np.float64)
+        ctl = self.controller
+        ops = []
+        for node in hot_nodes:
+            cands = [r for r in ctl.live_ranges()
+                     if int(ctl.chain_nodes(r)[0]) == node]
+            if not cands:
+                continue
+            # ranges born mid-loop (post-harvest) carry no heat yet
+            ridx = max(cands,
+                       key=lambda r: heat[r] if r < heat.size else 0.0)
+            ops.extend(ctl.split_overflowed(ridx, report.node_load))
+        return ops
+
+    def _rebuild_step(self) -> None:
+        """Recompile the device step after a pool growth (the one control
+        action that changes array shapes).  The old program's compile
+        count is banked in ``_trace_base`` so :attr:`traces` reports
+        exactly ``1 + growth_events`` when recompiles only follow
+        growth — the no-silent-retrace gate, now growth-aware."""
+        if self.fused:
+            self._trace_base += _jit_cache_size(self._period_fn, 0)
+            self._period_fn = self._build_oracle_period(self.mode_plan)
+        else:
+            self._trace_base += _jit_cache_size(self._step, 0)
+            self._step = self._build_oracle_step(self.mode_plan)
+        self.growth_events += 1
+
     # -- the per-epoch reference loop --------------------------------------
     def run_epoch(self, e: int) -> EpochMetrics:
         """One epoch, one host round-trip (the ``fused=False`` loop the
@@ -771,9 +980,9 @@ class EpochDriver:
         )
         rng = jax.random.fold_in(self.key, e)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         plan, node_ops, retries, bounced) = self._step(
+         self.ovl, plan, node_ops, retries, bounced, ostats) = self._step(
             self.store, self.directory, self.load_reg, self.sketch,
-            self.repl, q, rng
+            self.repl, self.ovl, q, rng
         )
 
         self.host_syncs += 1   # the DES engine pulls the plan to the host
@@ -798,16 +1007,21 @@ class EpochDriver:
         (clean_p99,) = masked_p99_batch(lat, is_read & ~bounced_h)
         dirty_reads = int(bounced_h.sum())
 
-        live = np.array(
-            [n not in self.controller.failed for n in range(cfg.num_nodes)]
-        )
+        live = self._live_mask()
         (imb,), (cov,) = imbalance_stats_batch(
             self._sync(node_ops)[None], live
         )
 
+        # drops = pure store-capacity overflow delta; the overload plane's
+        # shed/requeued/lost travel separately (the satellite fix for the
+        # old conflation of capacity events with shed traffic)
         overflow_now = int(self._sync(self.store.overflow).sum())
         drops = overflow_now - self._last_overflow
         self._last_overflow = overflow_now
+        if self.ovl is not None:
+            ost = self._sync(ostats).astype(np.int64)
+        else:
+            ost = np.zeros((len(OVL.STAT_FIELDS),), np.int64)
 
         # ---- control pull: the only counter/load-register reset path ----
         pull = ((e + 1) == self._next_pull if self.auto_period
@@ -840,7 +1054,24 @@ class EpochDriver:
             clean_read_p99=float(clean_p99),
             dirty_reads=dirty_reads,
             replication=cfg.replication_mode,
+            deferred=int(ost[2]),
+            shed=int(ost[3]),
+            requeued=int(ost[4]),
+            lost=int(ost[5]),
+            queue_peak=int(ost[6]),
         )
+
+    def _live_mask(self) -> np.ndarray:
+        """(N,) bool serving mask: failed AND standby nodes are out of the
+        imbalance denominator (a parked node's zero load is by design)."""
+        out = self.controller.failed | self.controller.standby
+        return np.array([n not in out for n in range(self.cfg.num_nodes)])
+
+    def overload_summary(self) -> dict:
+        """Host snapshot of the overload plane (empty when disabled)."""
+        if self.ovl is None:
+            return {}
+        return OVL.summary(self.ovl)
 
     # -- the fused period loop ---------------------------------------------
     def _segment_len(self, e0: int, n: int) -> int:
@@ -885,18 +1116,22 @@ class EpochDriver:
         )
         live = jnp.asarray(np.arange(P) < L)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         plan, node_ops, retries, ovf, bounced) = self._period_fn(
+         self.ovl, plan, node_ops, retries, ovf, bounced, ostats
+         ) = self._period_fn(
             self.store, self.directory, self.load_reg, self.sketch,
-            self.repl, qs, rngs, live,
+            self.repl, self.ovl, qs, rngs, live,
         )
         return (jax.tree.map(lambda x: x[:L], plan),
-                node_ops[:L], retries[:L], ovf[:L], bounced[:L], opcodes_h)
+                node_ops[:L], retries[:L], ovf[:L], bounced[:L], ostats[:L],
+                opcodes_h)
 
     def _step_segment(self, e0: int, L: int):
         """Dist-backend segment: per-epoch device steps (shard_map programs
         do not nest under a scan) with all host syncs deferred to the
         period boundary — plans/metrics stay on device until then."""
-        plans, nops_l, rtr_l, ovf_l, bnc_l, op_l = [], [], [], [], [], []
+        plans, nops_l, rtr_l, ovf_l, bnc_l, ost_l, op_l = (
+            [], [], [], [], [], [], []
+        )
         for i in range(L):
             opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
             self._note_keys(keys)
@@ -907,28 +1142,30 @@ class EpochDriver:
             )
             rng = jax.random.fold_in(self.key, e0 + i)
             (self.store, self.directory, self.load_reg, self.sketch,
-             self.repl, plan, node_ops, retries, bounced) = self._step(
+             self.repl, self.ovl, plan, node_ops, retries, bounced,
+             ostats) = self._step(
                 self.store, self.directory, self.load_reg, self.sketch,
-                self.repl, q, rng
+                self.repl, self.ovl, q, rng
             )
             plans.append(plan)
             nops_l.append(node_ops)
             rtr_l.append(retries)
             ovf_l.append(jnp.sum(self.store.overflow))
             bnc_l.append(bounced)
+            ost_l.append(ostats)
         plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
         return (plan, jnp.stack(nops_l), jnp.stack(rtr_l), jnp.stack(ovf_l),
-                jnp.stack(bnc_l), np.stack(op_l))
+                jnp.stack(bnc_l), jnp.stack(ost_l), np.stack(op_l))
 
     def _run_segment(self, e0: int, n: int) -> list[EpochMetrics]:
         ev0, en0, by0 = self._handle_events(e0)
         L = self._segment_len(e0, n)
         if self.backend == "oracle":
-            plan, node_ops, retries, ovf, bounced, opcodes_h = (
+            plan, node_ops, retries, ovf, bounced, ostats, opcodes_h = (
                 self._scan_segment(e0, L)
             )
         else:
-            plan, node_ops, retries, ovf, bounced, opcodes_h = (
+            plan, node_ops, retries, ovf, bounced, ostats, opcodes_h = (
                 self._step_segment(e0, L)
             )
 
@@ -959,12 +1196,14 @@ class EpochDriver:
         read_p99s = masked_p99_batch(lat, is_read)
         clean_p99s = masked_p99_batch(lat, is_read & ~bounced_h)
         dirty_counts = bounced_h.sum(axis=1)
-        live = np.array(
-            [m not in self.controller.failed for m in range(cfg.num_nodes)]
-        )
+        live = self._live_mask()
         imbs, covs = imbalance_stats_batch(node_ops_h, live)
         drops = np.diff(ovf_h, prepend=np.int64(self._last_overflow))
         self._last_overflow = int(ovf_h[-1])
+        if self.ovl is not None:
+            ost_h = self._sync(ostats).astype(np.int64)        # (L, 7)
+        else:
+            ost_h = np.zeros((L, len(OVL.STAT_FIELDS)), np.int64)
 
         pulled = ((e0 + L) == self._next_pull if self.auto_period
                   else (e0 + L) % self.period == 0)
@@ -1008,6 +1247,11 @@ class EpochDriver:
                 clean_read_p99=float(clean_p99s[i]),
                 dirty_reads=int(dirty_counts[i]),
                 replication=cfg.replication_mode,
+                deferred=int(ost_h[i, 2]),
+                shed=int(ost_h[i, 3]),
+                requeued=int(ost_h[i, 4]),
+                lost=int(ost_h[i, 5]),
+                queue_peak=int(ost_h[i, 6]),
             ))
         return rows
 

@@ -37,6 +37,12 @@ class EpochMetrics:
     retries: int              # bucket overflows (dist backend; 0 for oracle)
     compiled_steps: int       # cumulative device-step trace count
     events: list[str] = dataclasses.field(default_factory=list)
+    # ---- overload observables (repro.overload; all 0 when disabled) ----
+    deferred: int = 0         # admission-gated queries (client backpressure)
+    shed: int = 0             # queue-full rejections entering retry orbit
+    requeued: int = 0         # backoff retries re-admitted this epoch
+    lost: int = 0             # retries escaping past the top backoff level
+    queue_peak: int = 0       # max per-node queue occupancy after the epoch
     # ---- replication-mode observables (repro.replication) ----
     p999: float = 0.0         # extreme tail (p99.9) over all ops
     read_p99: float = 0.0     # p99 over GET/SCAN ops only
@@ -188,5 +194,11 @@ def summarize(rows: list[EpochMetrics]) -> dict:
         "total_migration_bytes": int(f("migration_bytes").sum()),
         "total_drops": int(f("drops").sum()),
         "total_retries": int(f("retries").sum()),
+        "total_deferred": int(f("deferred").sum()),
+        "total_shed": int(f("shed").sum()),
+        "total_requeued": int(f("requeued").sum()),
+        "total_lost": int(f("lost").sum()),
+        "max_queue_peak": int(f("queue_peak").max()),
+        "max_p999": float(f("p999").max()),
         "compiled_steps": int(rows[-1].compiled_steps),
     }

@@ -69,6 +69,22 @@ class PolicyConfig:
     # rows; long-running deployments should set a bound.
     max_lineage_depth: int | None = None
 
+    # ---- overload backpressure (repro.overload; OverloadAdaptivePolicy) ----
+    # AIMD admission control on queue occupancy (depth / queue_limit):
+    admit_hi: float = 0.75        # above -> multiplicative decrease
+    admit_lo: float = 0.25        # below -> additive recovery
+    admit_decrease: float = 0.5   # the multiplicative cut
+    admit_increase: float = 0.1   # the additive step back toward 1.0
+    admit_floor: float = 0.05     # never fully closed (probes recovery)
+    # retry budget as a fraction of the per-epoch service rate: caps how
+    # much of a synchronized backlog release re-enters per epoch
+    retry_frac: float = 0.25
+    # capacity autoscale bands on mean queue occupancy over serving nodes
+    scale_up_util: float = 0.5    # above (or any retry backlog) -> activate
+    scale_down_util: float = 0.1  # below, with empty backlog -> park
+    scale_patience: int = 2       # consecutive reports before acting
+    min_serving: int = 2          # never park below this many live nodes
+
 
 class Policy:
     """Base policy: freeze the directory (no control actions at all)."""
@@ -165,7 +181,10 @@ class _SplitMergeMixin:
             return ops
 
         # ---- splits: hottest ranges first, boundary at the sketch median
-        budget = cfg.max_splits_per_round
+        # (budget_scale: cadence-aware — k epochs of report get k rounds'
+        # worth; 1.0 on fixed cadence, so the integer is unchanged there)
+        budget = max(1, int(round(cfg.max_splits_per_round
+                                  * report.budget_scale)))
         for ridx in np.argsort(np.where(live, heat, -1.0))[::-1]:
             ridx = int(ridx)
             if budget <= 0 or heat[ridx] <= cfg.split_factor * mean:
@@ -265,7 +284,9 @@ class ReplicatePolicy(Policy):
             return ops
         nl = report.node_load.astype(np.float64).copy()
         clen = controller.chain_lengths().astype(np.float64)
-        budget = cfg.max_widen_per_round
+        # cadence-aware widen budget (1.0 scale on fixed cadence)
+        budget = max(1, int(round(cfg.max_widen_per_round
+                                  * report.budget_scale)))
 
         # hottest per live replica first: a wide warm chain is already
         # fine; dead slots and fully-spliced chains (clen 0) carry no
@@ -332,12 +353,112 @@ class FullAdaptivePolicy(_SplitMergeMixin, ReplicatePolicy):
         return ops
 
 
+class OverloadAdaptivePolicy(FullAdaptivePolicy):
+    """Everything on, plus the survival layer (repro.overload):
+
+    * **AIMD admission control** — queue occupancy above ``admit_hi``
+      multiplicatively cuts that node's admission probability (explicit
+      client backpressure instead of queue collapse); occupancy below
+      ``admit_lo`` additively recovers it toward 1.0, with a floor so
+      recovery is always probed;
+    * **retry budgeting** — released backoff retries are capped at
+      ``retry_frac`` of the service rate per node per epoch, so a
+      synchronized backlog release (the retry storm) cannot re-overrun
+      the queues it just drained;
+    * **capacity autoscale** — mean occupancy over serving nodes above
+      ``scale_up_util`` (or any standing retry backlog) for
+      ``scale_patience`` straight reports activates a standby node
+      (``Controller.activate_node``); occupancy below ``scale_down_util``
+      with an empty backlog parks the least-loaded node back into the
+      reserve (``Controller.park_node`` — its repair-copy drain rides the
+      returned migration plan, journaled through ``repl_log``).
+
+    The control channel is attribute-based: the epoch driver grafts
+    ``admit_prob`` / ``retry_budget`` onto the device registers after
+    each report and drains ``notes`` into the epoch's event log.  Without
+    an overload plane (``queue_limit == 0``) this is exactly
+    ``full_adaptive``.
+    """
+
+    name = "overload_adaptive"
+
+    def __init__(self, config: PolicyConfig | None = None):
+        super().__init__(config)
+        self.admit_prob: np.ndarray | None = None
+        self.retry_budget: np.ndarray | None = None
+        self.notes: list[str] = []
+        self._hi_rounds = 0
+        self._lo_rounds = 0
+
+    def on_report(self, controller, report):
+        ops = super().on_report(controller, report)
+        ops.extend(self._backpressure(controller, report))
+        return ops
+
+    def _backpressure(self, controller: Controller, report: StatsReport
+                      ) -> list[MigrationOp]:
+        cfg = self.config
+        if report.queue_limit <= 0 or report.queue_depth is None:
+            return []
+        N = report.node_load.shape[0]
+        # pressure signal: post-drain queue depth alone understates a
+        # node in trouble (a full queue that drains service_rate looks
+        # calm), so fold in its retry backlog — queries the node already
+        # turned away that are coming back
+        rb = (report.retry_backlog.astype(np.float64)
+              if report.retry_backlog is not None
+              else np.zeros(report.queue_depth.shape[0]))
+        occ = ((report.queue_depth.astype(np.float64) + rb)
+               / float(report.queue_limit))
+        ap = (self.admit_prob if self.admit_prob is not None
+              else np.ones(N, np.float64))
+        ap = np.where(
+            occ > cfg.admit_hi, ap * cfg.admit_decrease,
+            np.where(occ < cfg.admit_lo,
+                     np.minimum(ap + cfg.admit_increase, 1.0), ap),
+        )
+        self.admit_prob = np.clip(ap, cfg.admit_floor, 1.0)
+        self.retry_budget = np.full(
+            N, max(1, int(cfg.retry_frac * report.service_limit)), np.int64
+        )
+
+        # ---- autoscale: band + patience on serving-node occupancy ----
+        serving = controller.live_nodes()
+        util = float(occ[serving].mean()) if serving else 0.0
+        backlog = (int(report.retry_backlog.sum())
+                   if report.retry_backlog is not None else 0)
+        if util > cfg.scale_up_util or backlog > 0:
+            self._hi_rounds += 1
+            self._lo_rounds = 0
+        elif util < cfg.scale_down_util and backlog == 0:
+            self._lo_rounds += 1
+            self._hi_rounds = 0
+        else:
+            self._hi_rounds = self._lo_rounds = 0
+
+        ops: list[MigrationOp] = []
+        if self._hi_rounds >= cfg.scale_patience and controller.standby:
+            node = min(controller.standby)
+            controller.activate_node(node)
+            self.notes.append(f"autoscale_up:{node}")
+            self._hi_rounds = 0
+        elif (self._lo_rounds >= cfg.scale_patience
+              and len(serving) - 1 >= max(cfg.min_serving,
+                                          cfg.base_replication)):
+            node = min(serving, key=lambda n: report.node_load[n])
+            ops.extend(controller.park_node(node, report.node_load))
+            self.notes.append(f"autoscale_down:{node}")
+            self._lo_rounds = 0
+        return ops
+
+
 POLICIES = {
     "frozen": Policy,
     "migrate": MigratePolicy,
     "replicate": ReplicatePolicy,
     "split_hot": SplitHotPolicy,
     "full_adaptive": FullAdaptivePolicy,
+    "overload_adaptive": OverloadAdaptivePolicy,
 }
 
 

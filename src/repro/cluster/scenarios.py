@@ -35,6 +35,17 @@ Scenario zoo:
   replication-mode comparison (``repro.replication``) runs — chain-mode
   write broadcasts and CRAQ dirty windows both scale with the update
   share, which the read-heavy default mixes barely exercise.
+* ``cascade_failure`` — overload stressor: a whole rack dies mid-run
+  while the offered load stays constant, so the survivors inherit the
+  dead rack's traffic on top of their own.  Without admission control
+  the survivor queues collapse (service inflation compounds the
+  backlog); with ``repro.overload`` + standby activation the cluster
+  sheds, backs off, and recruits spare capacity instead.
+* ``retry_storm``     — overload stressor: a rack blinks out and comes
+  back a few epochs later.  Every query shed during the outage re-fires
+  on its backoff schedule, so recovery is greeted by a synchronized
+  retry wave on top of fresh load — the classic thundering-herd /
+  metastable-failure shape bounded backoff budgets exist to break.
 """
 
 from __future__ import annotations
@@ -325,6 +336,61 @@ class RackFailureHotspot(ShiftingHotspot):
         return ev
 
 
+class CascadeFailure(Scenario):
+    """Capacity-loss overload: stationary Zipf heat, constant offered
+    load, and at ``fail_epoch`` a whole rack drops dead for the rest of
+    the run.  The survivors must absorb the dead rack's share — offered
+    load per live node jumps by ``N / (N - len(rack))`` — which drives
+    queue occupancy (and with it the occupancy-dependent service
+    inflation of ``repro.overload``) into the unstable regime unless the
+    control plane sheds load and activates standby capacity.
+    """
+
+    name = "cascade_failure"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.9,
+                 fail_epoch: int = 3, rack: tuple[int, ...] = (0, 1, 2)):
+        super().__init__(cfg, theta=theta)
+        self.fail_epoch = fail_epoch
+        self.rack = tuple(int(n) for n in rack)
+
+    def events(self, epoch: int) -> list[tuple[str, object]]:
+        if epoch == self.fail_epoch:
+            return [("rack_fail", self.rack)]
+        return []
+
+
+class RetryStorm(Scenario):
+    """Transient outage + synchronized retries: a rack fails at
+    ``fail_epoch`` and recovers at ``recover_epoch``.  Queries shed
+    during the outage sit in the backoff orbit and re-arrive together
+    once their timers expire — so the moment capacity returns, the
+    cluster faces fresh load *plus* the accumulated retry wave.  An
+    uncontrolled loop melts down exactly when it should be recovering
+    (the metastable-failure signature); bounded retry budgets and
+    admission probabilities let the wave drain instead of re-shedding
+    into ever-higher backoff levels.
+    """
+
+    name = "retry_storm"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 0.9,
+                 fail_epoch: int = 2, recover_epoch: int = 5,
+                 rack: tuple[int, ...] = (0, 1)):
+        super().__init__(cfg, theta=theta)
+        self.fail_epoch = fail_epoch
+        self.recover_epoch = recover_epoch
+        self.rack = tuple(int(n) for n in rack)
+
+    def events(self, epoch: int) -> list[tuple[str, object]]:
+        ev: list[tuple[str, object]] = []
+        if epoch == self.fail_epoch:
+            ev.append(("rack_fail", self.rack))
+        if epoch == self.recover_epoch:
+            ev.extend(("recover", n) for n in self.rack)
+        return ev
+
+
 SCENARIOS = {
     "stationary": Scenario,
     "shifting_hotspot": ShiftingHotspot,
@@ -335,6 +401,8 @@ SCENARIOS = {
     "keyspace_growth": KeyspaceGrowth,
     "rack_failure_hotspot": RackFailureHotspot,
     "ycsb_a": YcsbA,
+    "cascade_failure": CascadeFailure,
+    "retry_storm": RetryStorm,
 }
 
 

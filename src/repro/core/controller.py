@@ -51,6 +51,11 @@ class Controller:
         self._dir = _to_numpy(directory)
         self.hash_partitioned = directory.hash_partitioned
         self.failed: set[int] = set()
+        # capacity-autoscale reserve: drained nodes held out of every
+        # placement decision (balance / widen / repair targets) but not
+        # *failed* — ``activate_node`` returns one to service instantly,
+        # no repair copies needed because it rejoins empty
+        self.standby: set[int] = set()
         self.log: list[str] = []
         # merge bookkeeping: (dead_child, absorber) pairs whose *live*
         # device counters must be credited over at the next refresh
@@ -148,7 +153,10 @@ class Controller:
         return self._dir["chains"].shape[1]
 
     def live_nodes(self) -> list[int]:
-        return [n for n in range(self.num_nodes) if n not in self.failed]
+        return [
+            n for n in range(self.num_nodes)
+            if n not in self.failed and n not in self.standby
+        ]
 
     def live_ranges(self) -> list[int]:
         """Slot indices of the live records."""
@@ -191,12 +199,18 @@ class Controller:
         cfg = self.config
         d = self._dir
         load = report.node_load.astype(np.float64).copy()
-        live_node = np.array([n not in self.failed for n in range(self.num_nodes)])
+        out = self.failed | self.standby
+        live_node = np.array([n not in out for n in range(self.num_nodes)])
         ops: list[MigrationOp] = []
         heat = (report.read_count + report.write_count).astype(np.float64)
         heat = np.where(d["live"], heat, 0.0)  # dead slots carry no weight
 
-        for _ in range(cfg.max_moves_per_round):
+        # cadence-aware budget: a realized period of k epochs gets k
+        # rounds' worth of moves, so pull_every="auto" doesn't change the
+        # migration *rate* (budget_scale is 1.0 on fixed cadence — same
+        # integer, bit-identical behaviour)
+        budget = max(1, int(round(cfg.max_moves_per_round * report.budget_scale)))
+        for _ in range(budget):
             mean = load[live_node].mean() if live_node.any() else 0.0
             hot_node = int(np.where(live_node, load, -np.inf).argmax())
             if mean <= 0 or load[hot_node] <= cfg.imbalance_threshold * mean:
@@ -413,6 +427,14 @@ class Controller:
         self.log.append(f"grow_pool: {self.num_slots - extra} -> {self.num_slots} slots")
         return self.num_slots
 
+    def drop_credits(self) -> None:
+        """Discard pending merge counter credits.  Only correct right
+        after a ``stats.pull_report`` (the live counters are zero, so the
+        credits would transfer nothing anyway) — the epoch driver uses it
+        when a pool growth forces a full :meth:`directory` rebuild that
+        bypasses :meth:`refresh`."""
+        self._credits = []
+
     def drain_repl_log(self) -> list[tuple]:
         """Hand the accumulated replication-state events to the driver
         (and clear them) — the replication analogue of ``_credits``."""
@@ -529,7 +551,7 @@ class Controller:
             if node_load is not None
             else np.zeros(self.num_nodes)
         )
-        live_nodes = [n for n in range(self.num_nodes) if n not in self.failed]
+        live_nodes = self.live_nodes()
         if not live_nodes:
             raise RuntimeError("all storage nodes failed")
 
@@ -583,6 +605,40 @@ class Controller:
         self.log.append(f"recover: node {node} back in service")
 
     # ------------------------------------------------------------------
+    # capacity autoscaling: drain a node into the standby reserve when
+    # load subsides, activate it back when utilization crosses the band
+    # ------------------------------------------------------------------
+    def park_node(self, node: int, node_load: np.ndarray | None = None) -> list[MigrationOp]:
+        """Drain ``node`` into the standby reserve (autoscale release).
+
+        Its chains are spliced and re-replicated exactly like a failure —
+        every span it served gets a repair copy on a live node, journaled
+        through ``repl_log`` so replication state stays coherent — but the
+        node lands in ``standby`` rather than ``failed``:
+        :meth:`activate_node` returns it to service instantly (it rejoins
+        empty; no repair needed).  No-op if already parked.
+        """
+        if node in self.standby:
+            return []
+        self.standby.add(node)
+        ops = self.handle_node_failure(node, node_load)
+        self.failed.discard(node)
+        self.log.append(f"park: node {node} drained to standby")
+        return ops
+
+    def activate_node(self, node: int) -> None:
+        """Return a standby node to service (autoscale grow).
+
+        The node rejoins empty — the balancer (and failure repair) start
+        placing ranges on it from the next control round.
+        """
+        if node not in self.standby:
+            return
+        self.standby.discard(node)
+        self.failed.discard(node)
+        self.log.append(f"activate: node {node} joins from standby")
+
+    # ------------------------------------------------------------------
     # capacity overflow (paper §4.1.1): split the sub-range, migrate half
     # ------------------------------------------------------------------
     def split_overflowed(self, ridx: int, node_load: np.ndarray) -> list[MigrationOp]:
@@ -602,7 +658,7 @@ class Controller:
             return []
 
         # move the child (upper) half's head to the least-loaded node
-        live = [n for n in range(self.num_nodes) if n not in self.failed]
+        live = self.live_nodes()
         old_head = int(d["chains"][child, 0])
         target = min((n for n in live if n != old_head), key=lambda n: node_load[n], default=None)
         ops: list[MigrationOp] = []

@@ -149,6 +149,8 @@ def plan_hops(
     service_model: ServiceModel | None = None,
     read_via: jnp.ndarray | None = None,
     read_bounce: jnp.ndarray | None = None,
+    shed: jnp.ndarray | None = None,
+    service_scale: jnp.ndarray | None = None,
 ) -> HopPlan:
     """Build the per-query hop plan for a coordination model.
 
@@ -173,6 +175,15 @@ def plan_hops(
     deterministic — they model switch/coordinator work, not the store).
     ``None``/``fixed`` reproduces the deterministic model bit for bit,
     including the server-driven coordinator draw.
+
+    ``shed`` (B,) bool marks queries rejected by the overload plane
+    (:mod:`repro.overload` admission/queue decisions): their plan visits
+    no node at all — the DES completes them with ~one link of latency,
+    the cheap NACK the switch returns without touching storage.
+    ``service_scale`` (B,) float32 multiplies the per-query *storage
+    service* cost (occupancy-dependent inflation behind a deep admission
+    queue); lookup/coordination overheads stay deterministic.  ``None``
+    for both reproduces the pre-overload plans bit for bit.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
@@ -216,6 +227,8 @@ def plan_hops(
         # deterministic model's coordinator draws are unchanged
         rng, r_service = jax.random.split(rng)
         base = base * service_model.draw(r_service, (B, r_max))
+    if service_scale is not None:
+        base = base * service_scale[:, None].astype(jnp.float32)
     if rb is not None:
         # the bounced read's first visit is a version check + forward at
         # the dirty replica, not a storage op: deterministic lookup cost
@@ -257,6 +270,12 @@ def plan_hops(
         )
         service = jnp.concatenate([first_service, rest_service], axis=1)
         extra_entry = 0
+
+    if shed is not None:
+        # rejected by the overload plane: the "switch" NACKs without any
+        # storage visit — an all-dead row the DES completes in ~one link
+        nodes = jnp.where(shed[:, None], NO_HOP, nodes)
+        service = jnp.where(shed[:, None], 0.0, service)
 
     # link count: client->first + inter-hop links + reply
     n_visits = jnp.sum((nodes != NO_HOP).astype(jnp.float32), axis=1)

@@ -125,6 +125,13 @@ class DistConfig:
     # vectors.  "chain" needs no dist-side change (tail reads == the
     # read_spread=False path); "eventual" is the unchanged default.
     replication_mode: str = "eventual"
+    # admission-queue penalty (repro.overload): the spread/craq apply
+    # signatures gain a replicated (N,) ``queue_pen`` input after
+    # load_reg, added to the load registers in the p2c comparison only
+    # (routing.route_load_aware queue_pen — raw registers still bump),
+    # so deep-queued nodes shed read traffic in-mesh too.  Ignored for
+    # the deterministic tail-read path.
+    queue_pen: bool = False
 
 
 def _local_slab(store: StoreState):
@@ -165,7 +172,7 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
                          "(apportioned reads are the protocol)")
 
     def per_device(store: StoreState, directory: Directory, q: R.QueryBatch,
-                   load_reg=None, rng=None, dirty=None):
+                   load_reg=None, rng=None, dirty=None, queue_pen=None):
         me = jax.lax.axis_index(axis)
         slab_keys, slab_vals = _local_slab(store)
         picked = bounced = None
@@ -175,11 +182,12 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             if craq:
                 # identical rng on every device -> identical global decision
                 decision, directory, load_reg, picked, bounced = (
-                    R.route_load_aware_dirty(directory, gq, load_reg, dirty, rng)
+                    R.route_load_aware_dirty(directory, gq, load_reg, dirty,
+                                             rng, queue_pen=queue_pen)
                 )
             elif spread:
                 decision, directory, load_reg = R.route_load_aware(
-                    directory, gq, load_reg, rng
+                    directory, gq, load_reg, rng, queue_pen=queue_pen
                 )
             else:
                 decision, directory = R.route(directory, gq)
@@ -228,7 +236,8 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             base_load = load_reg
             decision, directory, load_reg, picked, bounced = (
                 R.route_load_aware_dirty(
-                    directory, q, load_reg, dirty, jax.random.fold_in(rng, me)
+                    directory, q, load_reg, dirty, jax.random.fold_in(rng, me),
+                    queue_pen=queue_pen,
                 )
             )
             load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
@@ -236,7 +245,8 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             base_load = load_reg
             # distinct draws per device (each routes its own batch slice)
             decision, directory, load_reg = R.route_load_aware(
-                directory, q, load_reg, jax.random.fold_in(rng, me)
+                directory, q, load_reg, jax.random.fold_in(rng, me),
+                queue_pen=queue_pen,
             )
             load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
         else:
@@ -390,16 +400,30 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
             metric_spec.update({"picked": P(axis), "bounced": P(axis)})
 
     if craq:
-        def entry(store, directory, load_reg, dirty, q, rng):
-            return per_device(store, directory, q, load_reg, rng, dirty)
+        if cfg.queue_pen:
+            def entry(store, directory, load_reg, qpen, dirty, q, rng):
+                return per_device(store, directory, q, load_reg, rng, dirty,
+                                  qpen)
 
-        in_specs = (store_spec, dir_spec, P(), P(), q_spec, P())
+            in_specs = (store_spec, dir_spec, P(), P(), P(), q_spec, P())
+        else:
+            def entry(store, directory, load_reg, dirty, q, rng):
+                return per_device(store, directory, q, load_reg, rng, dirty)
+
+            in_specs = (store_spec, dir_spec, P(), P(), q_spec, P())
         out_specs = (store_spec, resp_spec, dir_spec, P(), metric_spec)
     elif spread:
-        def entry(store, directory, load_reg, q, rng):
-            return per_device(store, directory, q, load_reg, rng)
+        if cfg.queue_pen:
+            def entry(store, directory, load_reg, qpen, q, rng):
+                return per_device(store, directory, q, load_reg, rng, None,
+                                  qpen)
 
-        in_specs = (store_spec, dir_spec, P(), q_spec, P())
+            in_specs = (store_spec, dir_spec, P(), P(), q_spec, P())
+        else:
+            def entry(store, directory, load_reg, q, rng):
+                return per_device(store, directory, q, load_reg, rng)
+
+            in_specs = (store_spec, dir_spec, P(), q_spec, P())
         out_specs = (store_spec, resp_spec, dir_spec, P(), metric_spec)
     else:
         def entry(store, directory, q):

@@ -115,6 +115,8 @@ def route_load_aware(
     q: QueryBatch,
     load_reg: jnp.ndarray,
     rng: jax.Array,
+    *,
+    queue_pen: jnp.ndarray | None = None,
 ) -> tuple[RoutingDecision, D.Directory, jnp.ndarray]:
     """Key-based routing with power-of-two-choices read spreading.
 
@@ -133,13 +135,22 @@ def route_load_aware(
     chain-tail dirty-read subtlety of an asynchronous chain does not
     arise in the batch-converged store.
 
+    ``queue_pen`` ((N,) uint32, optional) adds a per-node penalty to the
+    load registers **for the p2c comparison only** (the raw registers are
+    still what gets bumped): the overload plane passes its scaled
+    admission-queue depths here so p2c reads steer away from nodes whose
+    queues are deep *before* those queues shed — mirrored bit-identically
+    by the ``range_match_spread*`` kernel wrappers, which fold the same
+    penalty into the padded load table (``kernels.range_match.ops``).
+
     Returns (decision, directory', load_reg') — counters and load
     registers bumped, shapes unchanged (jit-stable).
     """
     ridx, chain, clen, is_write = _match_and_fetch(directory, q)
     head = chain[:, 0]
 
-    picked, _ppos = _p2c_pick(chain, clen, load_reg, rng)
+    eff_load = load_reg if queue_pen is None else load_reg + queue_pen
+    picked, _ppos = _p2c_pick(chain, clen, eff_load, rng)
     target = jnp.where(is_write, head, picked)
     clength = jnp.where(is_write, clen + 1, 2)
 
@@ -199,6 +210,8 @@ def route_load_aware_dirty(
     load_reg: jnp.ndarray,
     dirty: jnp.ndarray,
     rng: jax.Array,
+    *,
+    queue_pen: jnp.ndarray | None = None,
 ) -> tuple[RoutingDecision, D.Directory, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """CRAQ apportioned reads: p2c replica pick + dirty-bit tail bounce.
 
@@ -223,7 +236,9 @@ def route_load_aware_dirty(
 
     # the identical p2c draw route_load_aware makes (shared helper), so
     # eventual and craq modes sample the same candidates given one rng
-    picked, ppos = _p2c_pick(chain, clen, load_reg, rng)
+    # (queue_pen biases the comparison only, exactly as there)
+    eff_load = load_reg if queue_pen is None else load_reg + queue_pen
+    picked, ppos = _p2c_pick(chain, clen, eff_load, rng)
 
     tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[:, None], axis=1)[:, 0]
     d_pick = dirty[ridx, ppos]

@@ -42,6 +42,17 @@ class StatsReport:
     the paper's "subset of the hot data" — something the per-record
     counters alone cannot resolve.  None when the driver does not plumb
     the sketch (plain controller pulls).
+
+    The overload fields are populated by the epoch driver when the
+    admission/queue subsystem (``repro.overload``) is enabled:
+    ``queue_depth`` / ``retry_backlog`` are the per-node queue occupancy
+    and outstanding retry counts at pull time, and ``queue_limit`` /
+    ``service_limit`` echo the static queue capacity and per-epoch
+    service rate so backpressure policies can normalize.  ``budget_scale``
+    is the realized control-period span relative to the nominal one-epoch
+    cadence — policies multiply their per-round move/widen/split budgets
+    by it so adaptive cadence (``pull_every="auto"``) does not silently
+    change the migration *rate*.
     """
 
     read_count: np.ndarray     # (S,)
@@ -51,6 +62,11 @@ class StatsReport:
     live: np.ndarray | None = None        # (S,) bool slot liveness
     key_sample: np.ndarray | None = None  # (M,) uint32 distinct sampled keys
     key_heat: np.ndarray | None = None    # (M,) float64 sketch estimates
+    queue_depth: np.ndarray | None = None    # (N,) int queue occupancy
+    retry_backlog: np.ndarray | None = None  # (N,) int outstanding retries
+    queue_limit: int = 0                     # queue capacity (0 = no overload)
+    service_limit: int = 0                   # per-epoch service rate
+    budget_scale: float = 1.0                # realized period / nominal cadence
 
     @property
     def total_ops(self) -> int:

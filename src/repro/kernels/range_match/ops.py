@@ -263,6 +263,7 @@ def range_match_spread(
     load_reg: jnp.ndarray,
     rng,
     *,
+    queue_pen: jnp.ndarray | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
@@ -273,9 +274,16 @@ def range_match_spread(
     counter/load-register bumps) given the same ``rng`` — asserted in
     ``tests/test_cluster.py``.  ``load_reg`` is the (N,) per-node load
     register the cluster epoch driver threads through the data plane.
+
+    ``queue_pen`` (optional (N,) int32) is added to the load registers
+    before the p2c comparison — the kernels never bump loads, so folding
+    the admission-queue penalty here is exactly
+    ``route_load_aware(..., queue_pen=...)``'s effective load.
     """
     if interpret is None:
         interpret = default_interpret()
+    if queue_pen is not None:
+        load_reg = load_reg + queue_pen.astype(load_reg.dtype)
     lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
     return _range_match_spread_packed(
         lo_p, hi_p, chains_p, clen_p, keys, opcodes, load_reg, rng,
@@ -348,6 +356,7 @@ def range_match_spread_dirty(
     dirty: jnp.ndarray,
     rng,
     *,
+    queue_pen: jnp.ndarray | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
@@ -358,9 +367,15 @@ def range_match_spread_dirty(
     (sans counter/load-register bumps) given the same ``rng`` and the
     (S, r_max) bool ``dirty`` table (``repro.replication.state``).
     Returns ``(ridx, target, chain, picked, bounced)``.
+
+    ``queue_pen`` folds the admission-queue penalty into the load
+    registers before the p2c comparison, mirroring
+    ``route_load_aware_dirty(..., queue_pen=...)``.
     """
     if interpret is None:
         interpret = default_interpret()
+    if queue_pen is not None:
+        load_reg = load_reg + queue_pen.astype(load_reg.dtype)
     lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
     dirty_p = pack_dirty(directory, dirty)
     return _range_match_spread_dirty_packed(

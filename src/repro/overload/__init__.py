@@ -1,0 +1,24 @@
+"""repro.overload — bounded admission queues, retry storms, backpressure.
+
+The survival layer over the adaptive-balancing loop: per-node admission
+queues with occupancy-dependent service inflation, explicit
+admit/defer/shed outcomes per routed query, exponential-backoff retry
+dynamics, and the control knobs (admission probability, retry budget)
+the backpressure policies steer.  See :mod:`repro.overload.state` for
+the model and the conservation invariant.
+"""
+
+from repro.overload.state import (
+    STAT_FIELDS,
+    OverloadConfig,
+    OverloadState,
+    conservation_gap,
+    make_state,
+    step,
+    summary,
+)
+
+__all__ = [
+    "STAT_FIELDS", "OverloadConfig", "OverloadState",
+    "conservation_gap", "make_state", "step", "summary",
+]

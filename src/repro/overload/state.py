@@ -1,0 +1,314 @@
+"""Bounded admission queues + retry-storm dynamics (the overload plane).
+
+TurboKV's monitoring loop (paper §5.1) balances load but never *sheds,
+queues, or grows*: a node pushed past its service capacity silently
+overflows buckets and the excess traffic vanishes from the accounting.
+Real deployments instead see the overload triad — bounded queues, retry
+storms, cascade failures (NetChain and P4DB both motivate keeping
+in-network state sound under exactly this regime).  This module is the
+device-resident half of that story:
+
+* every storage node carries a **bounded admission queue** (``queue_cap``
+  entries) drained at ``service_rate`` queries per epoch;
+* occupancy inflates service time — a query admitted behind a deep queue
+  pays ``1 + inflation * occupancy/queue_cap`` times the base storage
+  service (the DES plan's service matrix, not a synthetic constant);
+* every routed query receives an explicit outcome: **admitted** (joins
+  the queue), **deferred** (turned away by the per-node admission
+  probability — explicit client-visible backpressure, terminally
+  accounted), or **shed** (queue full — enters the retry backlog);
+* shed queries re-arrive in later epochs with **exponential backoff +
+  jitter** (``backoff_base * 2^level`` epochs, level escalating on every
+  re-shed); a query re-shed out of the top backoff level is **lost** —
+  the failure mode the survival gate requires to stay at zero;
+* the control plane steers two per-node knobs read from the period
+  report: ``admit_prob`` (admission probability) and ``retry_budget``
+  (released retries allowed to re-enter per epoch — the storm smoother).
+
+The whole state is a small shape-stable pytree carried (and donated)
+through the fused period ``lax.scan`` next to the store slabs and the
+replication register file; :func:`step` is pure and jittable.
+
+**Accounting plane, not a functional filter.**  Exactly as the three
+coordination models (paper §2.2) share one functional batch effect and
+differ only in the hop plan, the overload plane never blocks a query's
+*store* effect — the batch-converged store applies every op either way —
+it decides the query's **timing fate**: admitted queries get inflated
+service in their DES hop plan, deferred/shed queries get a rejection
+plan (no node visits — the DES completes them with ~one link of latency,
+the cheap NACK).  This keeps the store bit-identical across overload
+configurations and the fused/per-epoch/dist parity contracts intact.
+
+Conservation invariant (asserted in tests and the bench gate)::
+
+    cum_injected == cum_admitted + cum_requeued + cum_deferred
+                    + cum_lost + retry.sum()
+
+— every query ever injected is either serving/served (admitted as new or
+re-admitted from retry), explicitly refused (deferred), permanently lost
+(escaped the top backoff level), or still waiting in the retry backlog.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadConfig:
+    """Static knobs of the admission/queue plane (trace constants)."""
+
+    queue_cap: int = 64        # per-node admission queue bound
+    service_rate: int = 96     # queries drained per node per epoch
+    inflation: float = 3.0     # service multiplier slope vs. occupancy
+    backoff_base: int = 1      # retry delay at level 0 (epochs)
+    max_level: int = 4         # backoff levels; re-shed past the top -> lost
+    jitter_span: int = 2       # uniform extra delay in [0, jitter_span]
+    # weight of the queue depth in the p2c read-spreading penalty
+    # (routing.route_load_aware queue_pen — 0 disables the data-plane
+    # steer-away-from-deep-queues behaviour)
+    queue_weight: int = 0
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "queue", "retry", "timer", "admit_prob", "retry_budget",
+        "cum_injected", "cum_admitted", "cum_deferred", "cum_shed",
+        "cum_requeued", "cum_lost",
+    ),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class OverloadState:
+    """Device-resident per-node queue/retry registers.
+
+    queue:        (N,)   int32 admission-queue occupancy
+    retry:        (N, L) int32 shed queries awaiting retry, by backoff level
+    timer:        (N, L) int32 epochs until that level's bucket releases
+    admit_prob:   (N,)   float32 admission probability (control-plane set)
+    retry_budget: (N,)   int32 released retries admitted per epoch (ditto)
+    cum_*:        ()     int32 lifetime outcome counters
+    """
+
+    queue: jnp.ndarray
+    retry: jnp.ndarray
+    timer: jnp.ndarray
+    admit_prob: jnp.ndarray
+    retry_budget: jnp.ndarray
+    cum_injected: jnp.ndarray
+    cum_admitted: jnp.ndarray
+    cum_deferred: jnp.ndarray
+    cum_shed: jnp.ndarray
+    cum_requeued: jnp.ndarray
+    cum_lost: jnp.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return self.queue.shape[0]
+
+    @property
+    def backlog(self) -> jnp.ndarray:
+        """Scalar retry backlog (queries waiting to re-arrive)."""
+        return jnp.sum(self.retry)
+
+
+def make_state(num_nodes: int, cfg: OverloadConfig) -> OverloadState:
+    """Fresh overload plane: empty queues, open admission, an effectively
+    unlimited retry budget (the *uncontrolled* dynamics — policies that
+    close the loop lower both)."""
+    L = cfg.max_level
+    # distinct device buffers per leaf: the whole state is donated through
+    # the fused period scan, and XLA rejects donating one buffer twice
+    z = lambda: jnp.zeros((), jnp.int32)
+    return OverloadState(
+        queue=jnp.zeros((num_nodes,), jnp.int32),
+        retry=jnp.zeros((num_nodes, L), jnp.int32),
+        timer=jnp.zeros((num_nodes, L), jnp.int32),
+        admit_prob=jnp.ones((num_nodes,), jnp.float32),
+        retry_budget=jnp.full((num_nodes,), jnp.int32(2**30)),
+        cum_injected=z(), cum_admitted=z(), cum_deferred=z(),
+        cum_shed=z(), cum_requeued=z(), cum_lost=z(),
+    )
+
+
+# stat-vector layout shared with the epoch driver (one (7,) int32 row per
+# epoch so the fused scan can stack them without a dict-of-scalars pytree)
+STAT_FIELDS = (
+    "injected", "admitted", "deferred", "shed", "requeued", "lost",
+    "queue_peak",
+)
+
+
+def step(
+    state: OverloadState,
+    target: jnp.ndarray,
+    rng: jax.Array,
+    cfg: OverloadConfig,
+) -> tuple[OverloadState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One epoch of queue/retry dynamics (pure, jittable, shape-stable).
+
+    ``target``: (B,) int32 routed node per query (NO_NODE < 0 queries are
+    outside the overload plane — fully-spliced chains already produce a
+    dead hop plan).  Returns ``(state', rejected, service_scale, stats)``:
+
+    * ``rejected``      (B,) bool — deferred or shed: plan a rejection
+      (no node visits) for this query;
+    * ``service_scale`` (B,) float32 — occupancy-dependent service
+      multiplier for the admitted queries (1.0 for everything else);
+    * ``stats``         (7,) int32 — this epoch's outcome counts in
+      :data:`STAT_FIELDS` order.
+
+    Within the epoch: retry buckets whose backoff timer expires release
+    (most-escalated level first, capped by ``retry_budget``; the
+    over-budget remainder waits one more epoch without escalating);
+    released retries fill queue room before new arrivals; new arrivals
+    pass the per-node admission gate, then compete for the remaining room
+    in batch order; the queue drains ``service_rate`` at epoch end.
+    Shed new arrivals enter backoff level 0; re-shed releases escalate
+    one level (timer ``backoff_base * 2^level`` plus uniform jitter);
+    an escalation past the top level is a permanent loss.
+    """
+    N, L = state.retry.shape
+    B = target.shape[0]
+    occ = state.queue                                      # pre-epoch
+    r_gate, r_jit = jax.random.split(rng)
+
+    # ---- 1. backoff timers tick; expired buckets want to release ----
+    has = state.retry > 0
+    ticked = jnp.where(has, jnp.maximum(state.timer - 1, 0), 0)
+    ready = has & (ticked == 0)
+    want = jnp.where(ready, state.retry, 0)                # (N, L)
+
+    # retry budget caps re-entry per node, most-escalated level first
+    # (the oldest queries are closest to being lost); the held remainder
+    # keeps its level and retries next epoch
+    want_rev = want[:, ::-1]
+    cum_w = jnp.cumsum(want_rev, axis=1)
+    rel_rev = jnp.clip(state.retry_budget[:, None] - (cum_w - want_rev),
+                       0, want_rev)
+    released = rel_rev[:, ::-1]                            # (N, L)
+    held = want - released
+
+    # ---- 2. released retries fill queue room first (same priority) ----
+    room = jnp.maximum(cfg.queue_cap - occ, 0)             # (N,)
+    cum_r = jnp.cumsum(rel_rev, axis=1)
+    acc_rev = jnp.clip(room[:, None] - (cum_r - rel_rev), 0, rel_rev)
+    acc_rel = acc_rev[:, ::-1]                             # re-admitted
+    reshed = released - acc_rel                            # escalate
+    room2 = room - jnp.sum(acc_rel, axis=1)
+
+    # ---- 3. new arrivals: admission gate, then room in batch order ----
+    valid = target >= 0
+    t_safe = jnp.clip(target, 0, N - 1)
+    u = jax.random.uniform(r_gate, (B,))
+    gate = valid & (u < state.admit_prob[t_safe])
+    deferred_q = valid & ~gate
+    onehot = (t_safe[:, None] == jnp.arange(N)[None, :]) & gate[:, None]
+    rank = jnp.take_along_axis(
+        jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1,
+        t_safe[:, None], axis=1,
+    )[:, 0]
+    admitted_q = gate & (rank < room2[t_safe])
+    shed_q = gate & ~admitted_q
+    shed_new = jnp.zeros((N,), jnp.int32).at[t_safe].add(
+        shed_q.astype(jnp.int32)
+    )
+    adm_new = jnp.zeros((N,), jnp.int32).at[t_safe].add(
+        admitted_q.astype(jnp.int32)
+    )
+
+    # ---- 4. retry-table update: level 0 takes fresh sheds, escalations
+    # shift one level right, the top level's re-sheds are lost ----
+    lost_n = reshed[:, L - 1]
+    esc = jnp.concatenate(
+        [shed_new[:, None], reshed[:, : L - 1]], axis=1
+    )                                                      # (N, L) inflow
+    retry2 = state.retry - released + esc
+
+    # timers: inflow into an *empty* bucket arms level l at
+    # backoff_base * 2^l + jitter; inflow into a bucket that is still
+    # counting rides the existing countdown (re-arming on every merge
+    # would let sustained inflow defer the release forever — the bucket
+    # must fire on schedule for escalation, and loss, to ever happen);
+    # budget-held buckets retry next epoch (timer 1)
+    backoff = jnp.int32(cfg.backoff_base) * (
+        jnp.int32(1) << jnp.arange(L, dtype=jnp.int32)
+    )
+    jit_draw = jax.random.randint(r_jit, (N, L), 0, cfg.jitter_span + 1,
+                                  dtype=jnp.int32)
+    t_new = backoff[None, :] + jit_draw
+    remaining = state.retry - released
+    base_t = jnp.where(held > 0, jnp.maximum(ticked, 1), ticked)
+    timer2 = jnp.where((esc > 0) & (remaining == 0), t_new, base_t)
+    timer2 = jnp.where(retry2 > 0, jnp.maximum(timer2, 1), 0)
+
+    # ---- 5. queue drains service_rate at epoch end ----
+    filled = occ + jnp.sum(acc_rel, axis=1) + adm_new      # <= queue_cap
+    queue2 = jnp.maximum(filled - cfg.service_rate, 0)
+
+    # ---- 6. outcomes back onto the batch ----
+    rejected = deferred_q | shed_q
+    scale = 1.0 + jnp.float32(cfg.inflation) * (
+        occ[t_safe].astype(jnp.float32) / jnp.float32(cfg.queue_cap)
+    )
+    service_scale = jnp.where(admitted_q, scale, jnp.float32(1.0))
+
+    e = lambda x: jnp.sum(x).astype(jnp.int32)
+    injected = e(valid)
+    admitted = e(admitted_q)
+    deferred = e(deferred_q)
+    shed = e(shed_q)
+    requeued = e(acc_rel)
+    lost = e(lost_n)
+    stats = jnp.stack([
+        injected, admitted, deferred, shed, requeued, lost,
+        jnp.max(queue2).astype(jnp.int32),
+    ])
+
+    state2 = OverloadState(
+        queue=queue2,
+        retry=retry2,
+        timer=timer2,
+        admit_prob=state.admit_prob,
+        retry_budget=state.retry_budget,
+        cum_injected=state.cum_injected + injected,
+        cum_admitted=state.cum_admitted + admitted,
+        cum_deferred=state.cum_deferred + deferred,
+        cum_shed=state.cum_shed + shed,
+        cum_requeued=state.cum_requeued + requeued,
+        cum_lost=state.cum_lost + lost,
+    )
+    return state2, rejected, service_scale, stats
+
+
+def conservation_gap(state: OverloadState) -> int:
+    """``injected - (admitted + requeued + deferred + lost + backlog)`` —
+    zero iff the accounting closed (host-side check)."""
+    s = lambda x: int(np.asarray(x))
+    return s(state.cum_injected) - (
+        s(state.cum_admitted) + s(state.cum_requeued)
+        + s(state.cum_deferred) + s(state.cum_lost)
+        + int(np.asarray(state.retry).sum())
+    )
+
+
+def summary(state: OverloadState) -> dict:
+    """Host-side snapshot for benches/tests."""
+    s = lambda x: int(np.asarray(x))
+    return {
+        "injected": s(state.cum_injected),
+        "admitted": s(state.cum_admitted),
+        "deferred": s(state.cum_deferred),
+        "shed": s(state.cum_shed),
+        "requeued": s(state.cum_requeued),
+        "lost": s(state.cum_lost),
+        "retry_backlog": int(np.asarray(state.retry).sum()),
+        "queue_backlog": int(np.asarray(state.queue).sum()),
+        "conservation_gap": conservation_gap(state),
+    }

@@ -496,6 +496,7 @@ def test_policy_registry():
     from repro.cluster import POLICIES
     assert set(POLICIES) == {
         "frozen", "migrate", "replicate", "split_hot", "full_adaptive",
+        "overload_adaptive",
     }
     assert make_policy("replicate").read_spread
     assert not make_policy("migrate").read_spread

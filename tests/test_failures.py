@@ -139,3 +139,131 @@ def test_serving_failover_preserves_decode():
         return {rid: r.out_tokens for rid, r in eng.finished.items()}
 
     assert run(False) == run(True)
+
+
+# ---------------------------------------------------------------------------
+# PR 6 (S4): property-style interleavings — failures, recovery, racks,
+# and the autoscale reserve composed in random orders
+# ---------------------------------------------------------------------------
+
+def _coverage_ok(ctl, failed_or_parked):
+    """Every live range's chain avoids dead/parked nodes and has length
+    >= 1; the live ranges' spans cover the key space."""
+    d = ctl.directory()
+    chains = np.asarray(d.chains)
+    clen = np.asarray(d.chain_len)
+    spans = []
+    for r in ctl.live_ranges():
+        members = set(chains[r][: clen[r]].tolist())
+        assert clen[r] >= 1, f"range {r} lost its whole chain"
+        assert not (members & failed_or_parked), (
+            f"range {r} chain {members} touches {failed_or_parked}")
+        spans.append(ctl.range_span(r))
+    spans.sort()
+    lo0, hi_prev = spans[0][0], spans[0][1]
+    assert lo0 == 0
+    for lo, hi in spans[1:]:
+        assert lo == hi_prev + 1, f"gap at {hi_prev}..{lo}"
+        hi_prev = hi
+    assert hi_prev == K.KEY_SPACE - 1
+
+
+def test_random_failure_autoscale_interleavings():
+    """Random sequences of fail / recover / rack_fail / park / activate
+    keep (1) the directory covering the key space with chains that avoid
+    every dead or parked node, (2) the replication journal applying
+    cleanly onto a register file of matching shape, and (3) the loaded
+    data readable — the S4 robustness sweep for the overload PR."""
+    from repro import replication as RPL
+
+    for seed in range(4):
+        rng = np.random.default_rng(1000 + seed)
+        n_nodes, r = 9, 3
+        d, store, keys, vals = _loaded_system(
+            n_nodes=n_nodes, n_ranges=24, r=r, seed=seed)
+        d = C.make_directory(24, n_nodes, r, num_pods=3, seed=seed)
+        store = C.make_store(n_nodes, 256, 2)
+        q = C.make_queries(keys, jnp.full((len(keys),), C.OP_PUT),
+                           jnp.asarray(vals))
+        dec, d = C.route(d, q)
+        store, _ = C.apply_routed(store, q, dec)
+        ctl = C.Controller(d)
+        repl = RPL.make_state(ctl.num_slots, ctl.r_max)
+
+        for step in range(14):
+            out = ctl.failed | ctl.standby
+            live = [n for n in range(n_nodes) if n not in out]
+            action = rng.choice(
+                ["fail", "recover", "rack_fail", "park", "activate"])
+            ops = []
+            if action == "fail" and len(live) > r + 1:
+                ops = ctl.handle_node_failure(int(rng.choice(live)))
+            elif action == "recover" and ctl.failed:
+                ctl.recover_node(int(rng.choice(sorted(ctl.failed))))
+            elif action == "rack_fail":
+                pod = int(d.node_addr[rng.choice(live), 0])
+                rack = [n for n in live
+                        if int(d.node_addr[n, 0]) == pod]
+                if len(live) - len(rack) > r:
+                    ops = ctl.handle_switch_failure(rack)
+            elif action == "park" and len(live) > r + 1:
+                ops = ctl.park_node(int(rng.choice(live)))
+            elif action == "activate" and ctl.standby:
+                ctl.activate_node(int(rng.choice(sorted(ctl.standby))))
+            store = C.execute_migrations(store, ops)
+            repl = RPL.apply_events(repl, ctl.drain_repl_log())
+            assert repl.version.shape[0] == ctl.num_slots
+            _coverage_ok(ctl, ctl.failed | ctl.standby)
+            assert _all_readable(ctl.directory(), store, keys, vals), (
+                seed, step, action)
+
+
+def test_random_events_keep_overload_conserved():
+    """Driver-level S4: a scenario firing random fail/recover events under
+    an enabled overload plane never leaks a query — admitted + deferred +
+    lost + retry backlog always re-adds to the injected total, and the
+    per-epoch stat rows agree with the lifetime counters."""
+    from repro import overload as OVL
+    from repro.cluster import (ClusterConfig, EpochDriver, Scenario,
+                               ScenarioConfig, make_policy)
+
+    class RandomChaos(Scenario):
+        name = "random_chaos"
+
+        def __init__(self, cfg, seed=0):
+            super().__init__(cfg, theta=0.9)
+            rng = np.random.default_rng(seed)
+            self._events: dict[int, list] = {}
+            downed: set[int] = set()
+            for e in range(2, cfg.n_epochs):
+                if rng.random() < 0.5:
+                    continue
+                if downed and rng.random() < 0.5:
+                    n = int(rng.choice(sorted(downed)))
+                    downed.discard(n)
+                    self._events.setdefault(e, []).append(("recover", n))
+                elif len(downed) < 2:
+                    n = int(rng.integers(0, 8))
+                    if n not in downed:
+                        downed.add(n)
+                        self._events.setdefault(e, []).append(("fail", n))
+
+        def events(self, epoch):
+            return self._events.get(epoch, [])
+
+    scfg = ScenarioConfig(n_epochs=10, epoch_ops=256, n_records=512,
+                          value_dim=2, seed=5)
+    ocfg = OVL.OverloadConfig(queue_cap=24, service_rate=16, max_level=3)
+    for seed in (0, 1):
+        drv = EpochDriver(
+            RandomChaos(scfg, seed=seed),
+            make_policy("overload_adaptive"),
+            ClusterConfig(num_nodes=8, num_ranges=16, overload=ocfg,
+                          report_every=2, standby_nodes=(7,)))
+        rows = drv.run()
+        assert OVL.conservation_gap(drv.ovl) == 0, drv.overload_summary()
+        s = drv.overload_summary()
+        assert sum(r.ops for r in rows) == s["injected"]
+        assert sum(r.shed for r in rows) == s["shed"]
+        assert sum(r.lost for r in rows) == s["lost"]
+        assert sum(r.deferred for r in rows) == s["deferred"]
