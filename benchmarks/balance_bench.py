@@ -34,6 +34,13 @@ Extras:
   reporting compile vs steady-state epochs/s and host-sync counts, and
   **gating** on the fused driver beating the per-epoch one (the CI smoke
   ratio + host-sync gates);
+* ``--trace`` runs the telemetry parity column: the gate pair re-runs
+  with ``repro.telemetry`` span sampling enabled, asserting the
+  :class:`EpochMetrics` stream is **bit-identical** to the
+  telemetry-off run, the step still compiles once, and every sampled
+  span's latency decomposition reconstructs its DES latency exactly;
+  emits a Chrome-trace artifact (``TRACE_balance.json`` by default)
+  loadable in ``chrome://tracing`` / Perfetto;
 * ``--replication`` runs the ``repro.replication`` three-mode comparison
   (eventual / chain / craq over diurnal, write-heavy flash-crowd and
   YCSB-A mixes) with its own gates: craq clean-read p99 must not exceed
@@ -44,7 +51,8 @@ Extras:
 
 Run: ``PYTHONPATH=src python -m benchmarks.balance_bench
 [--quick] [--scenarios a,b] [--policies x,y] [--service kind] [--dist]
-[--period N|auto] [--profile] [--replication] [--json BENCH_balance.json]``
+[--period N|auto] [--profile] [--trace] [--replication]
+[--json BENCH_balance.json]``
 """
 
 from __future__ import annotations
@@ -205,7 +213,7 @@ def check_acceptance(rows, *, quick: bool = False) -> list[str]:
     """
     by = {(r["scenario"], r["policy"]): r for r in rows
           if r.get("backend", "oracle") == "oracle" and not r.get("profile")
-          and r.get("bench") != "replication"}
+          and not r.get("trace") and r.get("bench") != "replication"}
     problems = []
     f = by.get(("shifting_hotspot", "frozen"))
     a = by.get(("shifting_hotspot", "full_adaptive"))
@@ -321,6 +329,93 @@ def run_profile(quick: bool) -> tuple[list[dict], list[str]]:
     return rows, problems
 
 
+# the --trace pair: the adaptive-gate scenario under its winning policy
+TRACE_SCENARIO = "shifting_hotspot"
+TRACE_POLICY = "full_adaptive"
+TRACE_ARTIFACT = "TRACE_balance.json"
+
+
+def run_trace(quick: bool, out: str = TRACE_ARTIFACT
+              ) -> tuple[list[dict], list[str]]:
+    """The telemetry parity column (PR 7 acceptance assertions).
+
+    Runs the adaptive-gate pair twice — ``telemetry=None`` and with span
+    sampling on — and asserts the three hard telemetry contracts:
+
+    * **off-mode bit-parity**: the telemetry-on run's ``EpochMetrics``
+      rows equal the telemetry-off rows field-for-field (tracing is a
+      pure observer — it may not perturb the metric stream);
+    * **one compiled step**: span collection lives inside the fused scan
+      body, so ``drv.traces`` must stay 1;
+    * **exact reconstruction**: every sampled span's latency bucket
+      decomposition sums back to its DES closed-loop latency with zero
+      float64 error (``TelemetryRecorder.verify_exact() == 0.0``).
+
+    Writes the Chrome-trace artifact to ``out`` and returns
+    (rows, problems).
+    """
+    import dataclasses
+
+    from repro.cluster import (
+        EpochDriver, TelemetryConfig, make_policy, make_scenario,
+    )
+
+    scfg = scenario_config(quick)
+    kw = scenario_kwargs(TRACE_SCENARIO, scfg)
+    # sample aggressively at smoke sizes so the parity run records >0
+    # spans; full size uses the default 1/64 production rate
+    tcfg = TelemetryConfig(sample_rate=1 / 4 if quick else 1 / 64)
+
+    def drive(tel):
+        scen = make_scenario(TRACE_SCENARIO, scfg, **kw)
+        drv = EpochDriver(scen, make_policy(TRACE_POLICY),
+                          dataclasses.replace(cluster_config(quick),
+                                              telemetry=tel))
+        return drv, drv.run()
+
+    _, base = drive(None)
+    drv, traced = drive(tcfg)
+
+    problems = []
+    if [r.to_row() for r in base] != [r.to_row() for r in traced]:
+        problems.append(
+            "trace: telemetry-on EpochMetrics rows differ from the "
+            "telemetry-off run (tracing perturbed the metric stream)")
+    if drv.traces != 1:
+        problems.append(
+            f"trace: epoch step traced {drv.traces}x with sampling on "
+            "(expected 1)")
+    err = drv.telemetry.verify_exact()
+    if err != 0.0:
+        problems.append(
+            f"trace: span latency reconstruction off by {err!r} "
+            "(must be exactly 0.0)")
+    n_spans = drv.telemetry.span_count
+    if n_spans == 0:
+        problems.append("trace: sampling enabled but zero spans recorded")
+
+    path = drv.telemetry.write_chrome_trace(out)
+    summ = drv.telemetry.summary()
+    row = {
+        "trace": True,
+        "scenario": TRACE_SCENARIO,
+        "policy": TRACE_POLICY,
+        "sample_rate": tcfg.sample_rate,
+        "spans": n_spans,
+        "n_sampled": summ["spans_sampled"],
+        "reconstruction_max_err": err,
+        "traces": drv.traces,
+        "parity": not problems,
+        "artifact": path,
+    }
+    print(
+        f"[trace] {TRACE_SCENARIO}/{TRACE_POLICY} spans {n_spans} "
+        f"(sampled {summ['spans_sampled']}) reconstruction err {err!r} "
+        f"traces {drv.traces} -> {path}"
+    )
+    return [row], problems
+
+
 def run_dist_parity(quick: bool) -> list[dict]:
     """Dist-backend parity column in a subprocess (forced 8-device mesh).
 
@@ -390,6 +485,12 @@ def main(argv=None):
     ap.add_argument("--replication", action="store_true",
                     help="also run the three-mode replication comparison "
                          "(eventual/chain/craq tail latencies + gates)")
+    ap.add_argument("--trace", action="store_true",
+                    help="also run the telemetry parity column and emit a "
+                         "Chrome-trace artifact (see --trace-out)")
+    ap.add_argument("--trace-out", default=TRACE_ARTIFACT,
+                    help=f"Chrome-trace artifact path (default "
+                         f"{TRACE_ARTIFACT})")
     ap.add_argument("--json", default=None, help="write rows to this path")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the acceptance gate (exploratory runs)")
@@ -409,6 +510,11 @@ def main(argv=None):
     if args.profile:
         profile_rows, profile_problems = run_profile(args.quick)
         rows.extend(profile_rows)
+
+    trace_problems: list[str] = []
+    if args.trace:
+        trace_rows, trace_problems = run_trace(args.quick, args.trace_out)
+        rows.extend(trace_rows)
 
     replication_problems: list[str] = []
     if args.replication:
@@ -438,7 +544,8 @@ def main(argv=None):
 
     if not args.no_check:
         problems = (check_acceptance(rows, quick=args.quick)
-                    + profile_problems + replication_problems)
+                    + profile_problems + trace_problems
+                    + replication_problems)
         if problems:
             print("ACCEPTANCE FAILED:")
             for p in problems:
@@ -454,6 +561,10 @@ def main(argv=None):
             g = PROFILE_RATIO_GATE_QUICK if args.quick else PROFILE_RATIO_GATE
             gates.append(
                 f"fused steady epochs/s >= {g}x per-epoch at fewer syncs")
+        if args.trace:
+            gates.append(
+                "telemetry: off-mode bit-parity, one compiled step, "
+                "exact span reconstruction")
         if args.replication:
             gates.append(
                 "craq clean-read p99 <= chain tail-read p99 on read-heavy "

@@ -26,8 +26,17 @@ the control plane differing:
 * every run: ``conservation_gap == 0`` (no query silently leaks) and
   one compiled step per scenario.
 
+``--trace`` additionally runs the retry storm's controlled arm with
+``repro.telemetry`` span sampling on, asserting off-mode bit-parity /
+one compiled step / exact span reconstruction, and emits two artifacts:
+a Chrome trace (``TRACE_overload.json``) and the **p999 attribution
+breakdown** (``ATTRIB_retry_storm.json``) — where the extreme tail's
+latency mass actually sits ({queue, inflation, bounce, retry_backoff,
+service}) during the storm.
+
 Run: ``PYTHONPATH=src python -m benchmarks.overload_bench
-[--quick] [--scenarios a,b] [--json BENCH_overload.json] [--no-check]``
+[--quick] [--scenarios a,b] [--trace] [--json BENCH_overload.json]
+[--no-check]``
 """
 
 from __future__ import annotations
@@ -126,9 +135,93 @@ def run_matrix(scenarios, quick: bool, verbose: bool = True):
     return rows
 
 
+TRACE_SCENARIO = "retry_storm"
+TRACE_ARM = "controlled"
+TRACE_ARTIFACT = "TRACE_overload.json"
+ATTRIB_ARTIFACT = "ATTRIB_retry_storm.json"
+ATTRIB_Q = 99.9
+
+
+def run_trace(quick: bool, out: str = TRACE_ARTIFACT,
+              attrib_out: str = ATTRIB_ARTIFACT
+              ) -> tuple[list[dict], list[str]]:
+    """The telemetry column: retry storm, controlled arm, sampling on.
+
+    Asserts the PR-7 telemetry contracts (off-mode ``EpochMetrics``
+    bit-parity, one compiled step with tracing enabled, exact span
+    latency reconstruction) and emits the Chrome trace plus the p999
+    attribution breakdown — the storm's extreme tail bucketed into
+    {queue, inflation, bounce, retry_backoff, service} mass.
+    """
+    import dataclasses
+
+    from repro.cluster import EpochDriver, TelemetryConfig, make_scenario
+
+    scfg = scenario_config(quick)
+    tcfg = TelemetryConfig(sample_rate=1 / 4 if quick else 1 / 64)
+
+    def drive(tel):
+        scen = make_scenario(TRACE_SCENARIO, scfg)
+        drv = EpochDriver(scen, policy_for(TRACE_ARM),
+                          dataclasses.replace(cluster_config(quick),
+                                              telemetry=tel))
+        return drv, drv.run()
+
+    _, base = drive(None)
+    drv, traced = drive(tcfg)
+
+    problems = []
+    if [r.to_row() for r in base] != [r.to_row() for r in traced]:
+        problems.append(
+            "trace: telemetry-on EpochMetrics rows differ from the "
+            "telemetry-off run (tracing perturbed the metric stream)")
+    if drv.traces != 1:
+        problems.append(
+            f"trace: epoch step traced {drv.traces}x with sampling on "
+            "(expected 1)")
+    err = drv.telemetry.verify_exact()
+    if err != 0.0:
+        problems.append(
+            f"trace: span latency reconstruction off by {err!r} "
+            "(must be exactly 0.0)")
+    if drv.telemetry.span_count == 0:
+        problems.append("trace: sampling enabled but zero spans recorded")
+
+    path = drv.telemetry.write_chrome_trace(out)
+    attrib = drv.telemetry.attribution(ATTRIB_Q)
+    with open(attrib_out, "w") as f:
+        json.dump({"scenario": TRACE_SCENARIO, "arm": TRACE_ARM,
+                   "quick": quick, "sample_rate": tcfg.sample_rate,
+                   "spans": drv.telemetry.span_count,
+                   "attribution": attrib}, f, indent=1)
+
+    row = {
+        "trace": True,
+        "scenario": TRACE_SCENARIO,
+        "arm": TRACE_ARM,
+        "sample_rate": tcfg.sample_rate,
+        "spans": drv.telemetry.span_count,
+        "reconstruction_max_err": err,
+        "traces": drv.traces,
+        "parity": not problems,
+        "attribution": attrib,
+        "artifacts": [path, attrib_out],
+    }
+    share = attrib.get("share", {})
+    top = max(share, key=share.get) if share else "n/a"
+    print(
+        f"[trace] {TRACE_SCENARIO}/{TRACE_ARM} spans {row['spans']} "
+        f"reconstruction err {err!r} traces {drv.traces}; p{ATTRIB_Q} "
+        f"tail mass mostly '{top}' "
+        f"({share.get(top, 0.0):.0%}) -> {path}, {attrib_out}"
+    )
+    return [row], problems
+
+
 def check_survival(rows, *, quick: bool) -> list[str]:
     """The survival gate: controlled survives, plain collapses."""
     bound = P999_BOUND[quick]
+    rows = [r for r in rows if not r.get("trace")]
     by = {(r["scenario"], r["arm"]): r for r in rows}
     problems = []
 
@@ -176,6 +269,10 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (16 epochs x 512 ops)")
     ap.add_argument("--scenarios", default=",".join(SCENARIOS))
+    ap.add_argument("--trace", action="store_true",
+                    help="also run the telemetry column on the retry "
+                         "storm and emit Chrome-trace + p999 attribution "
+                         "artifacts")
     ap.add_argument("--json", default=None, help="write rows to this path")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the survival gate (exploratory runs)")
@@ -184,13 +281,18 @@ def main(argv=None):
     scenarios = [s for s in args.scenarios.split(",") if s]
     rows = run_matrix(scenarios, args.quick)
 
+    trace_problems: list[str] = []
+    if args.trace:
+        trace_rows, trace_problems = run_trace(args.quick)
+        rows.extend(trace_rows)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
         print(f"wrote {args.json} ({len(rows)} rows)")
 
     if not args.no_check:
-        problems = check_survival(rows, quick=args.quick)
+        problems = check_survival(rows, quick=args.quick) + trace_problems
         if problems:
             print("SURVIVAL GATE FAILED:")
             for p in problems:
@@ -199,7 +301,9 @@ def main(argv=None):
         print("survival gate: controlled arm lost 0 queries, drained its "
               "backlog and kept p999 bounded on every scenario; the "
               "uncontrolled arm collapsed on every scenario; accounting "
-              "conserved; one compiled step per run")
+              "conserved; one compiled step per run"
+              + ("; telemetry parity + exact reconstruction held"
+                 if args.trace else ""))
     return 0
 
 

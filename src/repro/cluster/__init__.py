@@ -25,9 +25,11 @@ from repro.cluster.metrics import (
     latency_percentiles,
     latency_percentiles_batch,
     masked_p99_batch,
+    masked_p99_batch_loop,
     p999_batch,
     summarize,
 )
+from repro.telemetry import TelemetryConfig
 from repro.cluster.policies import (
     POLICIES,
     FullAdaptivePolicy,
@@ -44,7 +46,8 @@ __all__ = [
     "ClusterConfig", "EpochDriver",
     "EpochMetrics", "imbalance_stats", "imbalance_stats_batch",
     "latency_percentiles", "latency_percentiles_batch",
-    "masked_p99_batch", "p999_batch", "summarize",
+    "masked_p99_batch", "masked_p99_batch_loop", "p999_batch", "summarize",
+    "TelemetryConfig",
     "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
     "FullAdaptivePolicy", "OverloadAdaptivePolicy", "make_policy",
     "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",

@@ -76,6 +76,7 @@ from repro.core.stats import make_sketch, pull_report, sketch_query, sketch_upda
 from repro.core.store import apply_routed, make_store
 from repro import overload as OVL
 from repro import replication as RPL
+from repro import telemetry as TEL
 
 from repro.cluster.metrics import (
     EpochMetrics,
@@ -152,6 +153,12 @@ class ClusterConfig:
     # pool is exhausted — grow the pool and rebuild the compiled step
     # (oracle backend only; `traces` then counts 1 + growth_events)
     split_overflow: bool = False
+    # the trace plane (repro.telemetry): None disables it and the run is
+    # bit-identical to pre-telemetry behaviour; a TelemetryConfig samples
+    # per-query spans inside the device step (hash-based, no PRNG
+    # consumed — the metric stream is bit-identical with tracing on OR
+    # off), decomposes tail latency exactly, and times pipeline stages
+    telemetry: TEL.TelemetryConfig | None = None
     seed: int = 0
 
 
@@ -322,6 +329,24 @@ class EpochDriver:
         self.ovl_cfg = cfg.overload
         self.ovl = (OVL.make_state(cfg.num_nodes, cfg.overload)
                     if cfg.overload is not None else None)
+        # the trace plane: spans are assembled inside the device step (no
+        # extra sync — they ride the one period round-trip), attributed
+        # and archived by the host-side recorder.  None compiles the
+        # identical program and produces the identical metric stream.
+        self.tel_cfg = cfg.telemetry
+        if self.tel_cfg is not None:
+            self._tel_threshold = TEL.rate_threshold(
+                self.tel_cfg.sample_rate
+            )
+            self.telemetry = TEL.TelemetryRecorder(
+                self.tel_cfg, model=cfg.latency, scenario=scenario.name,
+                policy=policy.name, n_clients=cfg.n_clients,
+            )
+            self._timers = self.telemetry.timers
+        else:
+            self._tel_threshold = 0
+            self.telemetry = None
+            self._timers = TEL.StageTimers(enabled=False)
         self.key = jax.random.PRNGKey(cfg.seed)
 
         self._traces = 0
@@ -434,6 +459,11 @@ class EpochDriver:
         # the overload plane (trace constants; None leaves every value
         # computed below bit-identical to the pre-overload program)
         ocfg = self.ovl_cfg
+        # the trace plane (also trace constants; sampling consumes no
+        # PRNG, so even the *enabled* path leaves every pre-existing
+        # value bit-identical — only the extra span outputs are new)
+        tcfg = self.tel_cfg
+        tel_thr = self._tel_threshold
 
         def route_chunk(directory, load_reg, dirty, qs, rng_c, queue_pen):
             if mp.dirty_reads:
@@ -451,7 +481,7 @@ class EpochDriver:
                 picked = bounced = None
             return dec, directory, load_reg, picked, bounced
 
-        def body(store, directory, load_reg, sketch, repl, ovl, q, rng):
+        def body(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
             if ocfg is not None:
                 # fold_in (not a wider split) so the disabled path's
                 # r_route/r_plan streams are untouched — routing and the
@@ -509,9 +539,13 @@ class EpochDriver:
             )
             # overload step: queue/retry dynamics decide each query's
             # timing fate (the store above applied every op regardless —
-            # accounting plane, see repro.overload)
+            # accounting plane, see repro.overload).  The pre-step state
+            # is the admission context the trace plane records: queue
+            # depth at entry, exactly as routing observes the pre-epoch
+            # store
+            ovl_pre = ovl
             if ocfg is not None:
-                ovl, ovl_rej, ovl_scale, ostats = OVL.step(
+                ovl, ovl_rej, ovl_scale, ovl_out, ostats = OVL.step(
                     ovl, decision.target, r_ovl, ocfg
                 )
                 ovl_kw = dict(shed=ovl_rej, service_scale=ovl_scale)
@@ -529,17 +563,54 @@ class EpochDriver:
             retries = jnp.zeros((), jnp.int32)
             bounced_out = (bounced if mp.dirty_reads
                            else jnp.zeros((B,), jnp.bool_))
+            if tcfg is not None:
+                if ocfg is not None:
+                    t_safe = jnp.clip(decision.target, 0, N - 1)
+                    qdepth = ovl_pre.queue[t_safe]
+                    Lv = ovl_pre.retry.shape[1]
+                    # deepest occupied backoff level at the target (how
+                    # far its retry orbit has escalated); -1 when empty
+                    orbit_node = jnp.max(
+                        jnp.where(
+                            ovl_pre.retry > 0,
+                            jnp.arange(1, Lv + 1, dtype=jnp.int32)[None, :],
+                            0,
+                        ),
+                        axis=1,
+                    ) - 1
+                    orbit = orbit_node[t_safe]
+                    outcome = ovl_out
+                    scale_rec = ovl_scale
+                else:
+                    qdepth = jnp.zeros((B,), jnp.int32)
+                    orbit = jnp.full((B,), -1, jnp.int32)
+                    outcome = jnp.where(
+                        decision.target >= 0,
+                        jnp.int32(OVL.OUTCOME_ADMITTED),
+                        jnp.int32(OVL.OUTCOME_INVALID),
+                    )
+                    scale_rec = jnp.ones((B,), jnp.float32)
+                pk = picked if mp.dirty_reads else decision.target
+                spans = TEL.collect_spans(
+                    q, eid, decision, pk, bounced_out, outcome, qdepth,
+                    orbit, scale_rec, plan,
+                    threshold=tel_thr, k_slots=tcfg.max_spans,
+                    lookup=cfg.latency.lookup,
+                )
+            else:
+                spans = None
             return (store, directory, load_reg, sketch, repl, ovl,
-                    plan, node_ops, retries, bounced_out, ostats)
+                    plan, node_ops, retries, bounced_out, ostats, spans)
 
         return body
 
     def _build_oracle_step(self, mp: RPL.ModePlan):
         body = self._make_oracle_body(mp)
 
-        def step(store, directory, load_reg, sketch, repl, ovl, q, rng):
+        def step(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
             self._traces += 1  # python side effect: counts traces, not calls
-            return body(store, directory, load_reg, sketch, repl, ovl, q, rng)
+            return body(store, directory, load_reg, sketch, repl, ovl, q,
+                        rng, eid)
 
         return jax.jit(step)
 
@@ -557,13 +628,14 @@ class EpochDriver:
         body = self._make_oracle_body(mp)
 
         def period(store, directory, load_reg, sketch, repl, ovl,
-                   qs, rngs, live):
+                   qs, rngs, live, eids):
             def scan_body(carry, xs):
                 store, directory, load_reg, sketch, repl, ovl = carry
-                q, rng, lv = xs
+                q, rng, lv, eid = xs
                 (store2, directory2, load_reg2, sketch2, repl2, ovl2,
-                 plan, node_ops, retries, bounced, ostats) = body(
-                    store, directory, load_reg, sketch, repl, ovl, q, rng
+                 plan, node_ops, retries, bounced, ostats, spans) = body(
+                    store, directory, load_reg, sketch, repl, ovl, q, rng,
+                    eid
                 )
                 keep = lambda new, old: jnp.where(lv, new, old)
                 store2 = jax.tree.map(keep, store2, store)
@@ -573,11 +645,14 @@ class EpochDriver:
                           jax.tree.map(keep, repl2, repl),
                           jax.tree.map(keep, ovl2, ovl))
                 ovf = jnp.sum(store2.overflow)
-                return carry2, (plan, node_ops, retries, ovf, bounced, ostats)
+                # spans ride the ys stack (None == empty pytree when the
+                # trace plane is off — the program is unchanged)
+                return carry2, (plan, node_ops, retries, ovf, bounced,
+                                ostats, spans)
 
             carry, outs = jax.lax.scan(
                 scan_body, (store, directory, load_reg, sketch, repl, ovl),
-                (qs, rngs, live),
+                (qs, rngs, live, eids),
             )
             return (*carry, *outs)
 
@@ -610,11 +685,14 @@ class EpochDriver:
         shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
         ocfg = self.ovl_cfg
         use_qpen = self._dist_cfg.queue_pen
+        tcfg = self.tel_cfg
+        tel_thr = self._tel_threshold
 
         def observe(q, ridx, target, chain, chain_len, sketch, rng, repl,
-                    picked, bounced, ovl, r_ovl):
+                    picked, bounced, ovl, r_ovl, eid):
             """Jitted post-processing of the dist apply's decision."""
             self._traces += 1
+            B = target.shape[0]
             decision = C.RoutingDecision(
                 ridx=ridx,
                 target=target,
@@ -628,8 +706,9 @@ class EpochDriver:
                          if mp.dirty_reads else {})
             # overload step: same accounting-plane placement as the oracle
             # body — after the distributed apply, deciding timing fate only
+            ovl_pre = ovl
             if ocfg is not None:
-                ovl, ovl_rej, ovl_scale, ostats = OVL.step(
+                ovl, ovl_rej, ovl_scale, ovl_out, ostats = OVL.step(
                     ovl, target, r_ovl, ocfg
                 )
                 ovl_kw = dict(shed=ovl_rej, service_scale=ovl_scale)
@@ -644,11 +723,44 @@ class EpochDriver:
             if mp.track_state:
                 is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
                 repl = RPL.advance(repl, ridx, is_write)
-            return sketch, plan, node_ops, repl, ovl, ostats
+            if tcfg is not None:
+                if ocfg is not None:
+                    t_safe = jnp.clip(target, 0, N - 1)
+                    qdepth = ovl_pre.queue[t_safe]
+                    Lv = ovl_pre.retry.shape[1]
+                    orbit_node = jnp.max(
+                        jnp.where(
+                            ovl_pre.retry > 0,
+                            jnp.arange(1, Lv + 1, dtype=jnp.int32)[None, :],
+                            0,
+                        ),
+                        axis=1,
+                    ) - 1
+                    orbit = orbit_node[t_safe]
+                    outcome = ovl_out
+                    scale_rec = ovl_scale
+                else:
+                    qdepth = jnp.zeros((B,), jnp.int32)
+                    orbit = jnp.full((B,), -1, jnp.int32)
+                    outcome = jnp.where(
+                        target >= 0,
+                        jnp.int32(OVL.OUTCOME_ADMITTED),
+                        jnp.int32(OVL.OUTCOME_INVALID),
+                    )
+                    scale_rec = jnp.ones((B,), jnp.float32)
+                spans = TEL.collect_spans(
+                    q, eid, decision, picked, bounced, outcome, qdepth,
+                    orbit, scale_rec, plan,
+                    threshold=tel_thr, k_slots=tcfg.max_spans,
+                    lookup=cfg.latency.lookup,
+                )
+            else:
+                spans = None
+            return sketch, plan, node_ops, repl, ovl, ostats, spans
 
         observe = jax.jit(observe)
 
-        def step(store, directory, load_reg, sketch, repl, ovl, q, rng):
+        def step(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
             load_reg = jax.device_put(load_reg, rep)
@@ -685,14 +797,14 @@ class EpochDriver:
                 # placeholders keep observe's signature mode-independent
                 picked = m["target"]
                 bounced = jnp.zeros((B,), jnp.bool_)
-            sketch, plan, node_ops, repl, ovl, ostats = observe(
+            sketch, plan, node_ops, repl, ovl, ostats, spans = observe(
                 q, m["ridx"], m["target"], m["chain"], m["chain_len"], sketch,
-                r_plan, repl, picked, bounced, ovl, r_ovl,
+                r_plan, repl, picked, bounced, ovl, r_ovl, eid,
             )
             if not spread:
                 load_reg = load_reg + node_ops.astype(jnp.uint32)
             return (store, directory, load_reg, sketch, repl, ovl, plan,
-                    node_ops, m["bucket_overflow"], bounced, ostats)
+                    node_ops, m["bucket_overflow"], bounced, ostats, spans)
 
         return step
 
@@ -980,19 +1092,31 @@ class EpochDriver:
         )
         rng = jax.random.fold_in(self.key, e)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, plan, node_ops, retries, bounced, ostats) = self._step(
+         self.ovl, plan, node_ops, retries, bounced, ostats,
+         spans) = self._step(
             self.store, self.directory, self.load_reg, self.sketch,
-            self.repl, self.ovl, q, rng
+            self.repl, self.ovl, q, rng, jnp.int32(e)
         )
 
         self.host_syncs += 1   # the DES engine pulls the plan to the host
-        latency, makespan = C.simulate_closed_loop(
-            plan,
-            n_clients=cfg.n_clients,
-            num_nodes=cfg.num_nodes,
-            link=cfg.latency.link,
-            backend=cfg.des_backend,
-        )
+        issue = None
+        if self.telemetry is not None:
+            latency, makespan, issue = C.simulate_closed_loop(
+                plan,
+                n_clients=cfg.n_clients,
+                num_nodes=cfg.num_nodes,
+                link=cfg.latency.link,
+                backend=cfg.des_backend,
+                return_issue=True,
+            )
+        else:
+            latency, makespan = C.simulate_closed_loop(
+                plan,
+                n_clients=cfg.n_clients,
+                num_nodes=cfg.num_nodes,
+                link=cfg.latency.link,
+                backend=cfg.des_backend,
+            )
         lat = np.asarray(latency)[None]
         (p50,), (p99,) = latency_percentiles_batch(lat)
         (p999,) = p999_batch(lat)
@@ -1032,7 +1156,7 @@ class EpochDriver:
             mig_entries += pen
             mig_bytes += pby
 
-        return EpochMetrics(
+        row = EpochMetrics(
             epoch=e,
             scenario=self.scenario.name,
             policy=self.policy.name,
@@ -1060,6 +1184,31 @@ class EpochDriver:
             lost=int(ost[5]),
             queue_peak=int(ost[6]),
         )
+        if self.telemetry is not None:
+            si, sf, cnt = spans
+            self.host_syncs += 1   # span tables + state snapshot pull
+            self.telemetry.on_segment(
+                e, [row],
+                np.asarray(si)[None], np.asarray(sf)[None],
+                np.asarray(cnt)[None], lat,
+                None if issue is None else np.asarray(issue)[None],
+                np.asarray([mk]), self._state_snapshot(),
+            )
+        return row
+
+    def _state_snapshot(self) -> dict:
+        """Host view of the carried state for the flight-recorder ring
+        (telemetry-only path; its syncs are counted by the caller)."""
+        snap: dict = {
+            "load_reg": np.asarray(self.load_reg).astype(np.int64).tolist(),
+        }
+        if self.ovl is not None:
+            snap["queue_depth"] = np.asarray(self.ovl.queue).tolist()
+            snap["retry_backlog"] = int(np.asarray(self.ovl.retry).sum())
+            snap["conservation_gap"] = OVL.conservation_gap(self.ovl)
+        if self.mode_plan.track_state:
+            snap["replication"] = RPL.summary(self.repl)
+        return snap
 
     def _live_mask(self) -> np.ndarray:
         """(N,) bool serving mask: failed AND standby nodes are out of the
@@ -1093,98 +1242,123 @@ class EpochDriver:
     def _scan_segment(self, e0: int, L: int):
         """Stage a segment's queries and run the donated period scan."""
         P = self.period
-        op_l, key_l, end_l, val_l = [], [], [], []
-        for i in range(L):
-            opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
-            self._note_keys(keys)
-            op_l.append(opcodes)
-            key_l.append(keys)
-            end_l.append(end_keys)
-            val_l.append(values)
-        opcodes_h = np.stack(op_l)        # (L, B) host view for read masks
-        for _ in range(L, P):   # pad with masked no-op epochs
-            op_l.append(op_l[-1])
-            key_l.append(key_l[-1])
-            end_l.append(end_l[-1])
-            val_l.append(val_l[-1])
-        qs = C.make_queries(
-            jnp.asarray(np.stack(key_l)), jnp.asarray(np.stack(op_l)),
-            jnp.asarray(np.stack(val_l)), jnp.asarray(np.stack(end_l)),
-        )
-        rngs = jax.vmap(lambda i: jax.random.fold_in(self.key, i))(
-            jnp.arange(e0, e0 + P)
-        )
-        live = jnp.asarray(np.arange(P) < L)
+        with self._timers.stage("inject"):
+            op_l, key_l, end_l, val_l = [], [], [], []
+            for i in range(L):
+                opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
+                self._note_keys(keys)
+                op_l.append(opcodes)
+                key_l.append(keys)
+                end_l.append(end_keys)
+                val_l.append(values)
+            opcodes_h = np.stack(op_l)    # (L, B) host view for read masks
+            for _ in range(L, P):   # pad with masked no-op epochs
+                op_l.append(op_l[-1])
+                key_l.append(key_l[-1])
+                end_l.append(end_l[-1])
+                val_l.append(val_l[-1])
+            qs = C.make_queries(
+                jnp.asarray(np.stack(key_l)), jnp.asarray(np.stack(op_l)),
+                jnp.asarray(np.stack(val_l)), jnp.asarray(np.stack(end_l)),
+            )
+            rngs = jax.vmap(lambda i: jax.random.fold_in(self.key, i))(
+                jnp.arange(e0, e0 + P)
+            )
+            live = jnp.asarray(np.arange(P) < L)
+            eids = jnp.arange(e0, e0 + P, dtype=jnp.int32)
+        with self._timers.stage("route_apply"):
+            out = self._period_fn(
+                self.store, self.directory, self.load_reg, self.sketch,
+                self.repl, self.ovl, qs, rngs, live, eids,
+            )
+            if self._timers.enabled:
+                # profiling measures execution, not dispatch; values are
+                # untouched (an explicit, wall-time-only observer effect)
+                jax.block_until_ready(out)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, plan, node_ops, retries, ovf, bounced, ostats
-         ) = self._period_fn(
-            self.store, self.directory, self.load_reg, self.sketch,
-            self.repl, self.ovl, qs, rngs, live,
-        )
+         self.ovl, plan, node_ops, retries, ovf, bounced, ostats,
+         spans) = out
         return (jax.tree.map(lambda x: x[:L], plan),
                 node_ops[:L], retries[:L], ovf[:L], bounced[:L], ostats[:L],
+                None if spans is None
+                else jax.tree.map(lambda x: x[:L], spans),
                 opcodes_h)
 
     def _step_segment(self, e0: int, L: int):
         """Dist-backend segment: per-epoch device steps (shard_map programs
         do not nest under a scan) with all host syncs deferred to the
         period boundary — plans/metrics stay on device until then."""
-        plans, nops_l, rtr_l, ovf_l, bnc_l, ost_l, op_l = (
-            [], [], [], [], [], [], []
+        plans, nops_l, rtr_l, ovf_l, bnc_l, ost_l, spn_l, op_l = (
+            [], [], [], [], [], [], [], []
         )
-        for i in range(L):
-            opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
-            self._note_keys(keys)
-            op_l.append(opcodes)
-            q = C.make_queries(
-                jnp.asarray(keys), jnp.asarray(opcodes),
-                jnp.asarray(values), jnp.asarray(end_keys),
-            )
-            rng = jax.random.fold_in(self.key, e0 + i)
-            (self.store, self.directory, self.load_reg, self.sketch,
-             self.repl, self.ovl, plan, node_ops, retries, bounced,
-             ostats) = self._step(
-                self.store, self.directory, self.load_reg, self.sketch,
-                self.repl, self.ovl, q, rng
-            )
-            plans.append(plan)
-            nops_l.append(node_ops)
-            rtr_l.append(retries)
-            ovf_l.append(jnp.sum(self.store.overflow))
-            bnc_l.append(bounced)
-            ost_l.append(ostats)
+        with self._timers.stage("route_apply"):
+            for i in range(L):
+                opcodes, keys, end_keys, values = self.scenario.epoch(e0 + i)
+                self._note_keys(keys)
+                op_l.append(opcodes)
+                q = C.make_queries(
+                    jnp.asarray(keys), jnp.asarray(opcodes),
+                    jnp.asarray(values), jnp.asarray(end_keys),
+                )
+                rng = jax.random.fold_in(self.key, e0 + i)
+                (self.store, self.directory, self.load_reg, self.sketch,
+                 self.repl, self.ovl, plan, node_ops, retries, bounced,
+                 ostats, spans) = self._step(
+                    self.store, self.directory, self.load_reg, self.sketch,
+                    self.repl, self.ovl, q, rng, jnp.int32(e0 + i)
+                )
+                plans.append(plan)
+                nops_l.append(node_ops)
+                rtr_l.append(retries)
+                ovf_l.append(jnp.sum(self.store.overflow))
+                bnc_l.append(bounced)
+                ost_l.append(ostats)
+                spn_l.append(spans)
         plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+        spans = (None if spn_l[0] is None
+                 else jax.tree.map(lambda *xs: jnp.stack(xs), *spn_l))
         return (plan, jnp.stack(nops_l), jnp.stack(rtr_l), jnp.stack(ovf_l),
-                jnp.stack(bnc_l), jnp.stack(ost_l), np.stack(op_l))
+                jnp.stack(bnc_l), jnp.stack(ost_l), spans, np.stack(op_l))
 
     def _run_segment(self, e0: int, n: int) -> list[EpochMetrics]:
         ev0, en0, by0 = self._handle_events(e0)
         L = self._segment_len(e0, n)
         if self.backend == "oracle":
-            plan, node_ops, retries, ovf, bounced, ostats, opcodes_h = (
-                self._scan_segment(e0, L)
-            )
+            (plan, node_ops, retries, ovf, bounced, ostats, spans,
+             opcodes_h) = self._scan_segment(e0, L)
         else:
-            plan, node_ops, retries, ovf, bounced, ostats, opcodes_h = (
-                self._step_segment(e0, L)
-            )
+            (plan, node_ops, retries, ovf, bounced, ostats, spans,
+             opcodes_h) = self._step_segment(e0, L)
 
         cfg = self.cfg
         scfg = self.scenario.cfg
         # ---- ONE host round-trip for the whole segment ----
         self.host_syncs += 1   # the DES engine pulls the stacked plans
-        latency, makespan = C.simulate_closed_loop(
-            plan,
-            n_clients=cfg.n_clients,
-            num_nodes=cfg.num_nodes,
-            link=cfg.latency.link,
-            backend=cfg.des_backend,
-        )
-        lat = np.asarray(latency)
-        mks = np.asarray(makespan)
-        node_ops_h = self._sync(node_ops)
-        retries_h = self._sync(retries)
-        ovf_h = self._sync(ovf).astype(np.int64)
+        issue = None
+        with self._timers.stage("des"):
+            if self.telemetry is not None:
+                latency, makespan, issue = C.simulate_closed_loop(
+                    plan,
+                    n_clients=cfg.n_clients,
+                    num_nodes=cfg.num_nodes,
+                    link=cfg.latency.link,
+                    backend=cfg.des_backend,
+                    return_issue=True,
+                )
+            else:
+                latency, makespan = C.simulate_closed_loop(
+                    plan,
+                    n_clients=cfg.n_clients,
+                    num_nodes=cfg.num_nodes,
+                    link=cfg.latency.link,
+                    backend=cfg.des_backend,
+                )
+        with self._timers.stage("host_sync"):
+            lat = np.asarray(latency)
+            mks = np.asarray(makespan)
+            node_ops_h = self._sync(node_ops)
+            retries_h = self._sync(retries)
+            ovf_h = self._sync(ovf).astype(np.int64)
 
         p50s, p99s = latency_percentiles_batch(lat)
         p999s = p999_batch(lat)
@@ -1210,7 +1384,8 @@ class EpochDriver:
         pev: list[str] = []
         pen = pby = 0
         if pulled:
-            pev, pen, pby = self._control_pull(e0 + L)
+            with self._timers.stage("control"):
+                pev, pen, pby = self._control_pull(e0 + L)
 
         rows = []
         for i in range(L):
@@ -1253,9 +1428,27 @@ class EpochDriver:
                 lost=int(ost_h[i, 5]),
                 queue_peak=int(ost_h[i, 6]),
             ))
+        if self.telemetry is not None:
+            with self._timers.stage("telemetry"):
+                si, sf, cnt = spans
+                self.host_syncs += 1   # span tables + state snapshot pull
+                self.telemetry.on_segment(
+                    e0, rows, np.asarray(si), np.asarray(sf),
+                    np.asarray(cnt), lat, issue, mks,
+                    self._state_snapshot(),
+                )
         return rows
 
     def run(self) -> list[EpochMetrics]:
+        tcfg = self.tel_cfg
+        if tcfg is not None and tcfg.jax_trace_dir:
+            # capture the whole run in a jax.profiler trace (TensorBoard/
+            # Perfetto-loadable) alongside the span-plane artifacts
+            with jax.profiler.trace(tcfg.jax_trace_dir):
+                return self._run_all()
+        return self._run_all()
+
+    def _run_all(self) -> list[EpochMetrics]:
         n = self.scenario.cfg.n_epochs
         if not self.fused:
             return [self.run_epoch(e) for e in range(n)]

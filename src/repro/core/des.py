@@ -397,23 +397,34 @@ def simulate_closed_loop(
     link: float = 1.0,
     think: float = 0.0,
     backend: str | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return_issue: bool = False,
+):
     """Closed-loop DES (K clients replaying the stream back-to-back).
 
     Bit-identical to
     :func:`repro.core.coordination.simulate_closed_loop_reference`; accepts
     an (S, B, H) scenario stack like :func:`simulate`.
+
+    With ``return_issue=True`` a third value is returned: the per-query
+    issue times as **numpy float64** (the engine's exact internal clock —
+    kept off-device because a jnp round-trip would downcast to f32).  The
+    telemetry plane anchors span trees on it; latency/makespan are
+    unchanged either way.
     """
     stacked = np.asarray(plan.nodes).ndim == 3
     nodes_c, service_c, n_hops = compact_plans(plan)
     S, B, _ = nodes_c.shape
     if B == 0 or n_clients <= 0:
         z = np.zeros((S, B), np.float64)
-        return _finalize(z, z, stacked)
+        out = _finalize(z, z, stacked)
+        return (*out, z if stacked else z[0]) if return_issue else out
     _validate(nodes_c, n_hops, num_nodes)
     run = _run_native if _resolve_backend(backend) == "native" else _run_jax
     finish, issue = run(
         nodes_c, service_c, n_hops, None,
         K=n_clients, N=num_nodes, link=link, think=think, closed=True,
     )
-    return _finalize(finish, issue, stacked)
+    out = _finalize(finish, issue, stacked)
+    if return_issue:
+        return (*out, issue if stacked else issue[0])
+    return out

@@ -204,6 +204,51 @@ def _bump_load(load_reg: jnp.ndarray, chain: jnp.ndarray, clen: jnp.ndarray,
     )
 
 
+# byte lanes in a packed chain word; members past this ride the plan only
+CHAIN_PACK_SLOTS = 4
+_CHAIN_PACK_EMPTY = 0xFF
+
+
+def pack_chain(chain: jnp.ndarray, chain_len: jnp.ndarray) -> jnp.ndarray:
+    """(B, r_max) chain + (B,) len -> (B,) int32, one member per byte.
+
+    The telemetry span table (``repro.telemetry``) records each sampled
+    query's hop path in a fixed-width row; packing the live chain prefix
+    into byte lanes (``0xFF`` = empty) keeps that row one int32 wide for
+    any ``r_max``.  Lossless for up to :data:`CHAIN_PACK_SLOTS` members
+    over clusters of < 255 nodes — every configuration this repo runs.
+    Pure and jittable; :func:`unpack_chain` is the host-side inverse.
+    """
+    B, r_max = chain.shape
+    k = min(r_max, CHAIN_PACK_SLOTS)
+    pos = jnp.arange(k, dtype=jnp.int32)[None, :]
+    member = chain[:, :k].astype(jnp.int32)
+    live = (pos < chain_len[:, None]) & (member >= 0) & (member < 255)
+    byte = jnp.where(live, member, _CHAIN_PACK_EMPTY).astype(jnp.uint32)
+    packed = jnp.zeros((B,), jnp.uint32)
+    for i in range(k):
+        packed = packed | (byte[:, i] << jnp.uint32(8 * i))
+    if k < CHAIN_PACK_SLOTS:
+        for i in range(k, CHAIN_PACK_SLOTS):
+            packed = packed | (
+                jnp.uint32(_CHAIN_PACK_EMPTY) << jnp.uint32(8 * i)
+            )
+    return jax.lax.bitcast_convert_type(packed, jnp.int32)
+
+
+def unpack_chain(packed) -> "np.ndarray":
+    """Host-side inverse of :func:`pack_chain`: (n,) packed words ->
+    (n, CHAIN_PACK_SLOTS) int32 members, -1 where empty."""
+    import numpy as np
+
+    p = np.asarray(packed, np.int32).view(np.uint32)
+    shifts = 8 * np.arange(CHAIN_PACK_SLOTS, dtype=np.uint32)
+    bytes_ = (p[:, None] >> shifts[None, :]) & np.uint32(0xFF)
+    return np.where(
+        bytes_ == _CHAIN_PACK_EMPTY, -1, bytes_.astype(np.int64)
+    ).astype(np.int32)
+
+
 def route_load_aware_dirty(
     directory: D.Directory,
     q: QueryBatch,

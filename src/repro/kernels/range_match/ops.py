@@ -112,6 +112,11 @@ def pack_tables_cached(directory: Directory):
                 _pack_cache.move_to_end(key)
                 return packed
     packed = pack_tables(directory)
+    if any(_is_tracer(p) for p in packed):
+        # concrete inputs closed over by an enclosing jit still stage to
+        # tracers (omnistaging) — caching those would leak them into the
+        # next trace
+        return packed
     with _pack_cache_lock:
         _pack_cache[key] = (bufs, packed)
         while len(_pack_cache) > _PACK_CACHE_SIZE:

@@ -9,6 +9,10 @@ the model and the conservation invariant.
 """
 
 from repro.overload.state import (
+    OUTCOME_ADMITTED,
+    OUTCOME_DEFERRED,
+    OUTCOME_INVALID,
+    OUTCOME_SHED,
     STAT_FIELDS,
     OverloadConfig,
     OverloadState,
@@ -20,5 +24,7 @@ from repro.overload.state import (
 
 __all__ = [
     "STAT_FIELDS", "OverloadConfig", "OverloadState",
+    "OUTCOME_ADMITTED", "OUTCOME_DEFERRED", "OUTCOME_SHED",
+    "OUTCOME_INVALID",
     "conservation_gap", "make_state", "step", "summary",
 ]

@@ -144,23 +144,34 @@ STAT_FIELDS = (
     "queue_peak",
 )
 
+# per-query outcome codes (the telemetry span plane records these)
+OUTCOME_INVALID = -1   # target < 0: outside the overload plane
+OUTCOME_ADMITTED = 0
+OUTCOME_DEFERRED = 1
+OUTCOME_SHED = 2
+
 
 def step(
     state: OverloadState,
     target: jnp.ndarray,
     rng: jax.Array,
     cfg: OverloadConfig,
-) -> tuple[OverloadState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[OverloadState, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray]:
     """One epoch of queue/retry dynamics (pure, jittable, shape-stable).
 
     ``target``: (B,) int32 routed node per query (NO_NODE < 0 queries are
     outside the overload plane — fully-spliced chains already produce a
-    dead hop plan).  Returns ``(state', rejected, service_scale, stats)``:
+    dead hop plan).  Returns ``(state', rejected, service_scale, outcome,
+    stats)``:
 
     * ``rejected``      (B,) bool — deferred or shed: plan a rejection
       (no node visits) for this query;
     * ``service_scale`` (B,) float32 — occupancy-dependent service
       multiplier for the admitted queries (1.0 for everything else);
+    * ``outcome``       (B,) int32 — per-query :data:`OUTCOME_ADMITTED` /
+      :data:`OUTCOME_DEFERRED` / :data:`OUTCOME_SHED` /
+      :data:`OUTCOME_INVALID` code (the trace plane's admission record);
     * ``stats``         (7,) int32 — this epoch's outcome counts in
       :data:`STAT_FIELDS` order.
 
@@ -258,6 +269,11 @@ def step(
         occ[t_safe].astype(jnp.float32) / jnp.float32(cfg.queue_cap)
     )
     service_scale = jnp.where(admitted_q, scale, jnp.float32(1.0))
+    outcome = jnp.where(
+        admitted_q, OUTCOME_ADMITTED,
+        jnp.where(deferred_q, OUTCOME_DEFERRED,
+                  jnp.where(shed_q, OUTCOME_SHED, OUTCOME_INVALID)),
+    ).astype(jnp.int32)
 
     e = lambda x: jnp.sum(x).astype(jnp.int32)
     injected = e(valid)
@@ -284,7 +300,7 @@ def step(
         cum_requeued=state.cum_requeued + requeued,
         cum_lost=state.cum_lost + lost,
     )
-    return state2, rejected, service_scale, stats
+    return state2, rejected, service_scale, outcome, stats
 
 
 def conservation_gap(state: OverloadState) -> int:

@@ -27,10 +27,12 @@ from repro.replication.state import (
     apply_events,
     dirty_bits,
     make_state,
+    summary,
 )
 
 __all__ = [
     "EVENTUAL", "CHAIN", "CRAQ", "REPLICATION_MODES",
     "ModePlan", "resolve_mode",
     "ReplState", "make_state", "advance", "apply_events", "dirty_bits",
+    "summary",
 ]

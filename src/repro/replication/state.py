@@ -111,6 +111,18 @@ def advance(state: ReplState, ridx: jnp.ndarray, is_write: jnp.ndarray) -> ReplS
     return ReplState(version=state.version + w, acked=acked)
 
 
+def summary(state: ReplState) -> dict:
+    """Host-side register-file snapshot (the flight recorder's view)."""
+    dirty = np.asarray(dirty_bits(state))
+    version = np.asarray(state.version)
+    return {
+        "max_version": int(version.max()) if version.size else 0,
+        "total_commits": int(version.astype(np.int64).sum()),
+        "dirty_positions": int(dirty.sum()),
+        "dirty_slots": int(dirty.any(axis=1).sum()),
+    }
+
+
 def apply_events(state: ReplState, events: list[tuple]) -> ReplState:
     """Replay a controller reconfiguration journal onto the register file.
 

@@ -1,0 +1,157 @@
+"""Span export: Chrome-trace JSON and JSONL span trees.
+
+Consumes the per-epoch span records accumulated by
+:class:`repro.telemetry.recorder.TelemetryRecorder` (host-side dicts of
+numpy arrays) and renders them two ways:
+
+* :func:`chrome_trace` — a ``chrome://tracing`` / Perfetto-loadable
+  event list.  Each sampled query is a complete ("X") event on its
+  closed-loop client lane, with child slices for the storage service at
+  the target node and (when bounced) the CRAQ version check at the
+  picked replica.  Epochs are laid end to end on one timeline by
+  offsetting each epoch's DES clock with the cumulative makespan of the
+  epochs before it.
+* :func:`span_tree` / :func:`write_jsonl` — one nested dict per sampled
+  query (query -> hop children), the machine-readable form the
+  ``examples/trace_demo.py`` renderer and tests consume.
+
+Placement caveat: the DES engine reports per-query issue/finish times
+(exact) but not per-hop start times, so child slices are *anchored* —
+the service slice ends one link before the reply lands, the bounce check
+starts one link after issue.  Root span boundaries and every duration
+are exact; only interior hop starts are reconstructed.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import keys as K
+from repro.core.coordination import LatencyModel
+from repro.core.routing import unpack_chain
+
+from repro.telemetry.attribution import BUCKETS
+from repro.telemetry.trace import SF, SI
+
+OUTCOME_NAMES = {-1: "n/a", 0: "admitted", 1: "deferred", 2: "shed"}
+
+
+def _op_name(op: int) -> str:
+    return K.OP_NAMES.get(int(op), f"op{int(op)}")
+
+
+def span_tree(rec: dict, j: int, model: LatencyModel) -> dict:
+    """One sampled query's span tree (epoch record ``rec``, row ``j``)."""
+    si = rec["span_i"][j]
+    sf = rec["span_f"][j]
+    lat = float(rec["lat"][j])
+    comps = rec["comps"][j]
+    issue = rec["issue"]
+    t0 = float(rec.get("t0", 0.0))
+    start = t0 + (float(issue[j]) if issue is not None else 0.0)
+    link = float(np.float32(model.link))
+    outcome = int(si[SI["outcome"]])
+    bounced = int(si[SI["bounced"]]) == 1
+    chain = [int(n) for n in unpack_chain(si[SI["chain"]][None])[0] if n >= 0]
+
+    children = []
+    if outcome in (1, 2):
+        children.append({
+            "name": "nack", "node": "switch", "start": start,
+            "dur": lat, "kind": "retry_backoff",
+        })
+    else:
+        svc_store = float(sf[SF["svc_store"]])
+        if bounced:
+            children.append({
+                "name": f"dirty-check@node{int(si[SI['picked']])}",
+                "node": int(si[SI["picked"]]),
+                "start": start + link,
+                "dur": float(np.float32(model.lookup)),
+                "kind": "bounce",
+            })
+        children.append({
+            "name": f"service@node{int(si[SI['target']])}",
+            "node": int(si[SI["target"]]),
+            # anchored: the service slice ends one link before the reply
+            "start": start + lat - link - svc_store,
+            "dur": svc_store,
+            "kind": "service",
+        })
+    return {
+        "epoch": int(si[SI["epoch"]]),
+        "qid": int(si[SI["qid"]]),
+        "key": int(np.int64(si[SI["key"]]) & 0xFFFFFFFF),
+        "op": _op_name(si[SI["opcode"]]),
+        "ridx": int(si[SI["ridx"]]),
+        "target": int(si[SI["target"]]),
+        "picked": int(si[SI["picked"]]),
+        "chain": chain,
+        "outcome": OUTCOME_NAMES.get(outcome, str(outcome)),
+        "bounced": bounced,
+        "queue_depth": int(si[SI["queue_depth"]]),
+        "orbit_level": int(si[SI["orbit_level"]]),
+        "start": start,
+        "latency": lat,
+        "components": {b: float(comps[i]) for i, b in enumerate(BUCKETS)},
+        "hops": children,
+    }
+
+
+def chrome_trace(epochs: list[dict], model: LatencyModel, *,
+                 n_clients: int | None = None,
+                 scenario: str = "", policy: str = "") -> dict:
+    """Render epoch span records as a Chrome-trace object."""
+    events: list[dict] = []
+    for rec in epochs:
+        n = rec["span_i"].shape[0]
+        for j in range(n):
+            tree = span_tree(rec, j, model)
+            lane = (tree["qid"] % n_clients) if n_clients else tree["qid"]
+            name = f"{tree['op']} key=0x{tree['key']:08x}"
+            events.append({
+                "name": name, "ph": "X", "cat": "query",
+                "ts": tree["start"], "dur": tree["latency"],
+                "pid": 0, "tid": f"client{lane}",
+                "args": {
+                    "epoch": tree["epoch"], "qid": tree["qid"],
+                    "target": tree["target"], "chain": tree["chain"],
+                    "outcome": tree["outcome"], "bounced": tree["bounced"],
+                    "queue_depth": tree["queue_depth"],
+                    "orbit_level": tree["orbit_level"],
+                    "components": tree["components"],
+                },
+            })
+            for hop in tree["hops"]:
+                events.append({
+                    "name": hop["name"], "ph": "X", "cat": hop["kind"],
+                    "ts": hop["start"], "dur": hop["dur"],
+                    "pid": 0, "tid": f"node{hop['node']}",
+                    "args": {"epoch": tree["epoch"], "qid": tree["qid"]},
+                })
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "scenario": scenario, "policy": policy,
+            "unit": "DES ticks", "epochs_traced": len(epochs),
+        },
+    }
+
+
+def write_chrome_trace(path: str, epochs: list[dict], model: LatencyModel,
+                       **kw) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(epochs, model, **kw), f, indent=1)
+    return path
+
+
+def write_jsonl(path: str, epochs: list[dict], model: LatencyModel) -> str:
+    """One span tree per line — the machine-readable export."""
+    with open(path, "w") as f:
+        for rec in epochs:
+            for j in range(rec["span_i"].shape[0]):
+                f.write(json.dumps(span_tree(rec, j, model)) + "\n")
+    return path

@@ -1,0 +1,168 @@
+"""Device-resident query tracing: the span-record plane.
+
+The fused period ``lax.scan`` (``repro.cluster.epoch``) already carries
+the store slabs, load registers, sketch, replication register file and
+overload queues through one compiled program per scenario.  This module
+adds the *observability* buffer to that set: a shape-stable per-epoch
+span table for a deterministic sampled subset of queries, assembled on
+device next to the hop plan and synced once per period with everything
+else.
+
+Sampling is ``hash(key, epoch) < rate`` (:func:`sample_mask`) — a pure
+function of data the step already carries, consuming **no PRNG stream**.
+That makes the contract stronger than "telemetry off is bit-identical":
+the metric stream is bit-identical with telemetry on *or* off, because
+tracing perturbs neither the routing/plan RNG draws nor any carried
+state.  The first ``max_spans`` sampled queries of each epoch get a slot
+(cumsum-rank selection, the same idiom as the overload plane's
+admission rank); the total sampled count is recorded so the host can
+report slot-cap truncation instead of silently hiding it.
+
+A span record is two fixed-width rows per slot:
+
+* ``SPAN_I_FIELDS`` (int32) — identity + hop path: epoch, qid, key,
+  opcode, routed range slot, target node, p2c replica pick, the packed
+  write chain (``routing.pack_chain``), chain length, CRAQ bounce flag,
+  admission outcome (``repro.overload.OUTCOME_*``), queue depth at entry
+  and retry-orbit level (both read from the PRE-epoch overload state,
+  exactly as routing observes the pre-epoch store);
+* ``SPAN_F_FIELDS`` (float32) — the latency components: total planned
+  service, link traversals, the storage-only service (total minus the
+  bounce version-check), its unscaled base (inflation removed), and the
+  occupancy inflation factor itself.
+
+``telemetry/attribution.py`` reconstructs each sampled query's DES
+closed-loop latency *exactly* from these five floats plus the DES output
+— every recorded value is an f32 (24-bit mantissa) of modest magnitude,
+so the f64 bucket arithmetic is exact and the components sum to the DES
+latency bit for bit (asserted in ``tests/test_telemetry.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core import routing as R
+from repro.core.coordination import HopPlan
+from repro.core.routing import RoutingDecision
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static knobs of the trace plane (trace constants).
+
+    ``None`` in ``ClusterConfig.telemetry`` disables the subsystem
+    entirely — the driver compiles the identical program and produces
+    the identical metric stream as before it existed.
+    """
+
+    sample_rate: float = 1.0 / 64.0   # hash(key, epoch) < rate samples a query
+    max_spans: int = 64               # span slots per epoch (first-K sampled)
+    flight_epochs: int = 32           # flight-recorder ring length (epochs)
+    slo_p999: float | None = None     # per-epoch p999 breach -> postmortem dump
+    flight_dir: str | None = None     # postmortem artifact directory (None: cwd)
+    profile_stages: bool = True       # wall timers around the pipeline stages
+    jax_trace_dir: str | None = None  # jax.profiler.trace() output dir hook
+
+
+SPAN_I_FIELDS = (
+    "epoch", "qid", "key", "opcode", "ridx", "target", "picked", "chain",
+    "chain_len", "bounced", "outcome", "queue_depth", "orbit_level",
+)
+SPAN_F_FIELDS = ("svc_total", "links", "svc_store", "svc_base", "scale")
+SI = {name: i for i, name in enumerate(SPAN_I_FIELDS)}
+SF = {name: i for i, name in enumerate(SPAN_F_FIELDS)}
+
+
+def rate_threshold(rate: float) -> int:
+    """Map a sample rate in [0, 1] to the uint32 hash threshold (static)."""
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"sample_rate must be in [0, 1], got {rate}")
+    return int(round(rate * float(1 << 32)))
+
+
+def sample_mask(key: jnp.ndarray, epoch, threshold: int) -> jnp.ndarray:
+    """(B,) bool deterministic span sampling: ``hash(key, epoch) < rate``.
+
+    Uses the store's own avalanche mixer over ``key ^ odd-constant*epoch``
+    — no PRNG stream is consumed, so enabling tracing cannot perturb the
+    routing / service-draw / overload randomness (the stronger-than-
+    required bit-parity contract).
+    """
+    if threshold >= (1 << 32):
+        return jnp.ones(key.shape, jnp.bool_)
+    e = jnp.asarray(epoch, jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h = K.hash_key(key.astype(jnp.uint32) ^ e)
+    return h < jnp.uint32(threshold)
+
+
+def collect_spans(
+    q,
+    epoch,
+    decision: RoutingDecision,
+    picked: jnp.ndarray,
+    bounced: jnp.ndarray,
+    outcome: jnp.ndarray,
+    queue_depth: jnp.ndarray,
+    orbit_level: jnp.ndarray,
+    service_scale: jnp.ndarray,
+    plan: HopPlan,
+    *,
+    threshold: int,
+    k_slots: int,
+    lookup: float,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Assemble one epoch's span table on device (pure, jittable).
+
+    Returns ``(span_i (K, |I|) int32, span_f (K, |F|) float32,
+    counts (2,) int32)`` where ``counts = (n_sampled, n_recorded)``.
+    Unfilled slots hold -1 in every int column (``qid >= 0`` marks a live
+    row); sampled queries past the ``k_slots`` cap are counted but
+    dropped (reported, never silent).
+    """
+    B = q.opcode.shape[0]
+    samp = sample_mask(q.key, epoch, threshold)
+    rank = jnp.cumsum(samp.astype(jnp.int32)) - 1
+    # out-of-range slot for unselected/overflowed rows -> scatter drops it
+    slot = jnp.where(samp & (rank < k_slots), rank, k_slots)
+
+    svc_total = jnp.sum(plan.service, axis=1)
+    # the CRAQ bounce's first visit is a version check (model.lookup), not
+    # a storage op — split it out so inflation applies to storage only
+    svc_store = svc_total - jnp.where(bounced, jnp.float32(lookup), 0.0)
+    svc_base = svc_store / service_scale
+
+    i32 = lambda x: x.astype(jnp.int32)
+    ints = jnp.stack(
+        [
+            jnp.full((B,), epoch, jnp.int32),
+            jnp.arange(B, dtype=jnp.int32),
+            i32(q.key),
+            i32(q.opcode),
+            i32(decision.ridx),
+            i32(decision.target),
+            i32(picked),
+            R.pack_chain(decision.chain, decision.chain_len),
+            i32(decision.chain_len),
+            i32(bounced),
+            i32(outcome),
+            i32(queue_depth),
+            i32(orbit_level),
+        ],
+        axis=1,
+    )
+    flts = jnp.stack(
+        [svc_total, plan.reply_links, svc_store, svc_base, service_scale],
+        axis=1,
+    ).astype(jnp.float32)
+
+    span_i = jnp.full((k_slots, len(SPAN_I_FIELDS)), -1, jnp.int32)
+    span_i = span_i.at[slot].set(ints, mode="drop")
+    span_f = jnp.zeros((k_slots, len(SPAN_F_FIELDS)), jnp.float32)
+    span_f = span_f.at[slot].set(flts, mode="drop")
+    n_samp = jnp.sum(samp.astype(jnp.int32))
+    counts = jnp.stack([n_samp, jnp.minimum(n_samp, k_slots)])
+    return span_i, span_f, counts

@@ -113,6 +113,40 @@ def test_fused_bitident_whole_run_single_period():
     assert out[True][0].traces == 1
 
 
+def test_fused_bitident_telemetry_buffer_leaves():
+    """The PR-7 extension of the equivalence gate: with tracing enabled,
+    every telemetry buffer leaf (span tables, counts, latencies, bucket
+    components, issue times) must ALSO match the per-epoch driver bit
+    for bit — the span plane rides the same scan, so fusing may not
+    reorder, drop or re-derive a single recorded value."""
+    from repro.telemetry import TelemetryConfig
+
+    tcfg = TelemetryConfig(sample_rate=1 / 4)
+    out = {}
+    for fused in (False, True):
+        scen = make_scenario("shifting_hotspot", SCFG, theta=1.2,
+                             shift_every=2)
+        drv = EpochDriver(scen, make_policy("full_adaptive"),
+                          _ccfg(2, telemetry=tcfg), fused=fused)
+        rows = drv.run()
+        out[fused] = (drv, rows)
+    _assert_bitident(out)
+    assert out[True][0].traces == 1
+    er = out[False][0].telemetry.epochs
+    ef = out[True][0].telemetry.epochs
+    assert len(er) == len(ef) == SCFG.n_epochs
+    assert out[True][0].telemetry.span_count > 0
+    for a, b in zip(er, ef):
+        assert a["epoch"] == b["epoch"]
+        assert a["n_sampled"] == b["n_sampled"]
+        assert a["makespan"] == b["makespan"]
+        for leaf in ("span_i", "span_f", "lat", "comps", "issue"):
+            np.testing.assert_array_equal(
+                a[leaf], b[leaf],
+                err_msg=f"telemetry leaf {leaf} diverges at epoch "
+                        f"{a['epoch']}")
+
+
 # ---------------------------------------------------------------------------
 # donation + trace stability
 # ---------------------------------------------------------------------------

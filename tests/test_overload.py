@@ -73,7 +73,7 @@ def _drive(cfg, n_nodes, batches, admit_prob=None, retry_budget=None,
     step = jax.jit(OVL.step, static_argnums=(3,))
     rows = []
     for i, t in enumerate(batches):
-        st, rej, scale, stats = step(
+        st, rej, scale, outcome, stats = step(
             st, jnp.asarray(t, jnp.int32), jax.random.fold_in(rng, i), cfg)
         rows.append(np.asarray(stats))
     return st, np.stack(rows)
@@ -148,9 +148,9 @@ def test_service_scale_inflates_with_occupancy():
     cfg = OVL.OverloadConfig(queue_cap=10, service_rate=2, inflation=3.0)
     st = OVL.make_state(1, cfg)
     rng = jax.random.PRNGKey(0)
-    st, _, scale0, _ = OVL.step(st, jnp.zeros(8, jnp.int32), rng, cfg)
+    st, _, scale0, _, _ = OVL.step(st, jnp.zeros(8, jnp.int32), rng, cfg)
     # queue now non-empty -> next epoch's admitted queries pay more
-    st, _, scale1, _ = OVL.step(st, jnp.zeros(8, jnp.int32), rng, cfg)
+    st, _, scale1, _, _ = OVL.step(st, jnp.zeros(8, jnp.int32), rng, cfg)
     assert float(np.asarray(scale0).max()) == pytest.approx(1.0)
     assert float(np.asarray(scale1).max()) > 1.0
 
