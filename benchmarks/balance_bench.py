@@ -179,6 +179,7 @@ def run_matrix(scenarios, policies, quick: bool, *, service: str = "fixed",
             row["period"] = period
             row["fused"] = fused
             row["host_syncs"] = drv.host_syncs
+            row["growth_events"] = drv.growth_events
             if drv.period_history:
                 row["auto_periods"] = list(drv.period_history)
             if measure_steady and backend == "oracle":
@@ -246,10 +247,11 @@ def check_acceptance(rows, *, quick: bool = False) -> list[str]:
                 f"!<= migrate {m['total_migration_entries']}"
             )
     for r in rows:
-        if r["traces"] != 1:
+        expect = 1 + r.get("growth_events", 0)
+        if r["traces"] != expect:
             problems.append(
                 f"{r['scenario']}/{r['policy']}: epoch step traced "
-                f"{r['traces']}x (expected 1)"
+                f"{r['traces']}x (expected {expect})"
             )
     return problems
 
@@ -453,8 +455,41 @@ def dist_worker(quick: bool) -> int:
     rows = run_matrix([DIST_SCENARIO], list(DIST_POLICIES), quick,
                       backend="dist", mesh=mesh, dist_cfg=dist_cfg,
                       verbose=False)
+    rows.append(_dist_growth_row(mesh, quick))
     print(json.dumps({"rows": rows}))
     return 0
+
+
+def _dist_growth_row(mesh, quick: bool) -> dict:
+    """keyspace_growth under capacity pressure on the dist backend: the
+    pool must actually grow mid-run, and growth must cost exactly one
+    re-specialization of the fused period program
+    (``traces == 1 + growth_events`` — checked by the --dist gate)."""
+    from repro.cluster import (ClusterConfig, EpochDriver, ScenarioConfig,
+                               make_policy, make_scenario, summarize)
+
+    scfg = ScenarioConfig(n_epochs=6 if quick else 10, epoch_ops=512,
+                          n_records=2048, read_ratio=0.3, value_dim=2,
+                          seed=1)
+    scen = make_scenario("keyspace_growth", scfg)
+    drv = EpochDriver(
+        scen, make_policy("full_adaptive"),
+        ClusterConfig(num_nodes=8, num_ranges=8, n_slots=8, replication=1,
+                      r_max=2, capacity=64, split_overflow=True,
+                      report_every=2),
+        backend="dist", mesh=mesh)
+    epochs = drv.run()
+    row = summarize(epochs)
+    row.update({
+        "scenario": "keyspace_growth",
+        "bench": "dist_growth",
+        "backend": "dist",
+        "fused": True,
+        "traces": drv.traces,
+        "growth_events": drv.growth_events,
+        "host_syncs": drv.host_syncs,
+    })
+    return row
 
 
 def main(argv=None):
@@ -525,6 +560,7 @@ def main(argv=None):
         replication_problems = check_replication(repl_rows)
         rows.extend(repl_rows)
 
+    dist_problems: list[str] = []
     if args.dist:
         dist_rows = run_dist_parity(args.quick)
         for r in dist_rows:
@@ -532,7 +568,20 @@ def main(argv=None):
                 f"[dist] {r['scenario']:14s} {r['policy']:14s} "
                 f"imb {r['mean_imbalance']:5.2f} p99 {r['mean_p99']:6.1f} "
                 f"retries {r['total_retries']:4d} "
-                f"({r['total_retries'] / max(r['epochs'], 1):.1f}/epoch)"
+                f"({r['total_retries'] / max(r['epochs'], 1):.1f}/epoch) "
+                f"traces {r['traces']} grows {r.get('growth_events', 0)}"
+            )
+            expect = 1 + r.get("growth_events", 0)
+            if r["traces"] != expect:
+                dist_problems.append(
+                    f"dist {r['scenario']}/{r['policy']}: traces "
+                    f"{r['traces']} != 1 + growth_events ({expect})"
+                )
+        grow = [r for r in dist_rows if r.get("bench") == "dist_growth"]
+        if grow and grow[0]["growth_events"] < 1:
+            dist_problems.append(
+                "keyspace_growth --dist never grew the pool under "
+                "capacity pressure"
             )
         rows.extend(dist_rows)
 
@@ -545,7 +594,7 @@ def main(argv=None):
     if not args.no_check:
         problems = (check_acceptance(rows, quick=args.quick)
                     + profile_problems + trace_problems
-                    + replication_problems)
+                    + replication_problems + dist_problems)
         if problems:
             print("ACCEPTANCE FAILED:")
             for p in problems:
@@ -557,6 +606,9 @@ def main(argv=None):
         if "multi_hotspot" in scenarios:
             gates.append("split_hot < migrate on imbalance at <= entries moved")
         gates.append("all steps compiled once")
+        if args.dist:
+            gates.append("dist: traces == 1 + growth_events, pool grows "
+                         "under keyspace_growth capacity pressure")
         if args.profile:
             g = PROFILE_RATIO_GATE_QUICK if args.quick else PROFILE_RATIO_GATE
             gates.append(

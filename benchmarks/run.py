@@ -96,9 +96,12 @@ def table_hierarchy(n_ops: int):
 
 
 def table_kernels():
-    from benchmarks.kernel_bench import bench_range_match, bench_decode_attn, bench_ssd
+    from benchmarks.kernel_bench import (
+        bench_range_match, bench_range_match_apply, bench_decode_attn, bench_ssd,
+    )
 
-    for name, us, derived in bench_range_match() + bench_decode_attn() + bench_ssd():
+    for name, us, derived in (bench_range_match() + bench_range_match_apply()
+                              + bench_decode_attn() + bench_ssd()):
         _emit(name, us, derived)
 
 

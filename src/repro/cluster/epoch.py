@@ -70,7 +70,11 @@ from repro.core import keys as K
 from repro.core import routing as R
 from repro.core.controller import Controller, ControllerConfig
 from repro.core.coordination import LatencyModel, plan_hops
-from repro.core.dist_store import DistConfig, make_dist_apply
+from repro.core.dist_store import (
+    DistConfig,
+    make_dist_apply,
+    make_dist_period,
+)
 from repro.core.migration import execute as execute_migrations
 from repro.core.stats import make_sketch, pull_report, sketch_query, sketch_update
 from repro.core.store import apply_routed, make_store
@@ -150,8 +154,9 @@ class ClusterConfig:
     # capacity-driven splitting in the loop: at each control pull, split
     # the hottest range headed at any node whose store overflowed since
     # the last pull (Controller.split_overflowed) and — when the slot
-    # pool is exhausted — grow the pool and rebuild the compiled step
-    # (oracle backend only; `traces` then counts 1 + growth_events)
+    # pool is exhausted — grow the pool and recompile (oracle rebuilds
+    # its step; the dist programs re-specialize on the grown shapes by
+    # themselves; `traces` then counts 1 + growth_events either way)
     split_overflow: bool = False
     # the trace plane (repro.telemetry): None disables it and the run is
     # bit-identical to pre-telemetry behaviour; a TelemetryConfig samples
@@ -240,11 +245,6 @@ class EpochDriver:
         self.cfg = cfg = cfg or ClusterConfig()
         if backend not in ("oracle", "dist"):
             raise ValueError(f"unknown backend {backend!r}")
-        if cfg.split_overflow and backend != "oracle":
-            raise ValueError(
-                "split_overflow needs backend='oracle' (the dist mesh "
-                "cannot rebuild its sharded step mid-run)"
-            )
         if backend == "dist" and mesh is None:
             raise ValueError("backend='dist' needs a mesh")
         self.backend = backend
@@ -384,8 +384,16 @@ class EpochDriver:
                            and cfg.overload.queue_weight > 0
                            and self.mode_plan.spread),
             )
-            self._dist_apply = make_dist_apply(mesh, directory, self._dist_cfg)
-            self._step = self._build_dist_step()
+            if fused:
+                # the whole period inside ONE shard_map (a2a rounds in
+                # the scan body) — compiled once, like the oracle scan
+                self._dist_apply = None
+                self._period_fn = self._build_dist_period()
+            else:
+                self._dist_apply = make_dist_apply(
+                    mesh, directory, self._dist_cfg
+                )
+                self._step = self._build_dist_step()
         elif fused:
             self._period_fn = self._build_oracle_period(self.mode_plan)
         else:
@@ -414,6 +422,10 @@ class EpochDriver:
             return max(self._traces,
                        self._trace_base + _jit_cache_size(self._step, 0))
         t = self._traces
+        if self.fused:
+            # the fused dist period program: one cache entry per distinct
+            # shape set (pool growth retraces it, counted like the oracle)
+            return max(t, _jit_cache_size(self._dist_period, 0))
         return max(t, _jit_cache_size(self._dist_apply, 0))
 
     # -- setup -------------------------------------------------------------
@@ -666,32 +678,24 @@ class EpochDriver:
         # also tiny next to the slabs, so nothing is lost.
         return jax.jit(period, donate_argnums=(0, 2, 3, 4, 5))
 
-    def _build_dist_step(self):
-        from jax.sharding import NamedSharding, PartitionSpec
-
+    def _make_dist_observe(self):
+        """The dist observe stage — everything after the sharded apply,
+        operating on the GLOBAL batch (per-node op counts, the sketch,
+        the overload admission step, hop planning, replication-register
+        advance, span sampling).  Shared verbatim by the per-epoch step
+        (jitted at host level on the assembled decision) and the fused
+        period program (run replicated inside the shard_map on the
+        all_gathered decision), so the two are the same math."""
         cfg = self.cfg
         N = cfg.num_nodes
         mp = self.mode_plan
-        spread = mp.spread
-        dist_apply = self._dist_apply
-        # canonical layouts: replicated control state, node-sharded store.
-        # Every call re-commits its inputs to these (a no-op at steady
-        # state) — jit keys its cache on input commitment, so the mix of
-        # committed step outputs and uncommitted host-built refresh tables
-        # would otherwise compile the fused program twice (epoch 0 with
-        # fresh host arrays, epoch 1 with device outputs: a hidden
-        # retrace the `traces` gate now catches).
-        rep = NamedSharding(self._mesh, PartitionSpec())
-        shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
         ocfg = self.ovl_cfg
-        use_qpen = self._dist_cfg.queue_pen
         tcfg = self.tel_cfg
         tel_thr = self._tel_threshold
 
         def observe(q, ridx, target, chain, chain_len, sketch, rng, repl,
                     picked, bounced, ovl, r_ovl, eid):
-            """Jitted post-processing of the dist apply's decision."""
-            self._traces += 1
+            """Post-processing of the dist apply's decision."""
             B = target.shape[0]
             decision = C.RoutingDecision(
                 ridx=ridx,
@@ -758,6 +762,32 @@ class EpochDriver:
                 spans = None
             return sketch, plan, node_ops, repl, ovl, ostats, spans
 
+        return observe
+
+    def _build_dist_step(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        cfg = self.cfg
+        mp = self.mode_plan
+        spread = mp.spread
+        dist_apply = self._dist_apply
+        # canonical layouts: replicated control state, node-sharded store.
+        # Every call re-commits its inputs to these (a no-op at steady
+        # state) — jit keys its cache on input commitment, so the mix of
+        # committed step outputs and uncommitted host-built refresh tables
+        # would otherwise compile the fused program twice (epoch 0 with
+        # fresh host arrays, epoch 1 with device outputs: a hidden
+        # retrace the `traces` gate now catches).
+        rep = NamedSharding(self._mesh, PartitionSpec())
+        shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
+        ocfg = self.ovl_cfg
+        use_qpen = self._dist_cfg.queue_pen
+        observe_body = self._make_dist_observe()
+
+        def observe(*args):
+            self._traces += 1  # python side effect: counts traces
+            return observe_body(*args)
+
         observe = jax.jit(observe)
 
         def step(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
@@ -807,6 +837,57 @@ class EpochDriver:
                     node_ops, m["bucket_overflow"], bounced, ostats, spans)
 
         return step
+
+    def _build_dist_period(self):
+        """The fused dist period program (the scale-out tentpole): the
+        whole control period runs as ONE shard_map program with the
+        ``lax.scan`` over epochs *inside* it (``make_dist_period``) — one
+        dispatch and one compile per scenario, like the oracle scan,
+        instead of one shard_map program per epoch.  Wrapped with the
+        same canonical-sharding re-commit as the per-epoch step (jit keys
+        its cache on input commitment) and exposing the oracle period
+        fn's exact signature so ``_scan_segment`` drives both backends."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mp = self.mode_plan
+        ocfg = self.ovl_cfg
+        use_qpen = self._dist_cfg.queue_pen
+
+        def pre(repl, ovl):
+            # the per-epoch routing inputs the driver derives from carried
+            # state between steps, now derived inside the scan body —
+            # identical math on identical (pre-epoch) state
+            queue_pen = None
+            if use_qpen:
+                queue_pen = ovl.queue.astype(jnp.uint32) * jnp.uint32(
+                    ocfg.queue_weight
+                )
+            dirty = RPL.dirty_bits(repl) if mp.dirty_reads else None
+            return dirty, queue_pen
+
+        self._dist_period = make_dist_period(
+            self._mesh, self.directory, self._dist_cfg,
+            pre=pre, observe=self._make_dist_observe(),
+            fold_ovl=ocfg is not None,
+        )
+        rep = NamedSharding(self._mesh, PartitionSpec())
+        shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
+
+        def period(store, directory, load_reg, sketch, repl, ovl,
+                   qs, rngs, live, eids):
+            store = jax.device_put(store, shd)
+            directory = jax.device_put(directory, rep)
+            load_reg = jax.device_put(load_reg, rep)
+            sketch = jax.device_put(sketch, rep)
+            repl = jax.device_put(repl, rep)
+            if ovl is not None:
+                ovl = jax.device_put(ovl, rep)
+            return self._dist_period(
+                store, directory, load_reg, sketch, repl, ovl,
+                qs, rngs, live, eids,
+            )
+
+        return period
 
     # -- host-side helpers -------------------------------------------------
     def _sync(self, x) -> np.ndarray:
@@ -985,7 +1066,12 @@ class EpochDriver:
         else:
             self.directory = self.controller.refresh(self.directory)
         self._sync_repl()
-        if self.auto_period:
+        if self.auto_period and now < self.scenario.cfg.n_epochs:
+            # the pull at the final boundary has no next period to tune:
+            # retuning there would append a period choice that never
+            # executes (and, pre-fix, one computed without the realized
+            # budget_scale) — drop it from period_history instead of
+            # reporting a known-stale field
             nl = np.asarray(report.node_load, np.float64)
             if self.mode_plan.spread:
                 # registers are cumulative-with-decay; the drift input is
@@ -1063,6 +1149,13 @@ class EpochDriver:
         count is banked in ``_trace_base`` so :attr:`traces` reports
         exactly ``1 + growth_events`` when recompiles only follow
         growth — the no-silent-retrace gate, now growth-aware."""
+        if self.backend == "dist":
+            # the dist programs close over no shapes: jit re-specializes
+            # on the grown directory/repl arrays by itself, and the
+            # traces property reads that cache — count the growth, keep
+            # the program
+            self.growth_events += 1
+            return
         if self.fused:
             self._trace_base += _jit_cache_size(self._period_fn, 0)
             self._period_fn = self._build_oracle_period(self.mode_plan)
@@ -1077,46 +1170,53 @@ class EpochDriver:
         period pipeline is asserted bit-identical against)."""
         if self._step is None:
             raise RuntimeError(
-                "per-epoch stepping is unavailable on the fused oracle "
-                "driver; use run(), or construct with fused=False"
+                "per-epoch stepping is unavailable on a fused driver; "
+                "use run(), or construct with fused=False"
             )
         cfg = self.cfg
         scfg = self.scenario.cfg
         events, mig_entries, mig_bytes = self._handle_events(e)
 
-        opcodes, keys, end_keys, values = self.scenario.epoch(e)
-        self._note_keys(keys)
-        q = C.make_queries(
-            jnp.asarray(keys), jnp.asarray(opcodes),
-            jnp.asarray(values), jnp.asarray(end_keys),
-        )
-        rng = jax.random.fold_in(self.key, e)
+        with self._timers.stage("inject"):
+            opcodes, keys, end_keys, values = self.scenario.epoch(e)
+            self._note_keys(keys)
+            q = C.make_queries(
+                jnp.asarray(keys), jnp.asarray(opcodes),
+                jnp.asarray(values), jnp.asarray(end_keys),
+            )
+            rng = jax.random.fold_in(self.key, e)
+        with self._timers.stage("route_apply"):
+            out = self._step(
+                self.store, self.directory, self.load_reg, self.sketch,
+                self.repl, self.ovl, q, rng, jnp.int32(e)
+            )
+            if self._timers.enabled:
+                # profiling measures execution, not dispatch; values are
+                # untouched (an explicit, wall-time-only observer effect)
+                jax.block_until_ready(out)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, plan, node_ops, retries, bounced, ostats,
-         spans) = self._step(
-            self.store, self.directory, self.load_reg, self.sketch,
-            self.repl, self.ovl, q, rng, jnp.int32(e)
-        )
+         self.ovl, plan, node_ops, retries, bounced, ostats, spans) = out
 
         self.host_syncs += 1   # the DES engine pulls the plan to the host
         issue = None
-        if self.telemetry is not None:
-            latency, makespan, issue = C.simulate_closed_loop(
-                plan,
-                n_clients=cfg.n_clients,
-                num_nodes=cfg.num_nodes,
-                link=cfg.latency.link,
-                backend=cfg.des_backend,
-                return_issue=True,
-            )
-        else:
-            latency, makespan = C.simulate_closed_loop(
-                plan,
-                n_clients=cfg.n_clients,
-                num_nodes=cfg.num_nodes,
-                link=cfg.latency.link,
-                backend=cfg.des_backend,
-            )
+        with self._timers.stage("des"):
+            if self.telemetry is not None:
+                latency, makespan, issue = C.simulate_closed_loop(
+                    plan,
+                    n_clients=cfg.n_clients,
+                    num_nodes=cfg.num_nodes,
+                    link=cfg.latency.link,
+                    backend=cfg.des_backend,
+                    return_issue=True,
+                )
+            else:
+                latency, makespan = C.simulate_closed_loop(
+                    plan,
+                    n_clients=cfg.n_clients,
+                    num_nodes=cfg.num_nodes,
+                    link=cfg.latency.link,
+                    backend=cfg.des_backend,
+                )
         lat = np.asarray(latency)[None]
         (p50,), (p99,) = latency_percentiles_batch(lat)
         (p999,) = p999_batch(lat)
@@ -1285,9 +1385,11 @@ class EpochDriver:
                 opcodes_h)
 
     def _step_segment(self, e0: int, L: int):
-        """Dist-backend segment: per-epoch device steps (shard_map programs
-        do not nest under a scan) with all host syncs deferred to the
-        period boundary — plans/metrics stay on device until then."""
+        """Per-epoch dist segment (the ``fused=False`` reference loop):
+        one shard_map program per epoch with all host syncs deferred to
+        the period boundary — plans/metrics stay on device until then.
+        The fused dist driver runs the same period through
+        :meth:`_scan_segment` instead (scan inside the shard_map)."""
         plans, nops_l, rtr_l, ovf_l, bnc_l, ost_l, spn_l, op_l = (
             [], [], [], [], [], [], [], []
         )
@@ -1323,7 +1425,7 @@ class EpochDriver:
     def _run_segment(self, e0: int, n: int) -> list[EpochMetrics]:
         ev0, en0, by0 = self._handle_events(e0)
         L = self._segment_len(e0, n)
-        if self.backend == "oracle":
+        if self._period_fn is not None:
             (plan, node_ops, retries, ovf, bounced, ostats, spans,
              opcodes_h) = self._scan_segment(e0, L)
         else:

@@ -63,11 +63,11 @@ class PolicyConfig:
     merge_patience: int = 2
     # lineage compaction: re-parent dangling/deep split lineage each
     # report so `generation` stays bounded (Controller.compact_lineage).
-    # None (default) leaves the lineage untouched — rescued orphans merge
-    # where they previously could not, which perturbs the hysteresis and
-    # would break the gate matrix's bit-comparability with the PR-3/4
-    # rows; long-running deployments should set a bound.
-    max_lineage_depth: int | None = None
+    # On by default: rescued orphans merge where they previously could
+    # not, keeping long adversarial split runs from growing the lineage
+    # without bound.  Set to None to leave lineage untouched (the pre-PR-8
+    # behaviour, bit-comparable with the PR-3/4 gate-matrix rows).
+    max_lineage_depth: int | None = 3
 
     # ---- overload backpressure (repro.overload; OverloadAdaptivePolicy) ----
     # AIMD admission control on queue occupancy (depth / queue_limit):

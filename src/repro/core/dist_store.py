@@ -29,10 +29,22 @@ backend (``DistConfig.read_spread`` turns on the load-aware p2c read
 path, ``return_decision`` feeds the DES hop planner).  Slab mutations go
 through ``store.shard_apply`` -> ``slab_put``/``slab_delete``, so the
 PR-4 searchsorted rank merge applies here verbatim and oracle/dist
-parity stays bit-exact; the fused epoch driver steps this backend
-per-epoch (shard_map programs are not scanned) but defers every host
-sync to the period boundary, stacking the per-epoch plans/metrics on
-device until then.
+parity stays bit-exact.
+
+Two entry points share one per-device data plane (``_make_bucket_plane``):
+
+  * :func:`make_dist_apply` — ONE epoch per shard_map dispatch (the
+    per-epoch reference path; the fused driver used to step this with
+    deferred host syncs).
+  * :func:`make_dist_period` — the whole control period as ONE shard_map
+    program with a ``lax.scan`` over the epochs *inside* it: the a2a
+    bucketing rounds run in the scan body, the directory / load / repl /
+    overload registers scan exactly like the single-host donated
+    buffers, and the per-epoch routing decision is ``all_gather``-ed so
+    the observe stage (node ops, sketch, overload step, hop plans, span
+    sampling — all global-batch-order dependent) runs replicated on
+    every device.  Bit-identical to stepping :func:`make_dist_apply`
+    per epoch, compiled once per scenario.
 """
 
 from __future__ import annotations
@@ -138,6 +150,136 @@ def _local_slab(store: StoreState):
     return store.keys[0], store.values[0]
 
 
+def _make_bucket_plane(cfg: DistConfig, n_shards: int):
+    """The per-device ``bucket_a2a`` data plane, shared verbatim by the
+    per-epoch apply (:func:`make_dist_apply`) and the fused period program
+    (:func:`make_dist_period`) so the two are the same dataflow: route the
+    local batch slice (psum-delta keeps counters/load registers globally
+    consistent), one read all_to_all round, ``r_max`` sequential write
+    rounds along the chain (Fig 9a), local slab mutation.
+
+    Returns ``plane(store, directory, q_local, load_reg, rng, dirty,
+    queue_pen) -> (store', resp, directory', load_reg', decision, picked,
+    bounced, bucket_overflow)``; ``load_reg``/``rng``/``dirty``/
+    ``queue_pen`` ride through untouched on the paths that ignore them.
+    """
+    axis = cfg.axis
+    spread = cfg.read_spread
+    craq = cfg.replication_mode == "craq"
+
+    def plane(store: StoreState, directory: Directory, q: R.QueryBatch,
+              load_reg, rng, dirty, queue_pen):
+        me = jax.lax.axis_index(axis)
+        slab_keys, slab_vals = _local_slab(store)
+        picked = bounced = None
+        base_dir = directory
+        if craq:
+            base_load = load_reg
+            decision, directory, load_reg, picked, bounced = (
+                R.route_load_aware_dirty(
+                    directory, q, load_reg, dirty, jax.random.fold_in(rng, me),
+                    queue_pen=queue_pen,
+                )
+            )
+            load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
+        elif spread:
+            base_load = load_reg
+            # distinct draws per device (each routes its own batch slice)
+            decision, directory, load_reg = R.route_load_aware(
+                directory, q, load_reg, jax.random.fold_in(rng, me),
+                queue_pen=queue_pen,
+            )
+            load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
+        else:
+            decision, directory = R.route(directory, q)
+        # counters were bumped from the *local* slice only; make the
+        # statistics registers globally consistent (replicated out_spec)
+        directory = dataclasses.replace(
+            directory,
+            read_count=base_dir.read_count
+            + jax.lax.psum(directory.read_count - base_dir.read_count, axis),
+            write_count=base_dir.write_count
+            + jax.lax.psum(directory.write_count - base_dir.write_count, axis),
+        )
+        is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+        cap = cfg.bucket_cap
+        n_slots = n_shards * cap
+
+        # --- reads: one a2a round to the tail, replies via inverse a2a ---
+        read_target = jnp.where(
+            ~is_write & (q.key != K.EMPTY_KEY), decision.target, DROP
+        )
+        slot, ovf_r = bucketize(read_target, n_shards, cap)
+        bkeys = scatter_to_buckets(slot, q.key, n_slots, K.EMPTY_KEY)
+        bop = scatter_to_buckets(slot, q.opcode, n_slots, jnp.int32(K.OP_GET))
+        bend = scatter_to_buckets(slot, q.end_key, n_slots, jnp.uint32(0))
+        bkeys, bop, bend = (_a2a(x, axis, n_shards) for x in (bkeys, bop, bend))
+
+        inbound = R.QueryBatch(
+            opcode=bop, key=bkeys, end_key=bend,
+            value=jnp.zeros((n_slots, q.value.shape[1]), q.value.dtype),
+        )
+        read_mine = (inbound.opcode == K.OP_GET) | (inbound.opcode == K.OP_SCAN)
+        read_mine &= inbound.key != K.EMPTY_KEY
+        slab_keys, slab_vals, _, resp_in = shard_apply(
+            slab_keys, slab_vals, inbound, read_mine,
+            jnp.zeros_like(read_mine),  # no writes in the read round
+            max_scan_results=cfg.max_scan_results,
+        )
+        # replies travel back through the inverse all_to_all
+        back = jax.tree.map(lambda x: _a2a(x, axis, n_shards), resp_in)
+        resp = Responses(
+            value=gather_from_buckets(slot, back.value, 0.0),
+            found=gather_from_buckets(slot, back.found, False),
+            scan_values=gather_from_buckets(slot, back.scan_values, 0.0),
+            scan_keys=gather_from_buckets(slot, back.scan_keys, K.EMPTY_KEY),
+            scan_count=gather_from_buckets(slot, back.scan_count, jnp.int32(0)),
+        )
+
+        # --- writes: r sequential a2a rounds along the chain (Fig 9a) ---
+        ovf_w = jnp.zeros((), ovf_r.dtype)
+        r_max = decision.chain.shape[1]
+        for pos in range(r_max):
+            live = is_write & (pos < decision.chain_len) & (q.key != K.EMPTY_KEY)
+            wt = jnp.where(live, decision.chain[:, pos], DROP)
+            wslot, ovf = bucketize(wt, n_shards, cap)
+            ovf_w += ovf
+            wkeys = scatter_to_buckets(wslot, q.key, n_slots, K.EMPTY_KEY)
+            wop = scatter_to_buckets(wslot, q.opcode, n_slots, jnp.int32(K.OP_GET))
+            wval = scatter_to_buckets(wslot, q.value, n_slots, 0.0)
+            wkeys, wop, wval = (_a2a(x, axis, n_shards) for x in (wkeys, wop, wval))
+            wq = R.QueryBatch(
+                opcode=wop, key=wkeys, end_key=jnp.zeros_like(wkeys), value=wval
+            )
+            write_mine = ((wq.opcode == K.OP_PUT) | (wq.opcode == K.OP_DEL)) & (
+                wq.key != K.EMPTY_KEY
+            )
+            slab_keys, slab_vals, dropped, wresp = shard_apply(
+                slab_keys, slab_vals, wq, jnp.zeros_like(write_mine), write_mine,
+                max_scan_results=1,
+            )
+            if pos == 0:
+                put_dropped = dropped
+            else:
+                put_dropped = put_dropped + dropped
+            # tail replies: DEL found flag returns from the last chain pos
+            wback = _a2a(wresp.found, axis, n_shards)
+            at_tail = is_write & (pos == decision.chain_len - 1)
+            got = gather_from_buckets(wslot, wback, False)
+            resp = dataclasses.replace(
+                resp, found=jnp.where(at_tail, got, resp.found)
+            )
+
+        new_store = StoreState(
+            keys=slab_keys[None], values=slab_vals[None],
+            overflow=store.overflow + put_dropped,
+        )
+        return (new_store, resp, directory, load_reg, decision, picked,
+                bounced, (ovf_r + ovf_w).astype(jnp.int32))
+
+    return plane
+
+
 def _a2a(x: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
     """(n, cap, ...) buckets -> transposed across the mesh axis."""
     return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
@@ -170,6 +312,7 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
     if craq and not spread:
         raise ValueError("replication_mode='craq' needs read_spread=True "
                          "(apportioned reads are the protocol)")
+    bucket_plane = _make_bucket_plane(cfg, n_shards)
 
     def per_device(store: StoreState, directory: Directory, q: R.QueryBatch,
                    load_reg=None, rng=None, dirty=None, queue_pen=None):
@@ -230,109 +373,14 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
                 return new_store, resp, directory, load_reg, metrics
             return new_store, resp, directory, metrics
 
-        # ---- bucket_a2a ----
-        base_dir = directory
-        if craq:
-            base_load = load_reg
-            decision, directory, load_reg, picked, bounced = (
-                R.route_load_aware_dirty(
-                    directory, q, load_reg, dirty, jax.random.fold_in(rng, me),
-                    queue_pen=queue_pen,
-                )
-            )
-            load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
-        elif spread:
-            base_load = load_reg
-            # distinct draws per device (each routes its own batch slice)
-            decision, directory, load_reg = R.route_load_aware(
-                directory, q, load_reg, jax.random.fold_in(rng, me),
-                queue_pen=queue_pen,
-            )
-            load_reg = base_load + jax.lax.psum(load_reg - base_load, axis)
-        else:
-            decision, directory = R.route(directory, q)
-        # counters were bumped from the *local* slice only; make the
-        # statistics registers globally consistent (replicated out_spec)
-        directory = dataclasses.replace(
-            directory,
-            read_count=base_dir.read_count
-            + jax.lax.psum(directory.read_count - base_dir.read_count, axis),
-            write_count=base_dir.write_count
-            + jax.lax.psum(directory.write_count - base_dir.write_count, axis),
-        )
-        is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
-        Bl = q.opcode.shape[0]
-        cap = cfg.bucket_cap
-        n_slots = n_shards * cap
-
-        # --- reads: one a2a round to the tail, replies via inverse a2a ---
-        read_target = jnp.where(~is_write & (q.key != K.EMPTY_KEY), decision.target, DROP)
-        slot, ovf_r = bucketize(read_target, n_shards, cap)
-        bkeys = scatter_to_buckets(slot, q.key, n_slots, K.EMPTY_KEY)
-        bop = scatter_to_buckets(slot, q.opcode, n_slots, jnp.int32(K.OP_GET))
-        bend = scatter_to_buckets(slot, q.end_key, n_slots, jnp.uint32(0))
-        bkeys, bop, bend = (_a2a(x, axis, n_shards) for x in (bkeys, bop, bend))
-
-        inbound = R.QueryBatch(
-            opcode=bop, key=bkeys, end_key=bend,
-            value=jnp.zeros((n_slots, q.value.shape[1]), q.value.dtype),
-        )
-        read_mine = (inbound.opcode == K.OP_GET) | (inbound.opcode == K.OP_SCAN)
-        read_mine &= inbound.key != K.EMPTY_KEY
-        slab_keys, slab_vals, _, resp_in = shard_apply(
-            slab_keys, slab_vals, inbound, read_mine,
-            jnp.zeros_like(read_mine),  # no writes in the read round
-            max_scan_results=cfg.max_scan_results,
-        )
-        # replies travel back through the inverse all_to_all
-        back = jax.tree.map(lambda x: _a2a(x, axis, n_shards), resp_in)
-        resp = Responses(
-            value=gather_from_buckets(slot, back.value, 0.0),
-            found=gather_from_buckets(slot, back.found, False),
-            scan_values=gather_from_buckets(slot, back.scan_values, 0.0),
-            scan_keys=gather_from_buckets(slot, back.scan_keys, K.EMPTY_KEY),
-            scan_count=gather_from_buckets(slot, back.scan_count, jnp.int32(0)),
-        )
-
-        # --- writes: r sequential a2a rounds along the chain (Fig 9a) ---
-        ovf_w = jnp.zeros((), ovf_r.dtype)
-        r_max = decision.chain.shape[1]
-        for pos in range(r_max):
-            live = is_write & (pos < decision.chain_len) & (q.key != K.EMPTY_KEY)
-            wt = jnp.where(live, decision.chain[:, pos], DROP)
-            wslot, ovf = bucketize(wt, n_shards, cap)
-            ovf_w += ovf
-            wkeys = scatter_to_buckets(wslot, q.key, n_slots, K.EMPTY_KEY)
-            wop = scatter_to_buckets(wslot, q.opcode, n_slots, jnp.int32(K.OP_GET))
-            wval = scatter_to_buckets(wslot, q.value, n_slots, 0.0)
-            wkeys, wop, wval = (_a2a(x, axis, n_shards) for x in (wkeys, wop, wval))
-            wq = R.QueryBatch(
-                opcode=wop, key=wkeys, end_key=jnp.zeros_like(wkeys), value=wval
-            )
-            write_mine = ((wq.opcode == K.OP_PUT) | (wq.opcode == K.OP_DEL)) & (
-                wq.key != K.EMPTY_KEY
-            )
-            slab_keys, slab_vals, dropped, wresp = shard_apply(
-                slab_keys, slab_vals, wq, jnp.zeros_like(write_mine), write_mine,
-                max_scan_results=1,
-            )
-            if pos == 0:
-                put_dropped = dropped
-            else:
-                put_dropped = put_dropped + dropped
-            # tail replies: DEL found flag returns from the last chain pos
-            wback = _a2a(wresp.found, axis, n_shards)
-            at_tail = is_write & (pos == decision.chain_len - 1)
-            got = gather_from_buckets(wslot, wback, False)
-            resp = dataclasses.replace(resp, found=jnp.where(at_tail, got, resp.found))
-
-        new_store = StoreState(
-            keys=slab_keys[None], values=slab_vals[None],
-            overflow=store.overflow + put_dropped,
+        # ---- bucket_a2a (the shared per-device data plane) ----
+        (new_store, resp, directory, load_reg, decision, picked, bounced,
+         bucket_ovf) = bucket_plane(
+            store, directory, q, load_reg, rng, dirty, queue_pen
         )
         metrics = {
-            "bucket_overflow": (ovf_r + ovf_w).astype(jnp.int32),
-            "a2a_rounds": jnp.int32(1 + r_max),
+            "bucket_overflow": bucket_ovf,
+            "a2a_rounds": jnp.int32(1 + decision.chain.shape[1]),
         }
         if cfg.return_decision:
             metrics.update({
@@ -434,6 +482,125 @@ def make_dist_apply(mesh, directory_template: Directory, cfg: DistConfig):
 
     fn = shard_map_compat(entry, mesh, in_specs, out_specs)
     return jax.jit(fn)
+
+
+def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
+                     *, pre, observe, fold_ovl: bool):
+    """Build the whole-period dist program: ONE shard_map whose per-device
+    body runs a ``lax.scan`` over the period's epochs, each scan step
+    executing the bounded-bucket a2a data plane on the local batch slice
+    and then the *replicated* observe stage on the all_gathered decision.
+
+    The observe stage (per-node op counts, the count-min sketch, the
+    overload admission step, DES hop planning, replication-register
+    advance, span sampling) is global-batch-order dependent — admission
+    ranks and span slots are cumsums over the whole batch — so it cannot
+    run shard-local.  Gathering the per-epoch decision (a few (B,) int
+    vectors) and recomputing it identically on every device keeps it
+    bit-identical to the per-epoch path's host-level observe at the cost
+    of one tiled all_gather per epoch.
+
+    ``pre(repl, ovl) -> (dirty, queue_pen)`` derives the routing inputs
+    from the carried state exactly as the per-epoch driver does between
+    steps; ``observe(q, ridx, target, chain, chain_len, sketch, r_plan,
+    repl, picked, bounced, ovl, r_ovl, eid) -> (sketch, plan, node_ops,
+    repl, ovl, ostats, spans)`` is the per-epoch observe body verbatim.
+    ``fold_ovl`` mirrors the driver's overload-rng fold (a fold_in, not a
+    wider split, so the disabled path's rng streams are untouched).
+
+    Signature of the returned jitted fn (donated like the oracle period
+    scan — store slabs, load/sketch/repl/overload registers; the
+    directory is NOT donated, see ``EpochDriver._build_oracle_period``):
+
+      (store, directory, load_reg, sketch, repl, ovl,
+       qs, rngs, live, eids)
+        -> (store, directory, load_reg, sketch, repl, ovl,
+            plans, node_ops, bucket_overflow, overflow_totals, bounced,
+            ostats, spans)
+
+    with ``qs`` the period's (P, B, ...) query pytree REPLICATED (each
+    device slices its share for the data plane and keeps the whole batch
+    for observe), ``live`` the (P,) real-epoch mask (dead padding epochs
+    compute but do not commit), ``eids`` the (P,) absolute epoch ids.
+    """
+    n_shards = mesh.shape[cfg.axis]
+    axis = cfg.axis
+    spread = cfg.read_spread
+    craq = cfg.replication_mode == "craq"
+    plane = _make_bucket_plane(cfg, n_shards)
+    if cfg.strategy != "bucket_a2a":
+        raise ValueError(
+            "make_dist_period fuses the bucket_a2a data plane only "
+            f"(strategy={cfg.strategy!r}); use make_dist_apply per epoch"
+        )
+
+    def period_device(store, directory, load_reg, sketch, repl, ovl,
+                      qs, rngs, live, eids):
+        me = jax.lax.axis_index(axis)
+
+        def scan_body(carry, xs):
+            store, directory, load_reg, sketch, repl, ovl = carry
+            q, rng, lv, eid = xs
+            B = q.opcode.shape[0]
+            Bl = B // n_shards
+            # the same rng discipline as the per-epoch driver step
+            r_ovl = jax.random.fold_in(rng, 0x0F10AD) if fold_ovl else rng
+            r_route, r_plan = jax.random.split(rng)
+            dirty, queue_pen = pre(repl, ovl)
+            q_local = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, me * Bl, Bl, 0), q
+            )
+            (store2, _resp, directory2, load_reg2, decision, picked,
+             bounced, bucket_ovf) = plane(
+                store, directory, q_local, load_reg, r_route, dirty,
+                queue_pen,
+            )
+            # reconstruct the global decision for the replicated observe
+            ag = lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True)
+            ridx, target = ag(decision.ridx), ag(decision.target)
+            chain, clen = ag(decision.chain), ag(decision.chain_len)
+            if craq:
+                picked_g, bounced_g = ag(picked), ag(bounced)
+            else:
+                # placeholders keep observe's signature mode-independent
+                # (exactly the per-epoch step's substitution)
+                picked_g = target
+                bounced_g = jnp.zeros((B,), jnp.bool_)
+            (sketch2, plan, node_ops, repl2, ovl2, ostats, spans) = observe(
+                q, ridx, target, chain, clen, sketch, r_plan, repl,
+                picked_g, bounced_g, ovl, r_ovl, eid,
+            )
+            if not spread:
+                # tail-read path: registers tracked for parity (same units)
+                load_reg2 = load_reg2 + node_ops.astype(jnp.uint32)
+            keep = lambda new, old: jnp.where(lv, new, old)
+            store2 = jax.tree.map(keep, store2, store)
+            carry2 = (store2, jax.tree.map(keep, directory2, directory),
+                      keep(load_reg2, load_reg), keep(sketch2, sketch),
+                      jax.tree.map(keep, repl2, repl),
+                      jax.tree.map(keep, ovl2, ovl))
+            # global overflow total (the store is sharded, one node per
+            # device — psum of the local sum is jnp.sum(store.overflow))
+            ovf = jax.lax.psum(jnp.sum(store2.overflow), axis)
+            return carry2, (plan, node_ops, bucket_ovf, ovf, bounced_g,
+                            ostats, spans)
+
+        carry, outs = jax.lax.scan(
+            scan_body, (store, directory, load_reg, sketch, repl, ovl),
+            (qs, rngs, live, eids),
+        )
+        return (*carry, *outs)
+
+    store_spec = StoreState(keys=P(axis), values=P(axis), overflow=P(axis))
+    # everything except the store is replicated state: the directory and
+    # registers scan like the single-host donated buffers, the staged
+    # queries stay whole on every device (the observe stage needs the
+    # full batch; the data plane slices its share by axis index)
+    in_specs = (store_spec, P(), P(), P(), P(), P(), P(), P(), P(), P())
+    out_specs = (store_spec, P(), P(), P(), P(), P(),
+                 P(), P(), P(), P(), P(), P(), P())
+    fn = shard_map_compat(period_device, mesh, in_specs, out_specs)
+    return jax.jit(fn, donate_argnums=(0, 2, 3, 4, 5))
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):

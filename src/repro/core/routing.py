@@ -304,6 +304,45 @@ def route_load_aware_dirty(
     return decision, directory, load_reg, picked, bounced
 
 
+def route_and_lookup(
+    directory: D.Directory,
+    q: QueryBatch,
+    store_keys: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    dirty: jnp.ndarray,
+    rng: jax.Array,
+    *,
+    queue_pen: jnp.ndarray | None = None,
+):
+    """Fused route→apply oracle (the semantics of the one-kernel hot path).
+
+    :func:`route_load_aware_dirty` followed by the slab-slot lookup of
+    ``store.slab_get`` against each packet's **serving** node's sorted
+    slab — the jnp contract ``kernels.range_match.range_match_apply``
+    reproduces bit for bit.  ``store_keys`` is the (N, C)
+    ``StoreState.keys`` table (ascending per node, EMPTY tail padding).
+
+    Returns ``(decision, directory', load_reg', picked, bounced, slot,
+    found)``: ``slot`` is ``searchsorted(slab[target], key, "left")``
+    clamped into ``[0, C)`` exactly as ``slab_get`` clamps, and ``found``
+    the point-hit mask (off for EMPTY keys and unrouted packets).
+    """
+    decision, directory, load_reg, picked, bounced = route_load_aware_dirty(
+        directory, q, load_reg, dirty, rng, queue_pen=queue_pen
+    )
+    t_safe = jnp.clip(decision.target, 0, store_keys.shape[0] - 1)
+    slab = store_keys[t_safe]                              # (B, C)
+    qk = q.key[:, None]
+    slot = jnp.sum((slab < qk).astype(jnp.int32), axis=-1)
+    slot = jnp.minimum(slot, store_keys.shape[1] - 1)
+    found = (
+        jnp.any(slab == qk, axis=-1)
+        & (q.key != K.EMPTY_KEY)
+        & (decision.target >= 0)
+    )
+    return decision, directory, load_reg, picked, bounced, slot, found
+
+
 def expand_scans(
     directory: D.Directory, q: QueryBatch, *, max_scan_fanout: int
 ) -> QueryBatch:

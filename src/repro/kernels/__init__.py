@@ -14,11 +14,13 @@ from repro.kernels.range_match.ops import (
     range_match,
     range_match_spread,
     range_match_spread_dirty,
+    range_match_apply,
 )
 from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.ssd_chunk.ops import ssd_scan, ssd_decode_step
 
 __all__ = [
     "range_match", "range_match_spread", "range_match_spread_dirty",
+    "range_match_apply",
     "decode_attn", "ssd_scan", "ssd_decode_step",
 ]

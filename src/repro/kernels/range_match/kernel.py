@@ -35,6 +35,7 @@ LANES = 128
 DEFAULT_BLOCK_ROWS = 8  # sublane-aligned f32/i32 tile height
 
 _NO_HIT = 0x7FFFFFFF  # min-reduce identity for the slot-match
+_EMPTY_KEY = 0xFFFFFFFF  # core.constants.EMPTY_KEY: sorted-slab tail padding
 
 
 def _slot_match_tile(mvals, lo, hi, num_slots: int):
@@ -97,6 +98,68 @@ def _p2c_tile(chain_cols, clen_b, u1, u2, loads):
     first_wins = l1 <= l2
     return (jnp.where(first_wins, n1, n2), jnp.where(first_wins, p1, p2),
             p1, p2, first_wins)
+
+
+def _slab_lookup_tile(qkeys, target, slabs, slab_len: int, gather_rows: bool):
+    """(Bb, 128) query keys + serving nodes vs the (N, Cpad) sorted-slab
+    table -> ``(slot, found)`` per packet.
+
+    ``searchsorted(slab, qkey, side="left")`` computed as a rank count —
+    lane-parallel sums instead of a binary search.  Two bit-identical
+    formulations, chosen per backend by the launcher:
+
+    * ``gather_rows=False`` (compiled TPU): walk the slab in static
+      128-lane chunks, materialising the per-packet node row by a static
+      N-way select (N = node count, small) — TPU gathers from dynamic
+      vectors are slow, broadcast-select is lane-parallel VPU work.
+    * ``gather_rows=True`` (interpret / CPU emulation): a branchless
+      vectorised bisect — log2(Cpad) rounds, each gathering one probe
+      key per packet (``slabs[node, mid]``).  Gather is the right
+      primitive where the body lowers to XLA:CPU; O(log C) probes beat
+      the O(C) rank count there, and no (B, Cpad) row ever materialises.
+
+    EMPTY tail padding is inert either way: the slab stays globally
+    sorted (EMPTY is the maximum key), so bisect-left over the padded
+    row equals the rank count over it, and an EMPTY probe only equals an
+    (already-masked) EMPTY query key.  The slot clamps into
+    ``[0, slab_len)`` exactly like ``store.slab_get``; ``found`` masks
+    EMPTY queries and unrouted (negative-node) packets.
+    """
+    n_nodes, cpad = slabs.shape
+    t_safe = jnp.clip(target, 0, n_nodes - 1)
+    qk = qkeys[:, :, None]                                 # (Bb, 128, 1)
+    if gather_rows:
+        # bisect_left(slabs[t], qk) with per-packet [lo, hi) intervals,
+        # all lanes stepping in lock-step for ceil(log2(cpad)) + 1 rounds
+        lo = jnp.zeros(qkeys.shape, dtype=jnp.int32)
+        hi = jnp.full(qkeys.shape, cpad, dtype=jnp.int32)
+        for _ in range(cpad.bit_length()):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            v = slabs[t_safe, jnp.minimum(mid, cpad - 1)]  # (Bb, 128)
+            less = v < qkeys
+            lo = jnp.where(active & less, mid + 1, lo)
+            hi = jnp.where(active & ~less, mid, hi)
+        slot = lo
+        probe = slabs[t_safe, jnp.minimum(slot, cpad - 1)]
+        found = probe == qkeys
+    else:
+        slot = jnp.zeros(qkeys.shape, dtype=jnp.int32)
+        found = jnp.zeros(qkeys.shape, dtype=jnp.bool_)
+        for c in range(cpad // LANES):
+            chunk = slabs[:, c * LANES:(c + 1) * LANES]    # (N, 128)
+            row = jnp.broadcast_to(
+                chunk[0][None, None, :], qkeys.shape + (LANES,)
+            )
+            for n in range(1, n_nodes):
+                row = jnp.where(
+                    t_safe[:, :, None] == n, chunk[n][None, None, :], row
+                )
+            slot = slot + jnp.sum((row < qk).astype(jnp.int32), axis=-1)
+            found = found | jnp.any(row == qk, axis=-1)
+    slot = jnp.minimum(slot, slab_len - 1)
+    found = found & (qkeys != jnp.uint32(_EMPTY_KEY)) & (target >= 0)
+    return slot, found
 
 
 def _kernel(mvals_ref, opcodes_ref, lo_ref, hi_ref, chains_ref, clen_ref,
@@ -213,6 +276,230 @@ def _kernel_spread_dirty(mvals_ref, opcodes_ref, u1_ref, u2_ref, lo_ref, hi_ref,
     chain_ref[...] = chain
     picked_ref[...] = picked
     bounced_ref[...] = bounced.astype(jnp.int32)
+
+
+def _kernel_apply(mvals_ref, opcodes_ref, u1_ref, u2_ref, qkeys_ref,
+                  lo_ref, hi_ref, chains_ref, clen_ref, loads_ref, dirty_ref,
+                  slabs_ref,
+                  ridx_ref, target_ref, chain_ref, picked_ref, bounced_ref,
+                  slot_ref, found_ref,
+                  *, num_slots: int, r_max: int, slab_len: int,
+                  gather_rows: bool):
+    """The fused route→apply hot path: ``_kernel_spread_dirty`` plus the
+    slab-slot scatter, one pass over the packet tile.
+
+    Routing emits the serving node; the apply stage then needs each
+    packet's slot in that node's sorted slab.  Running both in one kernel
+    keeps the tile's ridx/chain/target live in VMEM between the stages —
+    the two-kernel path writes them to HBM and reads them straight back.
+    ``slabs_ref`` is the (N, Cpad) per-node sorted key table (EMPTY-tail
+    padded to a lane multiple), whole in VMEM like the span tables.
+    """
+    mvals = mvals_ref[...]
+    opcodes = opcodes_ref[...]
+    u1 = u1_ref[...]
+    u2 = u2_ref[...]
+    qkeys = qkeys_ref[...]            # (Bb, 128) uint32 raw query keys
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    chains = chains_ref[...]
+    clen = clen_ref[...]
+    loads = loads_ref[...]
+    dirty = dirty_ref[...]
+    slabs = slabs_ref[...]            # (N, Cpad) uint32 sorted slab keys
+
+    ridx = _slot_match_tile(mvals, lo, hi, num_slots)
+    chain_cols = _gather_rows_tile(ridx, chains)
+    dirty_cols = _gather_rows_tile(ridx, dirty)
+    chain = jnp.stack(chain_cols, axis=0)
+    (clen_b,) = _gather_rows_tile(ridx, clen)
+
+    picked, ppos, p1, p2, first_wins = _p2c_tile(
+        chain_cols, clen_b, u1, u2, loads
+    )
+    d1 = _select_pos_tile(dirty_cols, p1)
+    d2 = _select_pos_tile(dirty_cols, p2)
+    d_pick = jnp.where(first_wins, d1, d2)
+    tail = _select_pos_tile(chain_cols, clen_b - 1)
+
+    is_write = (opcodes == 1) | (opcodes == 2)
+    bounced = (
+        (~is_write) & (d_pick != 0) & (ppos != clen_b - 1) & (picked >= 0)
+    )
+    read_target = jnp.where(bounced, tail, picked)
+    target = jnp.where(is_write, chain[0], read_target)
+
+    slot, found = _slab_lookup_tile(qkeys, target, slabs, slab_len, gather_rows)
+
+    ridx_ref[...] = ridx
+    target_ref[...] = target
+    chain_ref[...] = chain
+    picked_ref[...] = picked
+    bounced_ref[...] = bounced.astype(jnp.int32)
+    slot_ref[...] = slot
+    found_ref[...] = found.astype(jnp.int32)
+
+
+def _kernel_lookup(qkeys_ref, target_ref, slabs_ref, slot_ref, found_ref,
+                   *, slab_len: int, gather_rows: bool):
+    """Standalone slab-slot lookup (the second kernel of the two-kernel
+    route→apply baseline): reads the routed targets back from HBM."""
+    qkeys = qkeys_ref[...]
+    target = target_ref[...]
+    slabs = slabs_ref[...]
+    slot, found = _slab_lookup_tile(qkeys, target, slabs, slab_len, gather_rows)
+    slot_ref[...] = slot
+    found_ref[...] = found.astype(jnp.int32)
+
+
+def range_match_apply_pallas(
+    mvals: jnp.ndarray,            # (B,) uint32 matching values
+    opcodes: jnp.ndarray,          # (B,) int32
+    u1: jnp.ndarray,               # (B,) int32 nonneg uniform draws
+    u2: jnp.ndarray,               # (B,) int32
+    qkeys: jnp.ndarray,            # (B,) uint32 raw query keys
+    slot_lo: jnp.ndarray,          # (Spad,) uint32 dead-masked span starts
+    slot_hi: jnp.ndarray,          # (Spad,) uint32 dead-masked span ends
+    chains: jnp.ndarray,           # (r_max, Spad) int32
+    chain_len: jnp.ndarray,        # (Spad,) int32
+    loads: jnp.ndarray,            # (Npad,) int32 per-node load registers
+    dirty: jnp.ndarray,            # (r_max, Spad) int32 dirty bits
+    slabs: jnp.ndarray,            # (N, Cpad) uint32 sorted slab keys
+    *,
+    num_slots: int,
+    slab_len: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+    gather_rows: bool | None = None,
+):
+    """Launch the fused route→apply kernel.
+
+    Contract of :func:`range_match_spread_dirty_pallas` plus the slab
+    lookup of ``store.slab_get`` against the serving node's slab; returns
+    ``(ridx, target, chain, picked, bounced, slot, found)`` with found an
+    int32 0/1 mask.  ``gather_rows`` picks the lookup formulation
+    (``None``: gather under interpret, N-way select when compiled — see
+    :func:`_slab_lookup_tile`); both are bit-identical.
+    """
+    B = mvals.shape[0]
+    rows = B // LANES
+    r_max, spad = chains.shape
+    npad = loads.shape[0]
+    n_nodes, cpad = slabs.shape
+    if gather_rows is None:
+        gather_rows = interpret
+
+    grid = (rows // block_rows,)
+    kernel = functools.partial(
+        _kernel_apply, num_slots=num_slots, r_max=r_max, slab_len=slab_len,
+        gather_rows=gather_rows,
+    )
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((r_max, rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+    )
+    whole = lambda i: (0, 0)
+    tile = lambda i: (i, 0)
+    ridx, target, chain, picked, bounced, slot, found = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((r_max, spad), lambda i: (0, 0)),
+            pl.BlockSpec((1, spad), whole),
+            pl.BlockSpec((1, npad), whole),
+            pl.BlockSpec((r_max, spad), lambda i: (0, 0)),
+            pl.BlockSpec((n_nodes, cpad), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((r_max, block_rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        mvals.reshape(rows, LANES),
+        opcodes.reshape(rows, LANES),
+        u1.reshape(rows, LANES),
+        u2.reshape(rows, LANES),
+        qkeys.reshape(rows, LANES),
+        slot_lo.reshape(1, spad),
+        slot_hi.reshape(1, spad),
+        chains,
+        chain_len.reshape(1, spad),
+        loads.reshape(1, npad),
+        dirty,
+        slabs,
+    )
+    return (ridx.reshape(B), target.reshape(B), chain.reshape(r_max, B),
+            picked.reshape(B), bounced.reshape(B),
+            slot.reshape(B), found.reshape(B))
+
+
+def slab_lookup_pallas(
+    qkeys: jnp.ndarray,            # (B,) uint32 raw query keys
+    target: jnp.ndarray,           # (B,) int32 serving nodes
+    slabs: jnp.ndarray,            # (N, Cpad) uint32 sorted slab keys
+    *,
+    slab_len: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+    gather_rows: bool | None = None,
+):
+    """Launch the standalone slab-lookup kernel (two-kernel baseline's
+    second stage).  Returns ``(slot, found)``, found an int32 0/1 mask."""
+    B = qkeys.shape[0]
+    rows = B // LANES
+    n_nodes, cpad = slabs.shape
+    if gather_rows is None:
+        gather_rows = interpret
+
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_kernel_lookup, slab_len=slab_len,
+                               gather_rows=gather_rows)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+    )
+    tile = lambda i: (i, 0)
+    slot, found = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((n_nodes, cpad), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        qkeys.reshape(rows, LANES),
+        target.reshape(rows, LANES),
+        slabs,
+    )
+    return slot.reshape(B), found.reshape(B)
 
 
 def range_match_spread_dirty_pallas(

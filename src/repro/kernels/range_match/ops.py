@@ -36,6 +36,8 @@ from repro.kernels.range_match.kernel import (
     range_match_pallas,
     range_match_spread_pallas,
     range_match_spread_dirty_pallas,
+    range_match_apply_pallas,
+    slab_lookup_pallas,
     LANES,
     DEFAULT_BLOCK_ROWS,
 )
@@ -43,6 +45,8 @@ from repro.kernels.range_match.ref import (
     range_match_ref,
     range_match_spread_ref,
     range_match_spread_dirty_ref,
+    range_match_apply_ref,
+    slab_lookup_ref,
 )
 
 
@@ -388,4 +392,148 @@ def range_match_spread_dirty(
         num_slots=directory.num_slots,
         hash_partitioned=bool(directory.hash_partitioned),
         use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
+    )
+
+
+def pack_slabs(store_keys: jnp.ndarray) -> jnp.ndarray:
+    """(N, C) per-node sorted slab keys -> (N, Cpad) lane-padded layout.
+
+    EMPTY tail padding keeps the padded columns inert in the rank-count
+    lookup (EMPTY compares below nothing; an EMPTY == EMPTY hit only
+    fires for an EMPTY query key, which ``found`` masks anyway)."""
+    n, c = store_keys.shape
+    cpad = max(LANES, ((c + LANES - 1) // LANES) * LANES)
+    pad = jnp.full((n, cpad - c), K.EMPTY_KEY, jnp.uint32)
+    return jnp.concatenate([store_keys.astype(jnp.uint32), pad], axis=1)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "num_slots", "slab_len", "hash_partitioned",
+        "use_pallas", "fuse", "interpret", "block_rows", "gather_rows",
+    ),
+)
+def _range_match_apply_packed(
+    lo_p,
+    hi_p,
+    chains_p,
+    clen_p,
+    dirty_p,
+    slabs_p,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    rng,
+    *,
+    num_slots: int,
+    slab_len: int,
+    hash_partitioned: bool,
+    use_pallas: bool,
+    fuse: bool,
+    interpret: bool,
+    block_rows: int,
+    gather_rows: bool | None,
+):
+    mvals, opcodes, u1, u2, loads_p, B = _prep_spread_inputs(
+        keys, opcodes, load_reg, rng,
+        hash_partitioned=hash_partitioned, block_rows=block_rows,
+    )
+    qkeys = keys.astype(jnp.uint32)
+    if mvals.shape[0] != B:
+        # padded tail packets carry the EMPTY key so their found bit is off
+        qkeys = jnp.concatenate([
+            qkeys,
+            jnp.full((mvals.shape[0] - B,), K.EMPTY_KEY, jnp.uint32),
+        ])
+    if use_pallas and fuse:
+        ridx, target, chain, picked, bounced, slot, found = (
+            range_match_apply_pallas(
+                mvals, opcodes.astype(jnp.int32), u1, u2, qkeys,
+                lo_p, hi_p, chains_p, clen_p, loads_p, dirty_p, slabs_p,
+                num_slots=num_slots, slab_len=slab_len,
+                block_rows=block_rows, interpret=interpret,
+                gather_rows=gather_rows,
+            )
+        )
+        bounced = bounced != 0
+        found = found != 0
+    elif use_pallas:
+        # two-kernel baseline: route writes its decision to HBM, the
+        # lookup kernel reads it straight back — the traffic the fused
+        # kernel deletes
+        ridx, target, chain, picked, bounced = range_match_spread_dirty_pallas(
+            mvals, opcodes.astype(jnp.int32), u1, u2,
+            lo_p, hi_p, chains_p, clen_p, loads_p, dirty_p,
+            num_slots=num_slots, block_rows=block_rows, interpret=interpret,
+        )
+        slot, found = slab_lookup_pallas(
+            qkeys, target, slabs_p,
+            slab_len=slab_len, block_rows=block_rows, interpret=interpret,
+            gather_rows=gather_rows,
+        )
+        bounced = bounced != 0
+        found = found != 0
+    else:
+        ridx, target, chain, picked, bounced, slot, found = (
+            range_match_apply_ref(
+                mvals, opcodes.astype(jnp.int32), u1, u2,
+                lo_p, hi_p, chains_p, clen_p, loads_p, dirty_p,
+                qkeys, slabs_p,
+                num_slots=num_slots, slab_len=slab_len,
+            )
+        )
+    return (ridx[:B], target[:B], chain[:, :B], picked[:B], bounced[:B],
+            slot[:B], found[:B])
+
+
+def range_match_apply(
+    directory: Directory,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    load_reg: jnp.ndarray,
+    dirty: jnp.ndarray,
+    store_keys: jnp.ndarray,
+    rng,
+    *,
+    queue_pen: jnp.ndarray | None = None,
+    use_pallas: bool = True,
+    fuse: bool = True,
+    interpret: bool | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    gather_rows: bool | None = None,
+):
+    """One-kernel route→apply hot path (PR 8's fused data plane).
+
+    The CRAQ apportioned-read routing of :func:`range_match_spread_dirty`
+    plus the slab-slot lookup of ``store.slab_get`` against the serving
+    node's sorted slab, in one Pallas pass.  ``store_keys`` is the (N, C)
+    ``StoreState.keys`` table.  Returns ``(ridx, target, chain, picked,
+    bounced, slot, found)`` — ``slot`` the packet's searchsorted position
+    in its serving node's slab (clamped into ``[0, C)``), ``found`` the
+    point-hit mask; both bit-identical to routing then ``slab_get``.
+
+    ``fuse=False`` runs the two-kernel baseline (route kernel, then a
+    standalone lookup kernel over the HBM-roundtripped decision) — the
+    comparison :mod:`benchmarks.kernel_bench` times; ``use_pallas=False``
+    runs the jnp oracle.  ``gather_rows`` pins the lookup tile's probe
+    formulation (``None`` = backend default: vectorised bisect under
+    interpret, N-way select on TPU); both are bit-identical.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if queue_pen is not None:
+        load_reg = load_reg + queue_pen.astype(load_reg.dtype)
+    lo_p, hi_p, chains_p, clen_p = pack_tables_cached(directory)
+    dirty_p = pack_dirty(directory, dirty)
+    slabs_p = pack_slabs(store_keys)
+    return _range_match_apply_packed(
+        lo_p, hi_p, chains_p, clen_p, dirty_p, slabs_p,
+        keys, opcodes, load_reg, rng,
+        num_slots=directory.num_slots,
+        slab_len=int(store_keys.shape[1]),
+        hash_partitioned=bool(directory.hash_partitioned),
+        use_pallas=use_pallas, fuse=fuse,
+        interpret=interpret, block_rows=block_rows,
+        gather_rows=gather_rows,
     )

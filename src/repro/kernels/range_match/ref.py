@@ -12,6 +12,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+# mirrors core.constants.EMPTY_KEY (tail padding of every sorted slab)
+_EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
+
 
 def _slot_match(mvals, slot_lo, slot_hi, num_slots: int):
     """Masked interval match: (B,) matching values -> (B,) slot ids."""
@@ -125,3 +128,62 @@ def range_match_spread_dirty_ref(
     read_target = jnp.where(bounced, tail, picked)
     target = jnp.where(is_write, chain[0], read_target)
     return ridx, target, chain, picked, bounced
+
+
+def slab_lookup_ref(
+    qkeys: jnp.ndarray,
+    target: jnp.ndarray,
+    slabs: jnp.ndarray,
+    *,
+    slab_len: int,
+):
+    """jnp oracle for the slab-slot scatter stage (mirrors store.slab_get).
+
+    ``slabs`` (N, Cpad) uint32: each node's sorted slab keys, EMPTY-padded
+    to a lane multiple; ``slab_len`` the true (unpadded) capacity C.  The
+    slot is ``searchsorted(slab, qkey, side="left")`` computed as a
+    rank count — EMPTY padding is inert because EMPTY compares below
+    nothing and only equals an (already-masked) EMPTY query key.  Returns
+    ``(slot, found)`` with slot clamped into ``[0, C)`` exactly as
+    ``store.slab_get`` clamps its searchsorted position.
+    """
+    t_safe = jnp.clip(target, 0, slabs.shape[0] - 1)
+    rows = slabs[t_safe]                                  # (B, Cpad)
+    qk = qkeys[:, None]
+    slot = jnp.sum((rows < qk).astype(jnp.int32), axis=-1)
+    slot = jnp.minimum(slot, slab_len - 1)
+    found = jnp.any(rows == qk, axis=-1) & (qkeys != _EMPTY_KEY) & (target >= 0)
+    return slot, found
+
+
+def range_match_apply_ref(
+    mvals: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    u1: jnp.ndarray,
+    u2: jnp.ndarray,
+    slot_lo: jnp.ndarray,
+    slot_hi: jnp.ndarray,
+    chains: jnp.ndarray,
+    chain_len: jnp.ndarray,
+    loads: jnp.ndarray,
+    dirty: jnp.ndarray,
+    qkeys: jnp.ndarray,
+    slabs: jnp.ndarray,
+    *,
+    num_slots: int,
+    slab_len: int,
+):
+    """jnp oracle for kernel.range_match_apply_pallas (fused route→apply).
+
+    One pass: the masked interval match, the p2c/dirty (CRAQ) serving
+    pick of :func:`range_match_spread_dirty_ref`, then the slab-slot
+    scatter of :func:`slab_lookup_ref` against the serving node's sorted
+    slab.  Returns ``(ridx, target, chain, picked, bounced, slot,
+    found)`` — bit-identical to running the two stages back to back.
+    """
+    ridx, target, chain, picked, bounced = range_match_spread_dirty_ref(
+        mvals, opcodes, u1, u2, slot_lo, slot_hi, chains, chain_len,
+        loads, dirty, num_slots=num_slots,
+    )
+    slot, found = slab_lookup_ref(qkeys, target, slabs, slab_len=slab_len)
+    return ridx, target, chain, picked, bounced, slot, found

@@ -115,6 +115,88 @@ def test_dist_store_read_spread_matches_tail_reads():
     """)
 
 
+# Shared scaffold for the fused-dist ≡ per-epoch-dist parity tests: runs
+# the same scenario through the dist backend with fused=False / fused=True
+# and asserts every observable is bit-identical — the EpochMetrics stream,
+# final store (keys/values/overflow), replication and overload state, and
+# sampled telemetry spans — plus the fused driver compiling exactly once
+# and never syncing the host more often than the per-epoch driver.
+FUSED_PAIR = """
+import dataclasses
+import jax, numpy as np
+from repro.cluster import (ClusterConfig, EpochDriver, ScenarioConfig,
+                           make_policy, make_scenario)
+from repro.overload import OverloadConfig
+from repro.telemetry import TelemetryConfig
+
+mesh = compat_mesh((8,), ("data",))
+scfg = ScenarioConfig(n_epochs=6, epoch_ops=256, n_records=512,
+                      value_dim=2, seed=3)
+base = dict(num_nodes=8, num_ranges=32, replication=2, r_max=4,
+            n_clients=16, report_every=2, imbalance_threshold=1.1,
+            max_moves_per_round=6)
+
+def pair(scen_name, pol, ccfg, scen_kw=None):
+    rows = {}
+    for fused in (False, True):
+        scen = make_scenario(scen_name, scfg, **(scen_kw or {}))
+        drv = EpochDriver(scen, make_policy(pol), ccfg,
+                          backend="dist", mesh=mesh, fused=fused)
+        rows[fused] = (drv, drv.run())
+    (drv_r, rows_r), (drv_f, rows_f) = rows[False], rows[True]
+    for a, b in zip(rows_r, rows_f):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        for k in da:
+            assert da[k] == db[k], (scen_name, a.epoch, k, da[k], db[k])
+    for f in ("keys", "values", "overflow"):
+        assert np.array_equal(np.asarray(getattr(drv_r.store, f)),
+                              np.asarray(getattr(drv_f.store, f))), (scen_name, f)
+    for la, lb in zip(jax.tree.leaves(drv_r.repl), jax.tree.leaves(drv_f.repl)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), scen_name
+    if drv_r.ovl is not None:
+        for la, lb in zip(jax.tree.leaves(drv_r.ovl), jax.tree.leaves(drv_f.ovl)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), scen_name
+    if drv_r.telemetry is not None:
+        er, ef = drv_r.telemetry.epochs, drv_f.telemetry.epochs
+        assert len(er) == len(ef)
+        for a, b in zip(er, ef):
+            for leaf in ("span_i", "span_f", "lat", "comps", "issue"):
+                np.testing.assert_array_equal(a[leaf], b[leaf])
+    assert drv_f.traces == 1, (scen_name, drv_f.traces)
+    assert drv_f.host_syncs <= drv_r.host_syncs, scen_name
+    print("ok", scen_name, pol, drv_f.host_syncs, drv_r.host_syncs)
+"""
+
+
+def test_fused_dist_parity_shifting_hotspot_overload():
+    """Whole-period fused scan ≡ per-epoch dist driver under p2c spread +
+    overload backpressure + telemetry sampling."""
+    run_sub(FUSED_PAIR + """
+pair("shifting_hotspot", "overload_adaptive",
+     ClusterConfig(**base,
+                   overload=OverloadConfig(queue_cap=48, service_rate=80,
+                                           inflation=3.0, queue_weight=2),
+                   telemetry=TelemetryConfig(sample_rate=1 / 4)),
+     scen_kw=dict(theta=1.2, shift_every=2))
+""")
+
+
+def test_fused_dist_parity_node_failure():
+    """Fused ≡ per-epoch across a mid-period fail + recover transition."""
+    run_sub(FUSED_PAIR + """
+pair("node_failure", "migrate", ClusterConfig(**base),
+     scen_kw=dict(fail_epoch=3, fail_node=0, recover_epoch=5))
+""")
+
+
+def test_fused_dist_parity_craq_ycsb_a():
+    """Fused ≡ per-epoch with CRAQ apportioned reads on a write-heavy mix."""
+    run_sub(FUSED_PAIR + """
+pair("ycsb_a", "full_adaptive",
+     ClusterConfig(**base, replication_mode="craq"))
+""")
+
+
 def test_compressed_dp_train_step():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np

@@ -432,11 +432,37 @@ def test_split_overflow_grows_pool_and_recompiles_once():
     assert set(drv.controller.live_ranges())
 
 
-def test_split_overflow_requires_oracle_backend():
-    with pytest.raises(ValueError, match="split_overflow"):
-        EpochDriver(make_scenario("stationary", SCFG),
-                    make_policy("frozen"),
-                    _ccfg(split_overflow=True), backend="dist")
+def test_split_overflow_grows_pool_on_dist_backend():
+    """PR 8 lifted the `split_overflow x dist` rejection: the dist
+    programs re-specialize on the grown directory/repl shapes by
+    themselves, so growth costs exactly one recompile there too
+    (``traces == 1 + growth_events``) and the fused period program
+    stays bit-identical to per-epoch stepping across the growth."""
+    mesh = jax.make_mesh((1,), ("data",))
+    scfg = ScenarioConfig(n_epochs=10, epoch_ops=512, n_records=2048,
+                          read_ratio=0.3, value_dim=2)
+    out = {}
+    for fused in (False, True):
+        scen = make_scenario("keyspace_growth", scfg)
+        drv = EpochDriver(
+            scen, make_policy("full_adaptive"),
+            ClusterConfig(num_nodes=1, num_ranges=8, n_slots=8,
+                          replication=1, r_max=2, capacity=128,
+                          split_overflow=True, report_every=2),
+            backend="dist", mesh=mesh, fused=fused)
+        out[fused] = (drv, drv.run())
+    (drv_r, rows_r), (drv_f, rows_f) = out[False], out[True]
+    grows = [e for r in rows_f for e in r.events
+             if e.startswith("grow_pool:")]
+    assert grows, "pool never grew under capacity pressure"
+    assert drv_f.growth_events == len(grows)
+    assert drv_f.traces == 1 + drv_f.growth_events
+    assert drv_r.traces == 1 + drv_r.growth_events
+    for a, b in zip(rows_r, rows_f):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b), (
+            f"dist growth metrics diverge at epoch {a.epoch}")
+    assert np.array_equal(np.asarray(drv_r.store.keys),
+                          np.asarray(drv_f.store.keys))
 
 
 def test_scenario_registry_has_overload_stressors():

@@ -325,6 +325,78 @@ def test_spread_kernel_parity_after_random_splits():
         assert np.array_equal(np.asarray(chain).T, np.asarray(dec.chain))
 
 
+@pytest.mark.parametrize("seed", [0, 13])
+def test_apply_kernel_parity_after_random_splits(seed):
+    """Fused route→apply kernel vs jnp ref vs split two-kernel path, over
+    directories mangled by random split/merge/widen sequences, with both
+    lookup-tile formulations (vectorised bisect / N-way select) pinned."""
+    from repro.kernels.range_match.ops import range_match_apply
+
+    rng = np.random.default_rng(seed)
+    N, r_max, cap = 8, 5, 96
+    ctl = C.Controller(C.make_directory(16, N, 3, r_max=r_max, n_slots=64))
+    node_load = rng.integers(0, 100, N).astype(np.uint32)
+    for _ in range(40):
+        r = rng.random()
+        if r < 0.2:
+            kids = ctl.children()
+            if kids:
+                ctl.merge_range(int(rng.choice(kids)))
+                continue
+        live = ctl.live_ranges()
+        ridx = int(rng.choice(live))
+        if r < 0.45:
+            ctl.widen_chain(ridx, node_load)
+            continue
+        lo, hi = ctl.range_span(ridx)
+        if hi - lo < 2:
+            continue
+        ctl.split_range(ridx, int(rng.integers(lo, hi)))
+    d = ctl.directory()
+    _assert_partition(d)
+
+    store_keys = np.full((N, cap), 0xFFFFFFFF, np.uint32)
+    for n in range(N):
+        k = np.unique(rng.integers(1, 2**32 - 2, cap // 2).astype(np.uint32))
+        store_keys[n, : len(k)] = np.sort(k)
+    store_keys = jnp.asarray(store_keys)
+    B = 300
+    keys = rng.integers(0, 2**32 - 2, B).astype(np.uint32)
+    keys[: B // 2] = np.asarray(store_keys)[
+        rng.integers(0, N, B // 2), rng.integers(0, cap // 3, B // 2)
+    ]
+    keys = jnp.asarray(keys, jnp.uint32)
+    ops = jnp.asarray(rng.integers(0, 3, B), jnp.int32)
+    load = jnp.asarray(node_load)
+    dirty = jnp.asarray(
+        rng.integers(0, 2, (d.num_slots, r_max)).astype(bool))
+    key = jax.random.PRNGKey(seed + 1)
+
+    out_ref = range_match_apply(d, keys, ops, load, dirty, store_keys, key,
+                                use_pallas=False)
+    for gather_rows in (True, False):
+        for fuse in (True, False):
+            out = range_match_apply(d, keys, ops, load, dirty, store_keys,
+                                    key, use_pallas=True, fuse=fuse,
+                                    gather_rows=gather_rows)
+            for i, (a, b) in enumerate(zip(out, out_ref)):
+                assert jnp.array_equal(a, b), (gather_rows, fuse, i)
+
+    # and against the routing-layer oracle + the store's own slab probe
+    from repro.core.routing import route_and_lookup
+
+    dec, _, _, picked, bounced, slot, found = route_and_lookup(
+        d, C.make_queries(keys, ops), store_keys, load, dirty, key)
+    ridx_r, tgt_r, chain_r, picked_r, bounced_r, slot_r, found_r = out_ref
+    assert np.array_equal(np.asarray(ridx_r), np.asarray(dec.ridx))
+    assert np.array_equal(np.asarray(tgt_r), np.asarray(dec.target))
+    assert np.array_equal(np.asarray(chain_r).T, np.asarray(dec.chain))
+    assert np.array_equal(np.asarray(picked_r), np.asarray(picked))
+    assert np.array_equal(np.asarray(bounced_r), np.asarray(bounced))
+    assert np.array_equal(np.asarray(slot_r), np.asarray(slot))
+    assert np.array_equal(np.asarray(found_r), np.asarray(found))
+
+
 def test_split_preserves_heat_totals_mid_period():
     """Counters accumulated before a split stay attributed; post-split
     traffic divides between parent and child."""
