@@ -214,7 +214,8 @@ def check_acceptance(rows, *, quick: bool = False) -> list[str]:
     """
     by = {(r["scenario"], r["policy"]): r for r in rows
           if r.get("backend", "oracle") == "oracle" and not r.get("profile")
-          and not r.get("trace") and r.get("bench") != "replication"}
+          and not r.get("trace")
+          and r.get("bench") not in ("replication", "replication_filter")}
     problems = []
     f = by.get(("shifting_hotspot", "frozen"))
     a = by.get(("shifting_hotspot", "full_adaptive"))
@@ -554,11 +555,15 @@ def main(argv=None):
     replication_problems: list[str] = []
     if args.replication:
         from repro.replication.bench import (
-            check_replication, run_replication_matrix,
+            check_filter_arm, check_replication, run_filter_arm,
+            run_replication_matrix,
         )
         repl_rows = run_replication_matrix(args.quick)
         replication_problems = check_replication(repl_rows)
+        filter_rows = run_filter_arm(args.quick)
+        replication_problems += check_filter_arm(filter_rows)
         rows.extend(repl_rows)
+        rows.extend(filter_rows)
 
     dist_problems: list[str] = []
     if args.dist:

@@ -29,6 +29,7 @@ from repro.cluster.metrics import (
     p999_batch,
     summarize,
 )
+from repro.coordination_tier import CoordConfig
 from repro.telemetry import TelemetryConfig
 from repro.cluster.policies import (
     POLICIES,
@@ -47,7 +48,7 @@ __all__ = [
     "EpochMetrics", "imbalance_stats", "imbalance_stats_batch",
     "latency_percentiles", "latency_percentiles_batch",
     "masked_p99_batch", "masked_p99_batch_loop", "p999_batch", "summarize",
-    "TelemetryConfig",
+    "CoordConfig", "TelemetryConfig",
     "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
     "FullAdaptivePolicy", "OverloadAdaptivePolicy", "make_policy",
     "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",

@@ -78,6 +78,7 @@ from repro.core.dist_store import (
 from repro.core.migration import execute as execute_migrations
 from repro.core.stats import make_sketch, pull_report, sketch_query, sketch_update
 from repro.core.store import apply_routed, make_store
+from repro import coordination_tier as CT
 from repro import overload as OVL
 from repro import replication as RPL
 from repro import telemetry as TEL
@@ -164,6 +165,19 @@ class ClusterConfig:
     # consumed — the metric stream is bit-identical with tracing on OR
     # off), decomposes tail latency exactly, and times pipeline stages
     telemetry: TEL.TelemetryConfig | None = None
+    # the coordination tier (repro.coordination_tier): None disables it
+    # and the run is bit-identical to pre-tier behaviour; a CoordConfig
+    # replicates the directory onto per-switch table copies that lag the
+    # controller's commits along the switch chain, resolving stale routes
+    # with versioned redirects.  Accounting plane: store effects, counters
+    # and PRNG draws always follow the TRUE routing decision, so a
+    # zero-lag tier is also bit-identical to None
+    coordination: CT.CoordConfig | None = None
+    # hashed per-key CRAQ dirty filter width (repro.replication): a craq
+    # replica bounces only reads whose key *collides* with an uncommitted
+    # write instead of every read of a dirty range.  0 (the default)
+    # keeps slot-granular bouncing bit-identically; oracle backend only
+    craq_filter_bits: int = 0
     seed: int = 0
 
 
@@ -317,17 +331,47 @@ class EpochDriver:
         self.directory = directory
         self.load_reg = jnp.zeros((cfg.num_nodes,), jnp.uint32)
         self.sketch = make_sketch(cfg.sketch_width, cfg.sketch_depth)
+        if backend == "dist" and cfg.craq_filter_bits:
+            raise ValueError(
+                "craq_filter_bits is an oracle-backend measurement "
+                "feature; the dist data plane keeps slot-granular "
+                "bouncing"
+            )
         # the (n_slots, r_max) version/dirty register file, device-resident
         # next to the load registers; carried (and donated) through the
         # fused period scan for chain/craq, inert zeros under eventual
-        self.repl = RPL.make_state(n_slots, cfg.r_max)
+        self.repl = RPL.make_state(n_slots, cfg.r_max, cfg.craq_filter_bits)
+        # the coordination tier: per-switch replicated table copies +
+        # version registers, carried (and donated) through the fused
+        # scan; the host-side CoordManager stages control writes along
+        # the switch chain between segments.  None == empty pytree slot,
+        # same discipline as the overload plane
+        self.coord_cfg = cfg.coordination
+        if self.coord_cfg is not None:
+            self.coord_mgr = CT.CoordManager(
+                self.coord_cfg, self.controller.table_snapshot(),
+                num_nodes=cfg.num_nodes,
+            )
+            self.coord = self.coord_mgr.make_state()
+        else:
+            self.coord_mgr = None
+            self.coord = None
+        # previous period's redirect share (redirected / routed) — the
+        # policy-facing convergence signal behind redirect_backoff
+        self._last_redirect_share = 0.0
         # the overload plane: device-resident per-node queue/retry
         # registers, carried (and donated) through the fused scan; None
         # when disabled — an empty pytree slot, so the step signatures
         # stay uniform and the disabled path compiles the same program
         # as before the subsystem existed
         self.ovl_cfg = cfg.overload
-        self.ovl = (OVL.make_state(cfg.num_nodes, cfg.overload)
+        # the orbit-identity register (cross-epoch retry linking) sizes
+        # off the trace plane's knob but lives with the retry orbit it
+        # identifies — 0 bits keeps the (1,) placeholder leaf
+        _lb = (cfg.telemetry.link_retries
+               if cfg.telemetry is not None else 0)
+        self.ovl = (OVL.make_state(cfg.num_nodes, cfg.overload,
+                                   link_bits=_lb)
                     if cfg.overload is not None else None)
         # the trace plane: spans are assembled inside the device step (no
         # extra sync — they ride the one period round-trip), attributed
@@ -476,12 +520,21 @@ class EpochDriver:
         # value bit-identical — only the extra span outputs are new)
         tcfg = self.tel_cfg
         tel_thr = self._tel_threshold
+        # the coordination tier (trace constants; observe_epoch consumes
+        # no PRNG and touches no store/counter state, so the disabled and
+        # zero-lag paths are bit-identical — only the redirect pricing and
+        # the new cstats output differ when the tables actually diverge)
+        ccfg = self.coord_cfg
+        hp = bool(getattr(self.directory, "hash_partitioned", False))
+        fbits = cfg.craq_filter_bits
 
-        def route_chunk(directory, load_reg, dirty, qs, rng_c, queue_pen):
+        def route_chunk(directory, load_reg, dirty, kf, qs, rng_c,
+                        queue_pen):
             if mp.dirty_reads:
                 dec, directory, load_reg, picked, bounced = (
                     R.route_load_aware_dirty(directory, qs, load_reg, dirty,
-                                             rng_c, queue_pen=queue_pen)
+                                             rng_c, queue_pen=queue_pen,
+                                             key_filter=kf)
                 )
             elif spread:
                 dec, directory, load_reg = R.route_load_aware(
@@ -493,7 +546,8 @@ class EpochDriver:
                 picked = bounced = None
             return dec, directory, load_reg, picked, bounced
 
-        def body(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
+        def body(store, directory, load_reg, sketch, repl, ovl, coord, q,
+                 rng, eid):
             if ocfg is not None:
                 # fold_in (not a wider split) so the disabled path's
                 # r_route/r_plan streams are untouched — routing and the
@@ -513,6 +567,8 @@ class EpochDriver:
             # reads consult the PRE-epoch dirty state, exactly as they
             # observe the pre-batch store (repro.replication.state)
             dirty = RPL.dirty_bits(repl) if mp.dirty_reads else None
+            kf = (repl.key_filter
+                  if (mp.dirty_reads and fbits) else None)
             if spread and chunks > 1:
                 csize = B // chunks
                 decs, picks, bncs = [], [], []
@@ -521,7 +577,7 @@ class EpochDriver:
                         lambda x: x[ci * csize : (ci + 1) * csize], q
                     )
                     dec, directory, load_reg, picked, bounced = route_chunk(
-                        directory, load_reg, dirty, qs,
+                        directory, load_reg, dirty, kf, qs,
                         jax.random.fold_in(r_route, ci), queue_pen,
                     )
                     decs.append(dec)
@@ -535,7 +591,7 @@ class EpochDriver:
                     bounced = jnp.concatenate(bncs, axis=0)
             else:
                 decision, directory, load_reg, picked, bounced = route_chunk(
-                    directory, load_reg, dirty, q, r_route, queue_pen
+                    directory, load_reg, dirty, kf, q, r_route, queue_pen
                 )
             node_ops = _node_ops(decision, q.opcode, N)
             if not spread:
@@ -561,20 +617,50 @@ class EpochDriver:
                     ovl, decision.target, r_ovl, ocfg
                 )
                 ovl_kw = dict(shed=ovl_rej, service_scale=ovl_scale)
+                # cross-epoch retry linking: stamp/clear the hashed
+                # orbit-identity register (no-op at the (1,) placeholder)
+                ovl, first_epoch = OVL.link_orbit(
+                    ovl, q.key, ovl_rej,
+                    ovl_out == OVL.OUTCOME_ADMITTED, eid,
+                )
             else:
                 ostats = jnp.zeros((len(OVL.STAT_FIELDS),), jnp.int32)
                 ovl_kw = {}
+                first_epoch = None
+            # the switch tier observes the batch against its (possibly
+            # stale) per-switch table copies: versioned-redirect decision,
+            # install of pending control writes, conservation counters.
+            # Pure accounting — the decision above (and every store/
+            # counter/PRNG effect) followed the TRUE tables, so the tier
+            # only reprices hops and emits cstats
+            if ccfg is not None:
+                coord, redirect, redirect_via, cstats = CT.observe_epoch(
+                    coord, q, decision, eid, quorum=ccfg.quorum,
+                    hash_partitioned=hp,
+                )
+                coord_kw = dict(redirect=redirect,
+                                redirect_via=redirect_via)
+            else:
+                redirect = None
+                cstats = CT.empty_cstats()
+                coord_kw = {}
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=r_plan, num_nodes=N,
                 write_chain_cap=cap, service_model=cfg.service_model,
-                **bounce_kw, **ovl_kw,
+                **bounce_kw, **ovl_kw, **coord_kw,
             )
             if mp.track_state:
                 is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
-                repl = RPL.advance(repl, decision.ridx, is_write)
+                repl = RPL.advance(repl, decision.ridx, is_write,
+                                   keys=q.key if fbits else None)
             retries = jnp.zeros((), jnp.int32)
             bounced_out = (bounced if mp.dirty_reads
                            else jnp.zeros((B,), jnp.bool_))
+            # span attribution only: a versioned redirect rides the bounce
+            # bucket of the trace plane (an extra pre-serve hop), while the
+            # metric-stream bounced column stays CRAQ-only for parity
+            span_bounced = (bounced_out if redirect is None
+                            else bounced_out | redirect)
             if tcfg is not None:
                 if ocfg is not None:
                     t_safe = jnp.clip(decision.target, 0, N - 1)
@@ -604,25 +690,27 @@ class EpochDriver:
                     scale_rec = jnp.ones((B,), jnp.float32)
                 pk = picked if mp.dirty_reads else decision.target
                 spans = TEL.collect_spans(
-                    q, eid, decision, pk, bounced_out, outcome, qdepth,
+                    q, eid, decision, pk, span_bounced, outcome, qdepth,
                     orbit, scale_rec, plan,
                     threshold=tel_thr, k_slots=tcfg.max_spans,
-                    lookup=cfg.latency.lookup,
+                    lookup=cfg.latency.lookup, first_epoch=first_epoch,
                 )
             else:
                 spans = None
-            return (store, directory, load_reg, sketch, repl, ovl,
-                    plan, node_ops, retries, bounced_out, ostats, spans)
+            return (store, directory, load_reg, sketch, repl, ovl, coord,
+                    plan, node_ops, retries, bounced_out, ostats, cstats,
+                    spans)
 
         return body
 
     def _build_oracle_step(self, mp: RPL.ModePlan):
         body = self._make_oracle_body(mp)
 
-        def step(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
+        def step(store, directory, load_reg, sketch, repl, ovl, coord, q,
+                 rng, eid):
             self._traces += 1  # python side effect: counts traces, not calls
-            return body(store, directory, load_reg, sketch, repl, ovl, q,
-                        rng, eid)
+            return body(store, directory, load_reg, sketch, repl, ovl,
+                        coord, q, rng, eid)
 
         return jax.jit(step)
 
@@ -639,15 +727,16 @@ class EpochDriver:
         scenario."""
         body = self._make_oracle_body(mp)
 
-        def period(store, directory, load_reg, sketch, repl, ovl,
+        def period(store, directory, load_reg, sketch, repl, ovl, coord,
                    qs, rngs, live, eids):
             def scan_body(carry, xs):
-                store, directory, load_reg, sketch, repl, ovl = carry
+                store, directory, load_reg, sketch, repl, ovl, coord = carry
                 q, rng, lv, eid = xs
                 (store2, directory2, load_reg2, sketch2, repl2, ovl2,
-                 plan, node_ops, retries, bounced, ostats, spans) = body(
-                    store, directory, load_reg, sketch, repl, ovl, q, rng,
-                    eid
+                 coord2, plan, node_ops, retries, bounced, ostats, cstats,
+                 spans) = body(
+                    store, directory, load_reg, sketch, repl, ovl, coord,
+                    q, rng, eid
                 )
                 keep = lambda new, old: jnp.where(lv, new, old)
                 store2 = jax.tree.map(keep, store2, store)
@@ -655,28 +744,31 @@ class EpochDriver:
                 carry2 = (store2, directory2, keep(load_reg2, load_reg),
                           keep(sketch2, sketch),
                           jax.tree.map(keep, repl2, repl),
-                          jax.tree.map(keep, ovl2, ovl))
+                          jax.tree.map(keep, ovl2, ovl),
+                          jax.tree.map(keep, coord2, coord))
                 ovf = jnp.sum(store2.overflow)
                 # spans ride the ys stack (None == empty pytree when the
                 # trace plane is off — the program is unchanged)
                 return carry2, (plan, node_ops, retries, ovf, bounced,
-                                ostats, spans)
+                                ostats, cstats, spans)
 
             carry, outs = jax.lax.scan(
-                scan_body, (store, directory, load_reg, sketch, repl, ovl),
+                scan_body,
+                (store, directory, load_reg, sketch, repl, ovl, coord),
                 (qs, rngs, live, eids),
             )
             return (*carry, *outs)
 
         # donate the big buffers: store slabs, load registers, sketch, the
-        # replication register file (version/dirty tables) and the
-        # overload queue/retry registers (an empty pytree when disabled —
-        # donating it is a no-op).
+        # replication register file (version/dirty tables), the overload
+        # queue/retry registers and the coordination tier's per-switch
+        # table copies (each an empty pytree when disabled — donating one
+        # is then a no-op).
         # The directory is NOT donated — several of its freshly-grafted
         # tables (e.g. the zeroed read/write counters) can alias the same
         # constant buffer, which XLA rejects as a double donation; it is
         # also tiny next to the slabs, so nothing is lost.
-        return jax.jit(period, donate_argnums=(0, 2, 3, 4, 5))
+        return jax.jit(period, donate_argnums=(0, 2, 3, 4, 5, 6))
 
     def _make_dist_observe(self):
         """The dist observe stage — everything after the sharded apply,
@@ -692,9 +784,11 @@ class EpochDriver:
         ocfg = self.ovl_cfg
         tcfg = self.tel_cfg
         tel_thr = self._tel_threshold
+        ccfg = self.coord_cfg
+        hp = bool(getattr(self.directory, "hash_partitioned", False))
 
         def observe(q, ridx, target, chain, chain_len, sketch, rng, repl,
-                    picked, bounced, ovl, r_ovl, eid):
+                    picked, bounced, ovl, r_ovl, eid, coord):
             """Post-processing of the dist apply's decision."""
             B = target.shape[0]
             decision = C.RoutingDecision(
@@ -716,17 +810,39 @@ class EpochDriver:
                     ovl, target, r_ovl, ocfg
                 )
                 ovl_kw = dict(shed=ovl_rej, service_scale=ovl_scale)
+                ovl, first_epoch = OVL.link_orbit(
+                    ovl, q.key, ovl_rej,
+                    ovl_out == OVL.OUTCOME_ADMITTED, eid,
+                )
             else:
                 ostats = jnp.zeros((len(OVL.STAT_FIELDS),), jnp.int32)
                 ovl_kw = {}
+                first_epoch = None
+            # the coordination tier observes the global batch (same
+            # accounting-plane placement as the oracle body: redirects
+            # reprice hops, nothing else changes)
+            if ccfg is not None:
+                coord, redirect, redirect_via, cstats = CT.observe_epoch(
+                    coord, q, decision, eid, quorum=ccfg.quorum,
+                    hash_partitioned=hp,
+                )
+                coord_kw = dict(redirect=redirect,
+                                redirect_via=redirect_via)
+            else:
+                redirect = None
+                cstats = CT.empty_cstats()
+                coord_kw = {}
             plan = plan_hops(
                 q, decision, cfg.mode, cfg.latency, rng=rng, num_nodes=N,
                 write_chain_cap=mp.write_cap_spread,
                 service_model=cfg.service_model, **bounce_kw, **ovl_kw,
+                **coord_kw,
             )
             if mp.track_state:
                 is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
                 repl = RPL.advance(repl, ridx, is_write)
+            span_bounced = (bounced if redirect is None
+                            else bounced | redirect)
             if tcfg is not None:
                 if ocfg is not None:
                     t_safe = jnp.clip(target, 0, N - 1)
@@ -753,14 +869,15 @@ class EpochDriver:
                     )
                     scale_rec = jnp.ones((B,), jnp.float32)
                 spans = TEL.collect_spans(
-                    q, eid, decision, picked, bounced, outcome, qdepth,
+                    q, eid, decision, picked, span_bounced, outcome, qdepth,
                     orbit, scale_rec, plan,
                     threshold=tel_thr, k_slots=tcfg.max_spans,
-                    lookup=cfg.latency.lookup,
+                    lookup=cfg.latency.lookup, first_epoch=first_epoch,
                 )
             else:
                 spans = None
-            return sketch, plan, node_ops, repl, ovl, ostats, spans
+            return (sketch, plan, node_ops, repl, ovl, coord, ostats,
+                    cstats, spans)
 
         return observe
 
@@ -790,12 +907,15 @@ class EpochDriver:
 
         observe = jax.jit(observe)
 
-        def step(store, directory, load_reg, sketch, repl, ovl, q, rng, eid):
+        def step(store, directory, load_reg, sketch, repl, ovl, coord, q,
+                 rng, eid):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
             load_reg = jax.device_put(load_reg, rep)
             sketch = jax.device_put(sketch, rep)
             repl = jax.device_put(repl, rep)
+            if coord is not None:
+                coord = jax.device_put(coord, rep)
             if ovl is not None:
                 ovl = jax.device_put(ovl, rep)
                 r_ovl = jax.random.fold_in(rng, 0x0F10AD)
@@ -827,14 +947,16 @@ class EpochDriver:
                 # placeholders keep observe's signature mode-independent
                 picked = m["target"]
                 bounced = jnp.zeros((B,), jnp.bool_)
-            sketch, plan, node_ops, repl, ovl, ostats, spans = observe(
+            (sketch, plan, node_ops, repl, ovl, coord, ostats, cstats,
+             spans) = observe(
                 q, m["ridx"], m["target"], m["chain"], m["chain_len"], sketch,
-                r_plan, repl, picked, bounced, ovl, r_ovl, eid,
+                r_plan, repl, picked, bounced, ovl, r_ovl, eid, coord,
             )
             if not spread:
                 load_reg = load_reg + node_ops.astype(jnp.uint32)
-            return (store, directory, load_reg, sketch, repl, ovl, plan,
-                    node_ops, m["bucket_overflow"], bounced, ostats, spans)
+            return (store, directory, load_reg, sketch, repl, ovl, coord,
+                    plan, node_ops, m["bucket_overflow"], bounced, ostats,
+                    cstats, spans)
 
         return step
 
@@ -873,7 +995,7 @@ class EpochDriver:
         rep = NamedSharding(self._mesh, PartitionSpec())
         shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
 
-        def period(store, directory, load_reg, sketch, repl, ovl,
+        def period(store, directory, load_reg, sketch, repl, ovl, coord,
                    qs, rngs, live, eids):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
@@ -882,8 +1004,10 @@ class EpochDriver:
             repl = jax.device_put(repl, rep)
             if ovl is not None:
                 ovl = jax.device_put(ovl, rep)
+            if coord is not None:
+                coord = jax.device_put(coord, rep)
             return self._dist_period(
-                store, directory, load_reg, sketch, repl, ovl,
+                store, directory, load_reg, sketch, repl, ovl, coord,
                 qs, rngs, live, eids,
             )
 
@@ -925,6 +1049,7 @@ class EpochDriver:
         scfg = self.scenario.cfg
         events: list[str] = []
         mig_entries = mig_bytes = 0
+        tables_changed = False
         for kind, node in self.scenario.events(e):
             if kind == "fail":
                 # live node_load mid-period: counters are NOT reset here
@@ -935,6 +1060,7 @@ class EpochDriver:
                 self.directory = self.controller.refresh(self.directory)
                 mig_entries += en
                 mig_bytes += by
+                tables_changed = True
                 events.append(f"fail:{node}")
             elif kind == "rack_fail":
                 # correlated failure: the switch fronting a rack dies and
@@ -948,11 +1074,31 @@ class EpochDriver:
                 self.directory = self.controller.refresh(self.directory)
                 mig_entries += en
                 mig_bytes += by
+                tables_changed = True
                 events.append("rack_fail:" + "+".join(map(str, rack)))
             elif kind == "recover":
                 self.controller.recover_node(node)
                 events.append(f"recover:{node}")
+            elif kind in CT.EVENT_KINDS:
+                # coordination-plane faults: meaningful only with the
+                # tier on; the same scenario drives the no-tier baseline
+                # arm, which simply ignores them
+                if self.coord_mgr is not None:
+                    self.coord, notes = self.coord_mgr.on_event(
+                        kind, node, self.coord,
+                        self.controller.table_snapshot(), now=e,
+                    )
+                    events.extend(notes)
         self._sync_repl()
+        if self.coord_mgr is not None and tables_changed:
+            # a failure splice is a control write like any other: it must
+            # propagate along the switch chain (stale copies keep routing
+            # to the spliced chain until their install lands — priced as
+            # redirects, never served wrong under quorum reads)
+            self.coord, notes = self.coord_mgr.on_control(
+                self.coord, self.controller.table_snapshot(), now=e,
+            )
+            events.extend(notes)
         return events, mig_entries, mig_bytes
 
     def _sync_repl(self) -> None:
@@ -1018,8 +1164,19 @@ class EpochDriver:
                 report,
                 budget_scale=float(span) / float(self.cfg.auto_band[0]),
             )
-        ops = self.policy.on_report(self.controller, report)
         events: list[str] = []
+        rb = getattr(self.policy.config, "redirect_backoff", 0.0)
+        if rb > 0 and self._last_redirect_share > rb:
+            # the switch fabric is still digesting the last
+            # reconfiguration (redirect share above the policy's backoff
+            # threshold): skip this round's policy consult entirely so
+            # control churn stops widening the stale window
+            ops = []
+            events.append(
+                f"redirect_backoff:{self._last_redirect_share:.3f}"
+            )
+        else:
+            ops = self.policy.on_report(self.controller, report)
         # backpressure control channel: policies publish per-node
         # admission probabilities / retry budgets and free-form event
         # notes; graft them onto the device registers for the next period
@@ -1053,7 +1210,8 @@ class EpochDriver:
                 mig_entries += en
                 mig_bytes += by
                 events.extend(f"{op.kind}:{op.src}->{op.dst}" for op in sops)
-        if self.controller.num_slots != self.directory.chains.shape[0]:
+        grew = self.controller.num_slots != self.directory.chains.shape[0]
+        if grew:
             # the slot pool grew under split_overflowed: shapes changed,
             # so refresh refuses by design — rebuild the device directory
             # and recompile the step.  The live counters were harvested
@@ -1066,6 +1224,20 @@ class EpochDriver:
         else:
             self.directory = self.controller.refresh(self.directory)
         self._sync_repl()
+        if self.coord_mgr is not None:
+            snap = self.controller.table_snapshot()
+            if grew:
+                # pool growth changes every table shape: full fabric
+                # resync at the new width (the step recompiles anyway —
+                # `traces` counts the growth, not a hidden retrace)
+                self.coord = self.coord_mgr.rebuild(snap)
+            else:
+                # the period's control writes enter the switch chain:
+                # commit now, install per-switch with chain-position lag
+                self.coord, cnotes = self.coord_mgr.on_control(
+                    self.coord, snap, now=now
+                )
+                events.extend(cnotes)
         if self.auto_period and now < self.scenario.cfg.n_epochs:
             # the pull at the final boundary has no next period to tune:
             # retuning there would append a period choice that never
@@ -1188,26 +1360,28 @@ class EpochDriver:
         with self._timers.stage("route_apply"):
             out = self._step(
                 self.store, self.directory, self.load_reg, self.sketch,
-                self.repl, self.ovl, q, rng, jnp.int32(e)
+                self.repl, self.ovl, self.coord, q, rng, jnp.int32(e)
             )
             if self._timers.enabled:
                 # profiling measures execution, not dispatch; values are
                 # untouched (an explicit, wall-time-only observer effect)
                 jax.block_until_ready(out)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, plan, node_ops, retries, bounced, ostats, spans) = out
+         self.ovl, self.coord, plan, node_ops, retries, bounced, ostats,
+         cstats, spans) = out
 
         self.host_syncs += 1   # the DES engine pulls the plan to the host
-        issue = None
+        issue = hops = None
         with self._timers.stage("des"):
             if self.telemetry is not None:
-                latency, makespan, issue = C.simulate_closed_loop(
+                latency, makespan, issue, hops = C.simulate_closed_loop(
                     plan,
                     n_clients=cfg.n_clients,
                     num_nodes=cfg.num_nodes,
                     link=cfg.latency.link,
                     backend=cfg.des_backend,
                     return_issue=True,
+                    return_hops=True,
                 )
             else:
                 latency, makespan = C.simulate_closed_loop(
@@ -1246,6 +1420,12 @@ class EpochDriver:
             ost = self._sync(ostats).astype(np.int64)
         else:
             ost = np.zeros((len(OVL.STAT_FIELDS),), np.int64)
+        if self.coord is not None:
+            cst = self._sync(cstats).astype(np.int64)
+            if cst[0] > 0:
+                self._last_redirect_share = float(cst[2]) / float(cst[0])
+        else:
+            cst = np.zeros((len(CT.CSTAT_FIELDS),), np.int64)
 
         # ---- control pull: the only counter/load-register reset path ----
         pull = ((e + 1) == self._next_pull if self.auto_period
@@ -1283,6 +1463,12 @@ class EpochDriver:
             requeued=int(ost[4]),
             lost=int(ost[5]),
             queue_peak=int(ost[6]),
+            routed=int(cst[0]),
+            direct=int(cst[1]),
+            redirected=int(cst[2]),
+            mis_served=int(cst[3]),
+            stale_switches=int(cst[4]),
+            coordination=self._coord_label(),
         )
         if self.telemetry is not None:
             si, sf, cnt = spans
@@ -1293,6 +1479,7 @@ class EpochDriver:
                 np.asarray(cnt)[None], lat,
                 None if issue is None else np.asarray(issue)[None],
                 np.asarray([mk]), self._state_snapshot(),
+                hops=None if hops is None else np.asarray(hops)[None],
             )
         return row
 
@@ -1308,7 +1495,16 @@ class EpochDriver:
             snap["conservation_gap"] = OVL.conservation_gap(self.ovl)
         if self.mode_plan.track_state:
             snap["replication"] = RPL.summary(self.repl)
+        if self.coord_mgr is not None:
+            snap["coordination"] = self.coord_mgr.summary()
         return snap
+
+    def _coord_label(self) -> str:
+        """The metric-row coordination arm label ("none" when the tier is
+        off — the pre-tier rows round-trip unchanged)."""
+        if self.coord_cfg is None:
+            return "none"
+        return "quorum" if self.coord_cfg.quorum else "no-quorum"
 
     def _live_mask(self) -> np.ndarray:
         """(N,) bool serving mask: failed AND standby nodes are out of the
@@ -1369,17 +1565,18 @@ class EpochDriver:
         with self._timers.stage("route_apply"):
             out = self._period_fn(
                 self.store, self.directory, self.load_reg, self.sketch,
-                self.repl, self.ovl, qs, rngs, live, eids,
+                self.repl, self.ovl, self.coord, qs, rngs, live, eids,
             )
             if self._timers.enabled:
                 # profiling measures execution, not dispatch; values are
                 # untouched (an explicit, wall-time-only observer effect)
                 jax.block_until_ready(out)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, plan, node_ops, retries, ovf, bounced, ostats,
-         spans) = out
+         self.ovl, self.coord, plan, node_ops, retries, ovf, bounced,
+         ostats, cstats, spans) = out
         return (jax.tree.map(lambda x: x[:L], plan),
                 node_ops[:L], retries[:L], ovf[:L], bounced[:L], ostats[:L],
+                cstats[:L],
                 None if spans is None
                 else jax.tree.map(lambda x: x[:L], spans),
                 opcodes_h)
@@ -1390,8 +1587,8 @@ class EpochDriver:
         the period boundary — plans/metrics stay on device until then.
         The fused dist driver runs the same period through
         :meth:`_scan_segment` instead (scan inside the shard_map)."""
-        plans, nops_l, rtr_l, ovf_l, bnc_l, ost_l, spn_l, op_l = (
-            [], [], [], [], [], [], [], []
+        plans, nops_l, rtr_l, ovf_l, bnc_l, ost_l, cst_l, spn_l, op_l = (
+            [], [], [], [], [], [], [], [], []
         )
         with self._timers.stage("route_apply"):
             for i in range(L):
@@ -1404,10 +1601,11 @@ class EpochDriver:
                 )
                 rng = jax.random.fold_in(self.key, e0 + i)
                 (self.store, self.directory, self.load_reg, self.sketch,
-                 self.repl, self.ovl, plan, node_ops, retries, bounced,
-                 ostats, spans) = self._step(
+                 self.repl, self.ovl, self.coord, plan, node_ops, retries,
+                 bounced, ostats, cstats, spans) = self._step(
                     self.store, self.directory, self.load_reg, self.sketch,
-                    self.repl, self.ovl, q, rng, jnp.int32(e0 + i)
+                    self.repl, self.ovl, self.coord, q, rng,
+                    jnp.int32(e0 + i)
                 )
                 plans.append(plan)
                 nops_l.append(node_ops)
@@ -1415,37 +1613,40 @@ class EpochDriver:
                 ovf_l.append(jnp.sum(self.store.overflow))
                 bnc_l.append(bounced)
                 ost_l.append(ostats)
+                cst_l.append(cstats)
                 spn_l.append(spans)
         plan = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
         spans = (None if spn_l[0] is None
                  else jax.tree.map(lambda *xs: jnp.stack(xs), *spn_l))
         return (plan, jnp.stack(nops_l), jnp.stack(rtr_l), jnp.stack(ovf_l),
-                jnp.stack(bnc_l), jnp.stack(ost_l), spans, np.stack(op_l))
+                jnp.stack(bnc_l), jnp.stack(ost_l), jnp.stack(cst_l), spans,
+                np.stack(op_l))
 
     def _run_segment(self, e0: int, n: int) -> list[EpochMetrics]:
         ev0, en0, by0 = self._handle_events(e0)
         L = self._segment_len(e0, n)
         if self._period_fn is not None:
-            (plan, node_ops, retries, ovf, bounced, ostats, spans,
+            (plan, node_ops, retries, ovf, bounced, ostats, cstats, spans,
              opcodes_h) = self._scan_segment(e0, L)
         else:
-            (plan, node_ops, retries, ovf, bounced, ostats, spans,
+            (plan, node_ops, retries, ovf, bounced, ostats, cstats, spans,
              opcodes_h) = self._step_segment(e0, L)
 
         cfg = self.cfg
         scfg = self.scenario.cfg
         # ---- ONE host round-trip for the whole segment ----
         self.host_syncs += 1   # the DES engine pulls the stacked plans
-        issue = None
+        issue = hops = None
         with self._timers.stage("des"):
             if self.telemetry is not None:
-                latency, makespan, issue = C.simulate_closed_loop(
+                latency, makespan, issue, hops = C.simulate_closed_loop(
                     plan,
                     n_clients=cfg.n_clients,
                     num_nodes=cfg.num_nodes,
                     link=cfg.latency.link,
                     backend=cfg.des_backend,
                     return_issue=True,
+                    return_hops=True,
                 )
             else:
                 latency, makespan = C.simulate_closed_loop(
@@ -1480,6 +1681,17 @@ class EpochDriver:
             ost_h = self._sync(ostats).astype(np.int64)        # (L, 7)
         else:
             ost_h = np.zeros((L, len(OVL.STAT_FIELDS)), np.int64)
+        if self.coord is not None:
+            cst_h = self._sync(cstats).astype(np.int64)        # (L, 5)
+            seg_routed = int(cst_h[:, 0].sum())
+            if seg_routed > 0:
+                # the redirect-backoff signal the NEXT pull's policy
+                # consult reads — update before the pull below
+                self._last_redirect_share = (
+                    float(cst_h[:, 2].sum()) / seg_routed
+                )
+        else:
+            cst_h = np.zeros((L, len(CT.CSTAT_FIELDS)), np.int64)
 
         pulled = ((e0 + L) == self._next_pull if self.auto_period
                   else (e0 + L) % self.period == 0)
@@ -1529,6 +1741,12 @@ class EpochDriver:
                 requeued=int(ost_h[i, 4]),
                 lost=int(ost_h[i, 5]),
                 queue_peak=int(ost_h[i, 6]),
+                routed=int(cst_h[i, 0]),
+                direct=int(cst_h[i, 1]),
+                redirected=int(cst_h[i, 2]),
+                mis_served=int(cst_h[i, 3]),
+                stale_switches=int(cst_h[i, 4]),
+                coordination=self._coord_label(),
             ))
         if self.telemetry is not None:
             with self._timers.stage("telemetry"):
@@ -1537,7 +1755,7 @@ class EpochDriver:
                 self.telemetry.on_segment(
                     e0, rows, np.asarray(si), np.asarray(sf),
                     np.asarray(cnt), lat, issue, mks,
-                    self._state_snapshot(),
+                    self._state_snapshot(), hops=hops,
                 )
         return rows
 

@@ -50,6 +50,14 @@ class EpochMetrics:
                                   # tail bounce (== read_p99 off-craq)
     dirty_reads: int = 0      # reads that bounced to the tail this epoch
     replication: str = "eventual"
+    # ---- coordination-tier observables (repro.coordination_tier) ----
+    # exact conservation holds per row: routed == direct + redirected
+    routed: int = 0           # queries resolved through the switch tier
+    direct: int = 0           # served off a non-divergent table row
+    redirected: int = 0       # versioned redirects (one priced extra hop)
+    mis_served: int = 0       # stale wrong-owner serves NOT redirected
+    stale_switches: int = 0   # switch copies divergent at epoch end
+    coordination: str = "none"
 
     def to_row(self) -> dict:
         row = dataclasses.asdict(self)
@@ -220,6 +228,7 @@ def summarize(rows: list[EpochMetrics]) -> dict:
         "scenario": rows[0].scenario,
         "policy": rows[0].policy,
         "replication": rows[0].replication,
+        "coordination": rows[0].coordination,
         "epochs": len(rows),
         "mean_throughput": float(f("throughput").mean()),
         "mean_p50": float(f("p50").mean()),
@@ -242,5 +251,10 @@ def summarize(rows: list[EpochMetrics]) -> dict:
         "total_requeued": int(f("requeued").sum()),
         "total_lost": int(f("lost").sum()),
         "max_queue_peak": int(f("queue_peak").max()),
+        "total_routed": int(f("routed").sum()),
+        "total_direct": int(f("direct").sum()),
+        "total_redirected": int(f("redirected").sum()),
+        "total_mis_served": int(f("mis_served").sum()),
+        "max_stale_switches": int(f("stale_switches").max()),
         "compiled_steps": int(rows[-1].compiled_steps),
     }

@@ -85,6 +85,14 @@ class PolicyConfig:
     scale_patience: int = 2       # consecutive reports before acting
     min_serving: int = 2          # never park below this many live nodes
 
+    # ---- coordination-tier backoff (repro.coordination_tier) ----
+    # skip a policy round entirely when the previous period's redirect
+    # share (redirected / routed, from the switch tier's conservation
+    # counters) exceeds this: the fabric is still digesting the last
+    # reconfiguration, and more migrations would only widen the stale
+    # window.  0.0 (the default) disables the check bit-identically.
+    redirect_backoff: float = 0.0
+
 
 class Policy:
     """Base policy: freeze the directory (no control actions at all)."""

@@ -391,6 +391,88 @@ class RetryStorm(Scenario):
         return ev
 
 
+class LeaseExpiry(ShiftingHotspot):
+    """Coordination-tier stressor: the controller's directory lease on the
+    switch fabric expires mid-run while the Zipf hot block keeps rotating
+    (so migrations keep rewriting the tables).  Staging stalls — committed
+    versions run ahead of every switch copy, widening the stale window —
+    until either an explicit renewal or the failover grace elapses and
+    leadership moves down the switch chain
+    (``repro.coordination_tier.CoordManager``).  Without the tier the
+    events are ignored: the same scenario is the no-coordination baseline.
+    """
+
+    name = "lease_expiry"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 1.2,
+                 shift_every: int = 3, expire_epoch: int = 3,
+                 renew_epoch: int | None = None):
+        super().__init__(cfg, theta=theta, shift_every=shift_every)
+        self.expire_epoch = expire_epoch
+        self.renew_epoch = renew_epoch
+
+    def events(self, epoch: int) -> list[tuple[str, object]]:
+        ev: list[tuple[str, object]] = []
+        if epoch == self.expire_epoch:
+            ev.append(("lease_expire", 0))
+        if self.renew_epoch is not None and epoch == self.renew_epoch:
+            ev.append(("lease_renew", 0))
+        return ev
+
+
+class SplitBrain(ShiftingHotspot):
+    """Coordination-tier stressor: at ``split_epoch`` one switch partitions
+    away from the quorum, claims leadership, and installs a divergent
+    table (chain ownership rotated by one node, versions self-stamped past
+    the commit).  Every query entering through the rogue switch would be
+    served by the wrong owner; the versioned-redirect check catches the
+    divergence and bounces them to the true owner instead.  Healing
+    re-registers the rogue at the committed table.
+    """
+
+    name = "split_brain"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 1.2,
+                 shift_every: int = 3, split_epoch: int = 3,
+                 heal_epoch: int | None = 8, switch: int = 1):
+        super().__init__(cfg, theta=theta, shift_every=shift_every)
+        self.split_epoch = split_epoch
+        self.heal_epoch = heal_epoch
+        self.switch = int(switch)
+
+    def events(self, epoch: int) -> list[tuple[str, object]]:
+        ev: list[tuple[str, object]] = []
+        if epoch == self.split_epoch:
+            ev.append(("split_brain", self.switch))
+        if self.heal_epoch is not None and epoch == self.heal_epoch:
+            ev.append(("heal_split", self.switch))
+        return ev
+
+
+class QuorumDrift(ShiftingHotspot):
+    """Coordination-tier stressor: at ``drift_epoch`` one switch's install
+    lag multiplies (a congested control channel), so its table copy trails
+    the quorum commit by ``drift_mult`` times the configured per-hop lag —
+    every reconfiguration after that point leaves the drifted switch
+    serving stale routes (and redirecting, under quorum reads) for a
+    proportionally longer window.
+    """
+
+    name = "quorum_drift"
+
+    def __init__(self, cfg: ScenarioConfig, *, theta: float = 1.2,
+                 shift_every: int = 3, drift_epoch: int = 2,
+                 switch: int = 2):
+        super().__init__(cfg, theta=theta, shift_every=shift_every)
+        self.drift_epoch = drift_epoch
+        self.switch = int(switch)
+
+    def events(self, epoch: int) -> list[tuple[str, object]]:
+        if epoch == self.drift_epoch:
+            return [("quorum_drift", self.switch)]
+        return []
+
+
 SCENARIOS = {
     "stationary": Scenario,
     "shifting_hotspot": ShiftingHotspot,
@@ -403,6 +485,9 @@ SCENARIOS = {
     "ycsb_a": YcsbA,
     "cascade_failure": CascadeFailure,
     "retry_storm": RetryStorm,
+    "lease_expiry": LeaseExpiry,
+    "split_brain": SplitBrain,
+    "quorum_drift": QuorumDrift,
 }
 
 

@@ -1,0 +1,32 @@
+"""Switch-replicated directory tier: stale-table routing, versioned
+redirects, leases, and split-brain survival (NetChain pattern over the
+slot-pool directory — see state.py for the full design note)."""
+
+from repro.coordination_tier.manager import EVENT_KINDS, CoordManager
+from repro.coordination_tier.state import (
+    CSTAT_FIELDS,
+    INSTALL_NEVER,
+    CoordConfig,
+    CoordState,
+    empty_cstats,
+    ingress_switch,
+    install_pending,
+    make_state,
+    observe_epoch,
+    stale_lookup,
+)
+
+__all__ = [
+    "CSTAT_FIELDS",
+    "EVENT_KINDS",
+    "INSTALL_NEVER",
+    "CoordConfig",
+    "CoordState",
+    "CoordManager",
+    "empty_cstats",
+    "ingress_switch",
+    "install_pending",
+    "make_state",
+    "observe_epoch",
+    "stale_lookup",
+]

@@ -1,0 +1,251 @@
+"""Host-side control plane for the replicated directory tier.
+
+The :class:`CoordManager` is the switch-chain controller: it diffs
+successive host snapshots of the slot tables (``Controller.table_snapshot``
+— never the live device directory, so no host syncs), bumps the
+quorum-committed version of every slot a control action rewrote, and
+*stages* the new table for propagation along the switch chain with
+per-position lag.  It also owns the lease state machine (renewal at every
+control pull; expiry stalls staging; failover moves leadership down the
+chain after a grace window) and the fault injectors behind the
+``lease_expiry`` / ``split_brain`` / ``quorum_drift`` scenarios.
+
+Everything here runs between fused segments, exactly like the overload
+plane's admit-probability grafts: the manager rewrites whole leaves of the
+:class:`~repro.coordination_tier.state.CoordState` carry with freshly
+materialized arrays of identical shape/dtype, so the compiled step never
+retraces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hierarchy as H
+from repro.coordination_tier import state as ST
+from repro.coordination_tier.state import CoordConfig, CoordState, INSTALL_NEVER
+
+_TABLE_KEYS = ("slot_lo", "slot_hi", "live", "chains", "chain_len")
+
+# the scenario-event vocabulary :meth:`CoordManager.on_event` understands
+# (the epoch driver routes exactly these kinds to the manager; a run
+# without the tier ignores them, so fault scenarios double as the
+# no-coordination baseline arm)
+EVENT_KINDS = (
+    "lease_expire",
+    "lease_renew",
+    "split_brain",
+    "heal_split",
+    "quorum_drift",
+)
+
+
+def _copy_tables(tables: dict) -> dict:
+    return {k: np.array(tables[k]) for k in _TABLE_KEYS}
+
+
+class CoordManager:
+    """Lease-holding controller of the switch chain."""
+
+    def __init__(self, cfg: CoordConfig, tables: dict, *, num_nodes: int, num_pods: int = 1):
+        self.cfg = cfg
+        self.chain = H.switch_topology(num_pods, cfg.n_switches)
+        self.n_switches = len(self.chain)
+        self.num_nodes = int(num_nodes)
+        self._truth = _copy_tables(tables)
+        s = self._truth["slot_lo"].shape[0]
+        self._committed = np.zeros(s, np.uint32)
+        self._staged = np.zeros(s, np.uint32)  # last committed vector staged
+        # lease state machine
+        self.leader_pos = 0
+        self.lease_expires = cfg.lease_epochs
+        self.lease_blocked = False  # active lease_expiry fault on the leader
+        self.renewals = 0
+        self.failovers = 0
+        self.stall_pulls = 0
+        # fault bookkeeping
+        self.lag_mult = np.ones(self.n_switches, np.int64)
+        self.rogue: set[int] = set()
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def leader(self) -> int:
+        return self.chain[self.leader_pos]
+
+    def bound(self) -> int:
+        """Configured staleness bound: every switch converges to the
+        committed table within this many epochs of the staging pull
+        (absent an active lease stall or split-brain, which by design
+        widen the window until resolved)."""
+        if self.cfg.staleness_bound is not None:
+            return self.cfg.staleness_bound
+        return (self.n_switches - 1) * self.cfg.lag_per_hop * int(self.lag_mult.max())
+
+    def _delays(self) -> np.ndarray:
+        """Per-switch install delay: chain position relative to the
+        current leader times the per-hop lag (scaled for drifted
+        replicas)."""
+        pos = (np.arange(self.n_switches) - self.leader_pos) % self.n_switches
+        return pos * self.cfg.lag_per_hop * self.lag_mult
+
+    # -- state construction ----------------------------------------------
+    def make_state(self) -> CoordState:
+        return ST.make_state(self._truth, self.n_switches)
+
+    def rebuild(self, tables: dict) -> CoordState:
+        """Full resync after a slot-pool growth: shapes changed, so every
+        switch re-registers at the new width (pool growth is already a
+        recompile barrier for the whole pipeline)."""
+        self._truth = _copy_tables(tables)
+        s = self._truth["slot_lo"].shape[0]
+        self._committed = np.zeros(s, np.uint32)
+        self._staged = np.zeros(s, np.uint32)
+        self.rogue.clear()
+        return self.make_state()
+
+    # -- the control-write path -------------------------------------------
+    def on_control(self, coord: CoordState, tables: dict, now: int) -> tuple[CoordState, list[str]]:
+        """Runs at every control sync point (period pulls and event
+        splices).  Diffs the table snapshot against the last one, bumps
+        committed versions for rewritten slots, and — lease permitting —
+        stages the new table along the chain."""
+        notes: list[str] = []
+        now = int(now)
+
+        # lease: holding the control channel renews it; an active expiry
+        # fault blocks renewal until failover or an explicit renew event.
+        if not self.lease_blocked:
+            self.lease_expires = now + self.cfg.lease_epochs
+            self.renewals += 1
+        elif now >= self.lease_expires + self.cfg.failover_after:
+            self.leader_pos = (self.leader_pos + 1) % self.n_switches
+            self.lease_blocked = False
+            self.lease_expires = now + self.cfg.lease_epochs
+            self.failovers += 1
+            notes.append(f"coord_failover:sw{self.leader}")
+
+        # diff: which slots did the controller rewrite since last sync?
+        new = _copy_tables(tables)
+        old = self._truth
+        changed = (
+            (new["slot_lo"] != old["slot_lo"])
+            | (new["slot_hi"] != old["slot_hi"])
+            | (new["live"] != old["live"])
+            | (new["chains"] != old["chains"]).any(axis=1)
+            | (new["chain_len"] != old["chain_len"])
+        )
+        self._truth = new
+        n_changed = int(changed.sum())
+        if n_changed:
+            # the reconfiguration itself IS the quorum commit — serving
+            # nodes learn their new ownership through the data plane, so
+            # divergence detection fires even while switch staging stalls
+            self._committed[changed] += 1
+            coord = dataclasses.replace(coord, committed=jnp.asarray(self._committed))
+
+        if self.lease_blocked:
+            if (self._staged != self._committed).any():
+                self.stall_pulls += 1
+                notes.append(f"coord_stall:{int((self._staged != self._committed).sum())}")
+            return coord, notes
+
+        if (self._staged != self._committed).any():
+            coord = self._stage(coord, now)
+            notes.append(f"coord_stage:{n_changed}")
+        return coord, notes
+
+    def _stage(self, coord: CoordState, now: int) -> CoordState:
+        t = self._truth
+        install = np.full(self.n_switches, INSTALL_NEVER, np.int64)
+        okay = np.ones(self.n_switches, bool)
+        for w in self.rogue:  # a rogue switch ignores quorum installs
+            okay[w] = False
+        delays = self._delays()
+        install[okay] = now + delays[okay]
+        install = np.minimum(install, int(INSTALL_NEVER)).astype(np.int32)
+        self._staged = self._committed.copy()
+        return dataclasses.replace(
+            coord,
+            pend_lo=jnp.asarray(t["slot_lo"].astype(np.uint32)),
+            pend_hi=jnp.asarray(t["slot_hi"].astype(np.uint32)),
+            pend_live=jnp.asarray(t["live"].astype(bool)),
+            pend_chains=jnp.asarray(t["chains"].astype(np.int32)),
+            pend_clen=jnp.asarray(t["chain_len"].astype(np.int32)),
+            pend_version=jnp.asarray(self._committed),
+            install_at=jnp.asarray(install),
+        )
+
+    # -- fault injectors ---------------------------------------------------
+    def on_event(self, kind: str, payload, coord: CoordState, tables: dict, now: int) -> tuple[CoordState, list[str]]:
+        notes: list[str] = []
+        if kind == "lease_expire":
+            self.lease_blocked = True
+            self.lease_expires = min(self.lease_expires, int(now))
+            notes.append(f"coord_lease_expired:sw{self.leader}")
+        elif kind == "lease_renew":
+            self.lease_blocked = False
+            self.lease_expires = int(now) + self.cfg.lease_epochs
+            self.renewals += 1
+            notes.append("coord_lease_renewed")
+        elif kind == "split_brain":
+            w = int(payload) % self.n_switches
+            if w == self.leader_pos:
+                w = (w + 1) % self.n_switches
+            self.rogue.add(w)
+            # the rogue claims leadership and installs its own divergent
+            # table: same partition bounds, chain ownership rotated by one
+            # node, versions self-stamped far past the quorum commit
+            ch = self._truth["chains"]
+            rogue_ch = np.where(ch >= 0, (ch + 1) % self.num_nodes, ch).astype(np.int32)
+            rogue_v = (self._committed + np.uint32(1000)).astype(np.uint32)
+            coord = dataclasses.replace(
+                coord,
+                chains=coord.chains.at[w].set(jnp.asarray(rogue_ch)),
+                version=coord.version.at[w].set(jnp.asarray(rogue_v)),
+                install_at=coord.install_at.at[w].set(jnp.int32(INSTALL_NEVER)),
+            )
+            notes.append(f"coord_split_brain:sw{w}")
+        elif kind == "heal_split":
+            t = self._truth
+            for w in sorted(self.rogue):
+                coord = dataclasses.replace(
+                    coord,
+                    slot_lo=coord.slot_lo.at[w].set(jnp.asarray(t["slot_lo"].astype(np.uint32))),
+                    slot_hi=coord.slot_hi.at[w].set(jnp.asarray(t["slot_hi"].astype(np.uint32))),
+                    live=coord.live.at[w].set(jnp.asarray(t["live"].astype(bool))),
+                    chains=coord.chains.at[w].set(jnp.asarray(t["chains"].astype(np.int32))),
+                    chain_len=coord.chain_len.at[w].set(jnp.asarray(t["chain_len"].astype(np.int32))),
+                    version=coord.version.at[w].set(jnp.asarray(self._committed)),
+                )
+                notes.append(f"coord_heal:sw{w}")
+            self.rogue.clear()
+        elif kind == "quorum_drift":
+            w = int(payload) % self.n_switches
+            self.lag_mult[w] = self.cfg.drift_mult
+            notes.append(f"coord_drift:sw{w}x{self.cfg.drift_mult}")
+        else:
+            raise ValueError(f"unknown coordination event kind: {kind!r}")
+        return coord, notes
+
+    # -- inspection --------------------------------------------------------
+    def converged(self, coord: CoordState) -> bool:
+        """Every switch's every slot at the committed version (one sync)."""
+        v = np.asarray(coord.version)
+        c = np.asarray(coord.committed)
+        return bool((v == c[None, :]).all())
+
+    def summary(self) -> dict:
+        return {
+            "n_switches": self.n_switches,
+            "leader": self.leader,
+            "renewals": self.renewals,
+            "failovers": self.failovers,
+            "stall_pulls": self.stall_pulls,
+            "lease_blocked": self.lease_blocked,
+            "rogue": sorted(self.rogue),
+            "lag_mult": self.lag_mult.tolist(),
+            "staleness_bound": self.bound(),
+        }

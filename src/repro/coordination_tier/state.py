@@ -1,0 +1,291 @@
+"""Device-resident state for the replicated in-switch directory tier.
+
+The paper's switches *are* the partition directory, but the cluster driver
+historically modeled directory refresh as instant and global: one oracle
+array the host grafts atomically (``Controller.refresh``), so a client
+could never observe a lagging table.  This module promotes the directory
+to a replicated per-switch service in the NetChain style (PAPERS.md): each
+ToR/spine switch holds its own copy of the slot tables plus a per-slot
+**version** register, and control writes propagate along the switch chain
+with per-position lag — so after a split / migration / failure splice some
+switches serve *stale* tables for a bounded window.
+
+Representation (all shape-stable, carried and donated through the fused
+period ``lax.scan`` exactly like the PR-5 ``ReplState`` register file):
+
+``slot_lo / slot_hi / live / chains / chain_len``
+    ``(W, S, ...)`` — switch ``w``'s private copy of the slot tables.
+``version``
+    ``(W, S) u32`` — the table version switch ``w`` believes slot ``s``
+    is at.
+``committed``
+    ``(S,) u32`` — the quorum-committed version of each slot (the data
+    plane's ground truth; bumped by the host controller the moment a
+    control action rewrites a slot, *independent* of switch propagation).
+``pend_* / install_at``
+    staged next table: the full pending snapshot plus the epoch at which
+    each switch installs it (``INSTALL_NEVER`` = nothing staged).  A slow
+    switch whose pending is overwritten before it installed simply skips
+    the intermediate version — exactly how a lagging replica catches up
+    in NetChain (it syncs the latest state, not the edit log).
+
+Stale routing is resolved *in-loop* and is accounting-plane only: the
+query's TRUE routing decision (and therefore every store effect, counter,
+and PRNG draw) is untouched; what staleness changes is the *path* — a
+query entering a lagging switch follows the old table to the old server,
+the server's version check detects the mismatch, and a versioned redirect
+re-routes it (one extra hop, priced through the DES and counted in
+telemetry's bounce bucket).  With the tier disabled, or with zero
+propagation lag, the emitted metric stream is bit-identical to the
+tier-less driver by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as K
+
+# install_at sentinel: no staged table for this switch.
+INSTALL_NEVER = np.int32(2**31 - 1)
+
+# cstats vector layout (per-epoch coordination counters, all exact):
+#   routed      — queries routed this epoch (== batch size)
+#   direct      — served off a table row matching the committed version
+#   redirected  — versioned redirect taken (extra hop priced in the DES)
+#   mis_served  — served off a divergent wrong-owner row with NO redirect
+#                 (only the no-quorum baseline can produce these)
+#   stale_sw    — gauge: switches holding >=1 divergent slot this epoch
+CSTAT_FIELDS = ("routed", "direct", "redirected", "mis_served", "stale_switches")
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordConfig:
+    """Knobs for the replicated directory tier.
+
+    ``n_switches=None`` derives the tier width from the pod structure
+    (``core.hierarchy.switch_topology``: one ToR per pod + one spine).
+    ``lag_per_hop`` is the propagation delay (epochs) per chain position;
+    0 makes every switch install at the staging epoch, which reproduces
+    the tier-less metric stream bit-identically.  ``quorum=True`` is the
+    lease + quorum-versioned arm (divergent rows are detected and
+    redirected); ``False`` is the baseline that trusts whatever table the
+    ingress switch holds.  ``staleness_bound=None`` derives the
+    convergence bound as ``(W-1) * lag_per_hop * drift_mult``.
+    """
+
+    n_switches: int | None = 4
+    lag_per_hop: int = 1
+    quorum: bool = True
+    staleness_bound: int | None = None
+    lease_epochs: int = 4
+    failover_after: int = 2
+    drift_mult: int = 4
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "slot_lo",
+        "slot_hi",
+        "live",
+        "chains",
+        "chain_len",
+        "version",
+        "committed",
+        "pend_lo",
+        "pend_hi",
+        "pend_live",
+        "pend_chains",
+        "pend_clen",
+        "pend_version",
+        "install_at",
+    ),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class CoordState:
+    slot_lo: jnp.ndarray      # (W, S) u32
+    slot_hi: jnp.ndarray      # (W, S) u32
+    live: jnp.ndarray         # (W, S) bool
+    chains: jnp.ndarray       # (W, S, r_max) i32
+    chain_len: jnp.ndarray    # (W, S) i32
+    version: jnp.ndarray      # (W, S) u32
+    committed: jnp.ndarray    # (S,) u32
+    pend_lo: jnp.ndarray      # (S,) u32
+    pend_hi: jnp.ndarray      # (S,) u32
+    pend_live: jnp.ndarray    # (S,) bool
+    pend_chains: jnp.ndarray  # (S, r_max) i32
+    pend_clen: jnp.ndarray    # (S,) i32
+    pend_version: jnp.ndarray  # (S,) u32
+    install_at: jnp.ndarray   # (W,) i32; INSTALL_NEVER = nothing staged
+
+    @property
+    def n_switches(self) -> int:
+        return self.slot_lo.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.slot_lo.shape[1]
+
+
+def make_state(tables: dict, n_switches: int) -> CoordState:
+    """Fresh tier state: every switch holds ``tables`` at version 0.
+
+    ``tables`` is a host snapshot (``Controller.table_snapshot()``).  All
+    leaves are freshly materialized device arrays — nothing aliases the
+    live directory, so the coord carry can be donated while the directory
+    is not.
+    """
+    w = int(n_switches)
+    lo = np.ascontiguousarray(tables["slot_lo"], np.uint32)
+    hi = np.ascontiguousarray(tables["slot_hi"], np.uint32)
+    lv = np.ascontiguousarray(tables["live"], bool)
+    ch = np.ascontiguousarray(tables["chains"], np.int32)
+    cl = np.ascontiguousarray(tables["chain_len"], np.int32)
+    s = lo.shape[0]
+    return CoordState(
+        slot_lo=jnp.asarray(np.tile(lo[None], (w, 1))),
+        slot_hi=jnp.asarray(np.tile(hi[None], (w, 1))),
+        live=jnp.asarray(np.tile(lv[None], (w, 1))),
+        chains=jnp.asarray(np.tile(ch[None], (w, 1, 1))),
+        chain_len=jnp.asarray(np.tile(cl[None], (w, 1))),
+        version=jnp.zeros((w, s), jnp.uint32),
+        committed=jnp.zeros((s,), jnp.uint32),
+        pend_lo=jnp.asarray(lo.copy()),
+        pend_hi=jnp.asarray(hi.copy()),
+        pend_live=jnp.asarray(lv.copy()),
+        pend_chains=jnp.asarray(ch.copy()),
+        pend_clen=jnp.asarray(cl.copy()),
+        pend_version=jnp.zeros((s,), jnp.uint32),
+        install_at=jnp.full((w,), INSTALL_NEVER, jnp.int32),
+    )
+
+
+def install_pending(state: CoordState, eid: jnp.ndarray) -> CoordState:
+    """Switches whose install epoch has arrived adopt the staged table.
+
+    Pure value rewrites at fixed shapes — runs at the top of every epoch
+    inside the fused scan, so "install at epoch ``e``" means the table is
+    visible to every query of epoch ``e``.
+    """
+    inst = eid.astype(jnp.int32) >= state.install_at  # (W,)
+
+    def mix(tbl, pend):
+        m = inst.reshape((-1,) + (1,) * (tbl.ndim - 1))
+        return jnp.where(m, jnp.broadcast_to(pend[None], tbl.shape), tbl)
+
+    return dataclasses.replace(
+        state,
+        slot_lo=mix(state.slot_lo, state.pend_lo),
+        slot_hi=mix(state.slot_hi, state.pend_hi),
+        live=mix(state.live, state.pend_live),
+        chains=mix(state.chains, state.pend_chains),
+        chain_len=mix(state.chain_len, state.pend_clen),
+        version=mix(state.version, state.pend_version),
+        install_at=jnp.where(inst, jnp.int32(INSTALL_NEVER), state.install_at),
+    )
+
+
+def ingress_switch(keys: jnp.ndarray, n_switches: int) -> jnp.ndarray:
+    """Which switch a query enters the fabric through.
+
+    Clients hash onto ToRs; the golden-hash mix keeps it deterministic
+    (no PRNG consumed — the tier must not perturb the metric stream).
+    """
+    return (K.hash_key(keys) % jnp.uint32(n_switches)).astype(jnp.int32)
+
+
+def stale_lookup(state: CoordState, sw: jnp.ndarray, mvals: jnp.ndarray) -> jnp.ndarray:
+    """``directory.lookup_range`` evaluated against each query's *own
+    switch's* table copy — bit-identical formula, per-query gathered rows.
+
+    ``mvals`` is the matching value (``keys.matching_value``: hashed key
+    under hash partitioning, the key itself under range partitioning) —
+    the same header field the true lookup matches on, so a converged
+    replica reproduces the oracle ridx exactly.  Dead slots carry the
+    (DEAD_LO > DEAD_HI) sentinel in every replica, so they lose here
+    exactly as in the oracle lookup.
+    """
+    lo = state.slot_lo[sw]    # (B, S)
+    hi = state.slot_hi[sw]
+    lv = state.live[sw]
+    v = mvals.astype(jnp.uint32)[:, None]
+    hit = lv & (v >= lo) & (v <= hi)
+    s = lo.shape[1]
+    idx = jnp.where(hit, jnp.arange(s, dtype=jnp.int32)[None, :], jnp.int32(s))
+    ridx = jnp.min(idx, axis=1)
+    return jnp.minimum(ridx, jnp.int32(s - 1))
+
+
+def _chain_server(rows: jnp.ndarray, clen: jnp.ndarray, is_write: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic serving node under a table: chain head for writes,
+    chain tail for reads (the version check happens at this node)."""
+    head = rows[:, 0]
+    last = jnp.maximum(clen - 1, 0)[:, None]
+    tail = jnp.take_along_axis(rows, last, axis=1)[:, 0]
+    return jnp.where(is_write, head, tail).astype(jnp.int32)
+
+
+def observe_epoch(state, q, decision, eid, *, quorum: bool,
+                  hash_partitioned: bool = False):
+    """One epoch of the coordination tier: install staged tables, route
+    each query through its ingress switch's (possibly stale) table, and
+    resolve divergence.
+
+    Returns ``(state', redirect, redirect_via, cstats)``:
+
+    - ``redirect (B,) bool`` — the versioned redirect hop to take (quorum
+      arm only; the baseline never redirects).
+    - ``redirect_via (B,) i32`` — the stale server the query visits first
+      (where the version check fires); priced as one extra lookup hop.
+    - ``cstats (5,) i32`` — see ``CSTAT_FIELDS``; conservation
+      ``routed == direct + redirected`` holds exactly by construction.
+
+    The TRUE decision is computed by the unchanged routing path before
+    this runs; store effects, counters and PRNG draws never depend on the
+    tier — staleness only re-prices the path.  ``mis_served`` counts
+    queries whose stale deterministic server differs from the true one
+    and that were *not* redirected: wrong-owner service implies the slot
+    row changed, which implies a version mismatch, so under the quorum
+    arm this is zero by the divergence check.
+    """
+    state = install_pending(state, eid)
+    w = state.n_switches
+
+    is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
+    sw = ingress_switch(q.key, w)
+    mv = K.matching_value(q.key, hash_partitioned=hash_partitioned)
+    sridx = stale_lookup(state, sw, mv)
+
+    via_stale = _chain_server(state.chains[sw, sridx], state.chain_len[sw, sridx], is_write)
+    via_true = _chain_server(decision.chain, decision.chain_len, is_write)
+
+    divergent = state.version[sw, sridx] != state.committed[sridx]
+    wrong = via_stale != via_true
+    if quorum:
+        redirect = divergent
+    else:
+        redirect = jnp.zeros_like(divergent)
+    mis = wrong & ~redirect
+    redirect_via = jnp.where(via_stale >= 0, via_stale, via_true).astype(jnp.int32)
+
+    routed = jnp.int32(q.key.shape[0])
+    n_red = jnp.sum(redirect).astype(jnp.int32)
+    stale_sw = jnp.sum(
+        jnp.any(state.version != state.committed[None, :], axis=1)
+    ).astype(jnp.int32)
+    cstats = jnp.stack(
+        [routed, routed - n_red, n_red, jnp.sum(mis).astype(jnp.int32), stale_sw]
+    )
+    return state, redirect, redirect_via, cstats
+
+
+def empty_cstats() -> jnp.ndarray:
+    """Counter vector when the tier is disabled (keeps scan ys uniform)."""
+    return jnp.zeros((len(CSTAT_FIELDS),), jnp.int32)

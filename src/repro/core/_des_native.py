@@ -40,6 +40,7 @@ _ARGTYPES = [
     ctypes.c_void_p,  # scratch_heap (B+1,2) f64
     ctypes.c_void_p,  # finish (S,B) f64
     ctypes.c_void_p,  # issue (S,B) f64
+    ctypes.c_void_p,  # hop_done (S,B,H) f64 or NULL
 ]
 
 

@@ -135,6 +135,26 @@ class Controller:
             hash_partitioned=self.hash_partitioned,
         )
 
+    def table_snapshot(self) -> dict:
+        """Host-side copies of the slot tables a coordination switch serves.
+
+        Returns fresh numpy arrays (not views of the controller's private
+        state) for exactly the fields a data-plane switch table holds:
+        ``slot_lo / slot_hi / live / chains / chain_len``.  The
+        coordination tier (``repro.coordination_tier``) diffs successive
+        snapshots to decide which slots changed and therefore need a
+        version bump + staged propagation — without ever pulling the live
+        device directory (no host syncs).
+        """
+        d = self._dir
+        return {
+            "slot_lo": d["slot_lo"].copy(),
+            "slot_hi": d["slot_hi"].copy(),
+            "live": d["live"].copy(),
+            "chains": d["chains"].copy(),
+            "chain_len": d["chain_len"].copy(),
+        }
+
     @property
     def num_nodes(self) -> int:
         return self._dir["node_addr"].shape[0]

@@ -151,6 +151,8 @@ def plan_hops(
     read_bounce: jnp.ndarray | None = None,
     shed: jnp.ndarray | None = None,
     service_scale: jnp.ndarray | None = None,
+    redirect: jnp.ndarray | None = None,
+    redirect_via: jnp.ndarray | None = None,
 ) -> HopPlan:
     """Build the per-query hop plan for a coordination model.
 
@@ -184,11 +186,24 @@ def plan_hops(
     service* cost (occupancy-dependent inflation behind a deep admission
     queue); lookup/coordination overheads stay deterministic.  ``None``
     for both reproduces the pre-overload plans bit for bit.
+
+    ``redirect`` / ``redirect_via`` (both (B,), together or not at all)
+    encode coordination-tier versioned redirects
+    (:mod:`repro.coordination_tier`): a query that entered through a
+    switch serving a *stale* directory table first lands on the old
+    owner ``redirect_via``, which only version-checks the slot and
+    forwards (deterministic ``model.lookup`` cost, one extra link) —
+    then the true plan proceeds unchanged.  The extra visit is prepended
+    as one hop column, so passing ``redirect`` with no bit set yields a
+    plan whose all-``NO_HOP`` extra column the DES compaction squeezes —
+    timing bit-identical to not passing it at all.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     if (read_via is None) != (read_bounce is None):
         raise ValueError("read_via and read_bounce must be passed together")
+    if (redirect is None) != (redirect_via is None):
+        raise ValueError("redirect and redirect_via must be passed together")
     B, r_max = decision.chain.shape
     is_write = (q.opcode == K.OP_PUT) | (q.opcode == K.OP_DEL)
     visit_len = decision.chain_len
@@ -271,6 +286,14 @@ def plan_hops(
         service = jnp.concatenate([first_service, rest_service], axis=1)
         extra_entry = 0
 
+    if redirect is not None:
+        # stale-table redirect: one prepended visit at the old owner,
+        # which version-checks and forwards (lookup cost, no storage op)
+        r_node = jnp.where(redirect, redirect_via.astype(jnp.int32), NO_HOP)
+        r_service = jnp.where(redirect, jnp.float32(model.lookup), 0.0)
+        nodes = jnp.concatenate([r_node[:, None], nodes], axis=1)
+        service = jnp.concatenate([r_service[:, None], service], axis=1)
+
     if shed is not None:
         # rejected by the overload plane: the "switch" NACKs without any
         # storage visit — an all-dead row the DES completes in ~one link
@@ -299,13 +322,18 @@ def simulate_reference(
     *,
     num_nodes: int,
     link: float = 1.0,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return_hops: bool = False,
+):
     """Discrete-event FIFO queueing simulation (host-side numpy heap).
 
     Each node serves one request at a time in order of *arrival at that
     node* (true per-node FIFO — a naive global-arrival-order scan serializes
     multi-hop plans and inflates their latency).  Returns
-    (latency (B,), makespan scalar) as jnp arrays.
+    (latency (B,), makespan scalar) as jnp arrays; with ``return_hops``
+    additionally a (B, H) float64 numpy array of per-hop *completion*
+    times in the original plan's hop order (0 at dead hop slots) — the
+    exact interior timestamps the Chrome-trace exporter draws child
+    slices from.
     """
     import heapq
 
@@ -318,6 +346,7 @@ def simulate_reference(
 
     node_free = np.zeros((num_nodes,), np.float64)
     finish = np.zeros((B,), np.float64)
+    hop_done = np.zeros((B, H), np.float64)
     heap: list[tuple[float, int, int]] = []
     for qid in range(B):
         heapq.heappush(heap, (arr[qid] + link, qid, 0))
@@ -334,11 +363,13 @@ def simulate_reference(
         start = max(t, node_free[n])
         done = start + service[qid, hop]
         node_free[n] = done
+        hop_done[qid, hop] = done
         heapq.heappush(heap, (done + link, qid, hop + 1))
 
     latency = finish - arr
     makespan = float(finish.max()) if B else 0.0
-    return jnp.asarray(latency, jnp.float32), jnp.asarray(makespan, jnp.float32)
+    out = (jnp.asarray(latency, jnp.float32), jnp.asarray(makespan, jnp.float32))
+    return out + (hop_done,) if return_hops else out
 
 
 def simulate_closed_loop_reference(
@@ -348,11 +379,14 @@ def simulate_closed_loop_reference(
     num_nodes: int,
     link: float = 1.0,
     think: float = 0.0,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return_hops: bool = False,
+):
     """Closed-loop DES: client c issues ops c, c+K, c+2K, ... back-to-back
     (next op leaves when the previous reply lands) — the paper's testbed
     regime (§8: 4 client hosts replaying YCSB streams).  Throughput =
     B / makespan; latency distribution is per-op completion - issue.
+    ``return_hops`` additionally returns (B, H) per-hop completion times
+    (original hop order, 0 at dead slots) — see ``simulate_reference``.
     """
     import heapq
 
@@ -364,6 +398,7 @@ def simulate_closed_loop_reference(
     node_free = np.zeros((num_nodes,), np.float64)
     issue = np.zeros((B,), np.float64)
     finish = np.zeros((B,), np.float64)
+    hop_done = np.zeros((B, H), np.float64)
     heap: list[tuple[float, int, int]] = []
     for c in range(K_):
         issue[c] = 0.0
@@ -384,8 +419,10 @@ def simulate_closed_loop_reference(
         start = max(t, node_free[n])
         done = start + service[qid, hop]
         node_free[n] = done
+        hop_done[qid, hop] = done
         heapq.heappush(heap, (done + link, qid, hop + 1))
 
     latency = finish - issue
     makespan = float(finish.max()) if B else 0.0
-    return jnp.asarray(latency, jnp.float32), jnp.asarray(makespan, jnp.float32)
+    out = (jnp.asarray(latency, jnp.float32), jnp.asarray(makespan, jnp.float32))
+    return out + (hop_done,) if return_hops else out

@@ -101,13 +101,18 @@ def stack_plans(plans: list[HopPlan]) -> HopPlan:
     )
 
 
-def compact_plans(plan: HopPlan) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def compact_plans(
+    plan: HopPlan, return_order: bool = False
+) -> tuple[np.ndarray, ...]:
     """(S, B, H) plan -> (nodes, service, n_hops) with live hops first.
 
     The reference simulator skips NO_HOP slots at pop time with no cost,
     so squeezing them out (stable argsort on the dead mask — live hops
     keep their order) is semantics-preserving: exactly one link separates
-    consecutive live hops either way.
+    consecutive live hops either way.  ``return_order`` additionally
+    returns the compaction permutation (``nodes_c[..., j] ==
+    nodes[..., order[..., j]]``) so per-hop engine outputs can be
+    scattered back to the original hop positions.
     """
     nodes = np.asarray(plan.nodes)
     service = np.asarray(plan.service, np.float32)
@@ -120,6 +125,8 @@ def compact_plans(plan: HopPlan) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     service_c = np.take_along_axis(service, order, axis=-1)
     service_c = np.where(nodes_c == NO_HOP, np.float32(0.0), service_c)
     n_hops = (~dead).sum(-1).astype(np.int32)
+    if return_order:
+        return nodes_c, service_c, n_hops, order
     return nodes_c, service_c, n_hops
 
 
@@ -170,7 +177,7 @@ def _resolve_backend(backend: str | None) -> str:
 
 
 def _run_native(nodes_c, service_c, n_hops, arrivals, *, K, N, link, think,
-                closed):
+                closed, want_hops=False):
     import ctypes
 
     lib = _des_native.load()
@@ -183,6 +190,7 @@ def _run_native(nodes_c, service_c, n_hops, arrivals, *, K, N, link, think,
         arr = np.ascontiguousarray(np.broadcast_to(arrivals, (S, B)), np.float64)
     finish = np.zeros((S, B), np.float64)
     issue = np.zeros((S, B), np.float64)
+    hops = np.zeros((S, B, H), np.float64) if want_hops else None
     scratch_nf = np.zeros((N,), np.float64)
     scratch_hop = np.zeros((max(B, 1),), np.int32)
     scratch_heap = np.zeros((B + 1, 2), np.float64)
@@ -193,8 +201,9 @@ def _run_native(nodes_c, service_c, n_hops, arrivals, *, K, N, link, think,
         S, B, H, int(K), int(N),
         float(link), float(think), 1 if closed else 0,
         p(scratch_nf), p(scratch_hop), p(scratch_heap), p(finish), p(issue),
+        None if hops is None else p(hops),
     )
-    return finish, issue
+    return finish, issue, hops
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +219,7 @@ def _jax_open_one(nodes_c, service_c, n_hops, ev_time0, node_free0, link):
         return jnp.any(jnp.isfinite(st[0]))
 
     def body(st):
-        ev_time, ev_hop, node_free, finish = st
+        ev_time, ev_hop, node_free, finish, hops = st
         q = jnp.argmin(ev_time)  # unique (time, qid): first-min == min qid
         t = ev_time[q]
         alive = jnp.isfinite(t)
@@ -226,21 +235,24 @@ def _jax_open_one(nodes_c, service_c, n_hops, ev_time0, node_free0, link):
         done = start + s
         serve = alive & ~zero_hop
         node_free = node_free.at[sn].set(jnp.where(serve, done, nf))
+        hops = hops.at[q, hs].set(jnp.where(serve, done, hops[q, hs]))
         last = zero_hop | (h + 1 >= nh)
         fin_t = jnp.where(zero_hop, t, done + link)
         finish = finish.at[q].set(jnp.where(alive & last, fin_t, finish[q]))
         nxt = jnp.where(last, jnp.inf, done + link)
         ev_time = ev_time.at[q].set(jnp.where(alive, nxt, t))
         ev_hop = ev_hop.at[q].set(jnp.where(alive, h + 1, h))
-        return ev_time, ev_hop, node_free, finish
+        return ev_time, ev_hop, node_free, finish, hops
 
     state = (
         ev_time0,
         jnp.zeros((B,), jnp.int32),
         node_free0,
         jnp.zeros((B,), jnp.float64),
+        jnp.zeros((B, H), jnp.float64),
     )
-    return jax.lax.while_loop(cond, body, state)[3]
+    st = jax.lax.while_loop(cond, body, state)
+    return st[3], st[4]
 
 
 @jax.jit
@@ -254,7 +266,7 @@ def _jax_closed_one(nodes_c, service_c, n_hops, ev_time0, cur_op0, node_free0,
         return jnp.any(jnp.isfinite(st[0]))
 
     def body(st):
-        ev_time, ev_hop, cur_op, node_free, finish, issue = st
+        ev_time, ev_hop, cur_op, node_free, finish, issue, hops = st
         t = jnp.min(ev_time)
         alive = jnp.isfinite(t)
         cand = ev_time == t
@@ -272,6 +284,7 @@ def _jax_closed_one(nodes_c, service_c, n_hops, ev_time0, cur_op0, node_free0,
         done = start + s
         serve = alive & ~zero_hop
         node_free = node_free.at[sn].set(jnp.where(serve, done, nf))
+        hops = hops.at[q, hs].set(jnp.where(serve, done, hops[q, hs]))
         last = zero_hop | (h + 1 >= nh)
         fin_t = jnp.where(zero_hop, t, done + link)
         fin_now = alive & last
@@ -288,7 +301,7 @@ def _jax_closed_one(nodes_c, service_c, n_hops, ev_time0, cur_op0, node_free0,
             jnp.where(alive, jnp.where(last, 0, h + 1), h)
         )
         cur_op = cur_op.at[lane].set(jnp.where(alive, jnp.where(last, snq, q), q))
-        return ev_time, ev_hop, cur_op, node_free, finish, issue
+        return ev_time, ev_hop, cur_op, node_free, finish, issue, hops
 
     state = (
         ev_time0,
@@ -297,16 +310,18 @@ def _jax_closed_one(nodes_c, service_c, n_hops, ev_time0, cur_op0, node_free0,
         node_free0,
         jnp.zeros((B,), jnp.float64),
         jnp.zeros((B,), jnp.float64),
+        jnp.zeros((B, H), jnp.float64),
     )
     st = jax.lax.while_loop(cond, body, state)
-    return st[4], st[5]
+    return st[4], st[5], st[6]
 
 
 def _run_jax(nodes_c, service_c, n_hops, arrivals, *, K, N, link, think,
-             closed):
+             closed, want_hops=False):
     S, B, H = nodes_c.shape
     finish = np.zeros((S, B), np.float64)
     issue = np.zeros((S, B), np.float64)
+    hops = np.zeros((S, B, H), np.float64) if want_hops else None
     with enable_x64():
         link64 = jnp.float64(link)
         think64 = jnp.float64(think)
@@ -322,7 +337,7 @@ def _run_jax(nodes_c, service_c, n_hops, arrivals, *, K, N, link, think,
                     np.where(lanes < KK, float(link), np.inf), jnp.float64
                 )
                 cur0 = jnp.asarray(np.minimum(lanes, B - 1), jnp.int32)
-                f, i = _jax_closed_one(
+                f, i, hd = _jax_closed_one(
                     nodes_d, service_d, nh_d, ev0, cur0, node_free0,
                     jnp.int32(K), link64, think64,
                 )
@@ -331,12 +346,14 @@ def _run_jax(nodes_c, service_c, n_hops, arrivals, *, K, N, link, think,
             else:
                 arr64 = np.asarray(np.broadcast_to(arrivals, (S, B))[s], np.float64)
                 ev0 = jnp.asarray(arr64 + float(link), jnp.float64)
-                f = _jax_open_one(
+                f, hd = _jax_open_one(
                     nodes_d, service_d, nh_d, ev0, node_free0, link64
                 )
                 finish[s] = np.asarray(f)
                 issue[s] = arr64
-    return finish, issue
+            if hops is not None:
+                hops[s] = np.asarray(hd)
+    return finish, issue, hops
 
 
 # ---------------------------------------------------------------------------
@@ -355,6 +372,17 @@ def _finalize(finish, issue, stacked):
     return jnp.asarray(latency), jnp.asarray(makespan)
 
 
+def _uncompact_hops(hops_c: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Scatter compacted per-hop times back to original plan positions.
+
+    ``hops_c[..., j]`` belongs to original hop ``order[..., j]``; dead
+    slots carry 0 on both sides, so the scatter is exact.
+    """
+    out = np.zeros_like(hops_c)
+    np.put_along_axis(out, order, hops_c, axis=-1)
+    return out
+
+
 def simulate(
     plan: HopPlan,
     arrivals,
@@ -362,19 +390,28 @@ def simulate(
     num_nodes: int,
     link: float = 1.0,
     backend: str | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return_hops: bool = False,
+):
     """Open-loop DES over a (B, H) plan — or an (S, B, H) scenario stack.
 
     Bit-identical to :func:`repro.core.coordination.simulate_reference`.
     For stacked plans ``arrivals`` may be (B,) (shared) or (S, B), and the
     result is (latency (S, B), makespan (S,)).
+
+    ``return_hops=True`` additionally returns per-hop *completion* times
+    as numpy float64 in the original plan's hop order (0 at dead slots) —
+    exact engine timestamps, kept off-device like ``return_issue``.
     """
     stacked = np.asarray(plan.nodes).ndim == 3
-    nodes_c, service_c, n_hops = compact_plans(plan)
-    S, B, _ = nodes_c.shape
+    nodes_c, service_c, n_hops, order = compact_plans(plan, return_order=True)
+    S, B, H = nodes_c.shape
     if B == 0:
         z = np.zeros((S, 0), np.float64)
-        return _finalize(z, z, stacked)
+        out = _finalize(z, z, stacked)
+        if return_hops:
+            zh = np.zeros((S, 0, H), np.float64)
+            return (*out, zh if stacked else zh[0])
+        return out
     _validate(nodes_c, n_hops, num_nodes)
     # float64 like the reference (which promotes arrivals before the loop):
     # f32 inputs convert exactly, f64 inputs keep their full precision
@@ -382,11 +419,16 @@ def simulate(
     if arr.ndim == 1:
         arr = np.broadcast_to(arr[None], (S, B))
     run = _run_native if _resolve_backend(backend) == "native" else _run_jax
-    finish, issue = run(
+    finish, issue, hops = run(
         nodes_c, service_c, n_hops, arr,
         K=0, N=num_nodes, link=link, think=0.0, closed=False,
+        want_hops=return_hops,
     )
-    return _finalize(finish, issue, stacked)
+    out = _finalize(finish, issue, stacked)
+    if return_hops:
+        hops = _uncompact_hops(hops, order)
+        return (*out, hops if stacked else hops[0])
+    return out
 
 
 def simulate_closed_loop(
@@ -398,6 +440,7 @@ def simulate_closed_loop(
     think: float = 0.0,
     backend: str | None = None,
     return_issue: bool = False,
+    return_hops: bool = False,
 ):
     """Closed-loop DES (K clients replaying the stream back-to-back).
 
@@ -410,21 +453,36 @@ def simulate_closed_loop(
     kept off-device because a jnp round-trip would downcast to f32).  The
     telemetry plane anchors span trees on it; latency/makespan are
     unchanged either way.
+
+    With ``return_hops=True`` the last value returned is the per-hop
+    completion-time array (numpy float64, original plan hop order, 0 at
+    dead slots) — the exact interior timestamps the Chrome-trace exporter
+    draws child slices from (the engine always computed them; this stops
+    discarding them).
     """
     stacked = np.asarray(plan.nodes).ndim == 3
-    nodes_c, service_c, n_hops = compact_plans(plan)
-    S, B, _ = nodes_c.shape
+    nodes_c, service_c, n_hops, order = compact_plans(plan, return_order=True)
+    S, B, H = nodes_c.shape
     if B == 0 or n_clients <= 0:
         z = np.zeros((S, B), np.float64)
         out = _finalize(z, z, stacked)
-        return (*out, z if stacked else z[0]) if return_issue else out
+        if return_issue:
+            out = (*out, z if stacked else z[0])
+        if return_hops:
+            zh = np.zeros((S, B, H), np.float64)
+            out = (*out, zh if stacked else zh[0])
+        return out
     _validate(nodes_c, n_hops, num_nodes)
     run = _run_native if _resolve_backend(backend) == "native" else _run_jax
-    finish, issue = run(
+    finish, issue, hops = run(
         nodes_c, service_c, n_hops, None,
         K=n_clients, N=num_nodes, link=link, think=think, closed=True,
+        want_hops=return_hops,
     )
     out = _finalize(finish, issue, stacked)
     if return_issue:
-        return (*out, issue if stacked else issue[0])
+        out = (*out, issue if stacked else issue[0])
+    if return_hops:
+        hops = _uncompact_hops(hops, order)
+        out = (*out, hops if stacked else hops[0])
     return out

@@ -69,7 +69,7 @@ static void sim_one(const int32_t *nodes, const float *service,
                     int64_t B, int64_t H, int64_t K, int64_t N,
                     double link, double think, int32_t mode_closed,
                     double *node_free, int32_t *cur_hop, ev_t *heap,
-                    double *finish, double *issue) {
+                    double *finish, double *issue, double *hop_done) {
     int64_t hn = 0;
     (void)N;
     if (mode_closed) {
@@ -101,6 +101,8 @@ static void sim_one(const int32_t *nodes, const float *service,
             double start = e.t > nf ? e.t : nf;
             double done = start + s;
             node_free[n] = done;
+            if (hop_done)
+                hop_done[q * H + h] = done;
             if (h + 1 < nh) {
                 cur_hop[q] = h + 1;
                 ev_t nxt = {done + link, q};
@@ -135,18 +137,26 @@ static void sim_one(const int32_t *nodes, const float *service,
  * scratch_hop       (B,)        int32
  * scratch_heap      (B+1, 2)    float64 (reinterpreted as ev_t)
  * finish, issue     (S, B)      float64 outputs (caller-zeroed)
+ * hop_done          (S, B, H)   float64 per-hop completion times in the
+ *                               compacted hop order (caller-zeroed), or
+ *                               NULL to skip recording — the event loop
+ *                               computes `done` either way, this merely
+ *                               stops discarding it (exact interior
+ *                               timestamps for the trace exporter)
  */
 void des_simulate_batch(const int32_t *nodes, const float *service,
                         const int32_t *n_hops, const double *arrivals,
                         int64_t S, int64_t B, int64_t H, int64_t K, int64_t N,
                         double link, double think, int32_t mode_closed,
                         double *scratch_node_free, int32_t *scratch_hop,
-                        double *scratch_heap, double *finish, double *issue) {
+                        double *scratch_heap, double *finish, double *issue,
+                        double *hop_done) {
     for (int64_t s = 0; s < S; s++) {
         memset(scratch_node_free, 0, (size_t)N * sizeof(double));
         sim_one(nodes + s * B * H, service + s * B * H, n_hops + s * B,
                 arrivals ? arrivals + s * B : 0, B, H, K, N, link, think,
                 mode_closed, scratch_node_free, scratch_hop,
-                (ev_t *)scratch_heap, finish + s * B, issue + s * B);
+                (ev_t *)scratch_heap, finish + s * B, issue + s * B,
+                hop_done ? hop_done + s * B * H : 0);
     }
 }

@@ -503,20 +503,23 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
     ``pre(repl, ovl) -> (dirty, queue_pen)`` derives the routing inputs
     from the carried state exactly as the per-epoch driver does between
     steps; ``observe(q, ridx, target, chain, chain_len, sketch, r_plan,
-    repl, picked, bounced, ovl, r_ovl, eid) -> (sketch, plan, node_ops,
-    repl, ovl, ostats, spans)`` is the per-epoch observe body verbatim.
-    ``fold_ovl`` mirrors the driver's overload-rng fold (a fold_in, not a
-    wider split, so the disabled path's rng streams are untouched).
+    repl, picked, bounced, ovl, r_ovl, eid, coord) -> (sketch, plan,
+    node_ops, repl, ovl, coord, ostats, cstats, spans)`` is the per-epoch
+    observe body verbatim (``coord`` the replicated coordination-tier
+    carry — an empty pytree / None when the tier is off).  ``fold_ovl``
+    mirrors the driver's overload-rng fold (a fold_in, not a wider split,
+    so the disabled path's rng streams are untouched).
 
     Signature of the returned jitted fn (donated like the oracle period
-    scan — store slabs, load/sketch/repl/overload registers; the
-    directory is NOT donated, see ``EpochDriver._build_oracle_period``):
+    scan — store slabs, load/sketch/repl/overload registers and the
+    coordination tier's switch tables; the directory is NOT donated, see
+    ``EpochDriver._build_oracle_period``):
 
-      (store, directory, load_reg, sketch, repl, ovl,
+      (store, directory, load_reg, sketch, repl, ovl, coord,
        qs, rngs, live, eids)
-        -> (store, directory, load_reg, sketch, repl, ovl,
+        -> (store, directory, load_reg, sketch, repl, ovl, coord,
             plans, node_ops, bucket_overflow, overflow_totals, bounced,
-            ostats, spans)
+            ostats, cstats, spans)
 
     with ``qs`` the period's (P, B, ...) query pytree REPLICATED (each
     device slices its share for the data plane and keeps the whole batch
@@ -534,12 +537,12 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
             f"(strategy={cfg.strategy!r}); use make_dist_apply per epoch"
         )
 
-    def period_device(store, directory, load_reg, sketch, repl, ovl,
+    def period_device(store, directory, load_reg, sketch, repl, ovl, coord,
                       qs, rngs, live, eids):
         me = jax.lax.axis_index(axis)
 
         def scan_body(carry, xs):
-            store, directory, load_reg, sketch, repl, ovl = carry
+            store, directory, load_reg, sketch, repl, ovl, coord = carry
             q, rng, lv, eid = xs
             B = q.opcode.shape[0]
             Bl = B // n_shards
@@ -566,9 +569,10 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
                 # (exactly the per-epoch step's substitution)
                 picked_g = target
                 bounced_g = jnp.zeros((B,), jnp.bool_)
-            (sketch2, plan, node_ops, repl2, ovl2, ostats, spans) = observe(
+            (sketch2, plan, node_ops, repl2, ovl2, coord2, ostats, cstats,
+             spans) = observe(
                 q, ridx, target, chain, clen, sketch, r_plan, repl,
-                picked_g, bounced_g, ovl, r_ovl, eid,
+                picked_g, bounced_g, ovl, r_ovl, eid, coord,
             )
             if not spread:
                 # tail-read path: registers tracked for parity (same units)
@@ -578,15 +582,17 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
             carry2 = (store2, jax.tree.map(keep, directory2, directory),
                       keep(load_reg2, load_reg), keep(sketch2, sketch),
                       jax.tree.map(keep, repl2, repl),
-                      jax.tree.map(keep, ovl2, ovl))
+                      jax.tree.map(keep, ovl2, ovl),
+                      jax.tree.map(keep, coord2, coord))
             # global overflow total (the store is sharded, one node per
             # device — psum of the local sum is jnp.sum(store.overflow))
             ovf = jax.lax.psum(jnp.sum(store2.overflow), axis)
             return carry2, (plan, node_ops, bucket_ovf, ovf, bounced_g,
-                            ostats, spans)
+                            ostats, cstats, spans)
 
         carry, outs = jax.lax.scan(
-            scan_body, (store, directory, load_reg, sketch, repl, ovl),
+            scan_body,
+            (store, directory, load_reg, sketch, repl, ovl, coord),
             (qs, rngs, live, eids),
         )
         return (*carry, *outs)
@@ -596,11 +602,12 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
     # registers scan like the single-host donated buffers, the staged
     # queries stay whole on every device (the observe stage needs the
     # full batch; the data plane slices its share by axis index)
-    in_specs = (store_spec, P(), P(), P(), P(), P(), P(), P(), P(), P())
-    out_specs = (store_spec, P(), P(), P(), P(), P(),
-                 P(), P(), P(), P(), P(), P(), P())
+    in_specs = (store_spec, P(), P(), P(), P(), P(), P(), P(), P(), P(),
+                P())
+    out_specs = (store_spec, P(), P(), P(), P(), P(), P(),
+                 P(), P(), P(), P(), P(), P(), P(), P())
     fn = shard_map_compat(period_device, mesh, in_specs, out_specs)
-    return jax.jit(fn, donate_argnums=(0, 2, 3, 4, 5))
+    return jax.jit(fn, donate_argnums=(0, 2, 3, 4, 5, 6))
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):

@@ -68,6 +68,22 @@ def route_pod(table: PodTable, directory: Directory, q: QueryBatch) -> jnp.ndarr
     return jnp.where(is_write, table.head_pod[ridx], table.tail_pod[ridx])
 
 
+def switch_topology(num_pods: int, n_switches: int | None = None) -> list[int]:
+    """Propagation order of the coordination-tier switch chain.
+
+    The replicated directory service (``repro.coordination_tier``) places
+    one ToR switch per pod plus one spine, chained spine-first: a control
+    write lands at the spine (chain position 0 — the lease holder) and
+    propagates down to each ToR with per-position lag, exactly the
+    NetChain pattern applied to the coordination state itself.  Returns
+    the chain as a list of switch ids in propagation order; ``n_switches``
+    overrides the derived ``num_pods + 1`` width (benches pin it so the
+    staleness window is independent of pod count).
+    """
+    w = n_switches if n_switches is not None else max(2, num_pods + 1)
+    return list(range(w))
+
+
 def pod_local_view(directory: Directory, pod: int) -> jnp.ndarray:
     """(S,) mask of live records whose head or tail lives in this pod — the
     ToR working set (used by tests to check the hierarchy is consistent).

@@ -257,6 +257,7 @@ def route_load_aware_dirty(
     rng: jax.Array,
     *,
     queue_pen: jnp.ndarray | None = None,
+    key_filter: jnp.ndarray | None = None,
 ) -> tuple[RoutingDecision, D.Directory, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """CRAQ apportioned reads: p2c replica pick + dirty-bit tail bounce.
 
@@ -275,6 +276,16 @@ def route_load_aware_dirty(
     (B,) bool tail-bounce mask (always False for writes).  The load
     registers charge the read to its serving node — the replica that only
     version-checks does negligible store work.
+
+    ``key_filter`` ((S, F) bool, optional) is the hashed per-key dirty
+    filter next to the per-slot record (``repro.replication.state``): a
+    slot's dirty window normally bounces *every* read of the range for a
+    whole ack round, but a replica holding the filter bounces only reads
+    whose key hashes onto a bit some uncommitted write of that slot set —
+    one write no longer dirties the whole range.  False positives (hash
+    collisions) bounce conservatively; false negatives cannot happen
+    because every dirty write sets its bit.  ``None`` or zero-width
+    reproduces the plain slot-granular bounce bit for bit.
     """
     ridx, chain, clen, is_write = _match_and_fetch(directory, q)
     head = chain[:, 0]
@@ -287,6 +298,9 @@ def route_load_aware_dirty(
 
     tail = jnp.take_along_axis(chain, jnp.maximum(clen - 1, 0)[:, None], axis=1)[:, 0]
     d_pick = dirty[ridx, ppos]
+    if key_filter is not None and key_filter.shape[1] > 0:
+        hb = (K.hash_key(q.key) % jnp.uint32(key_filter.shape[1])).astype(jnp.int32)
+        d_pick = d_pick & key_filter[ridx, hb]
     bounced = (
         (~is_write) & d_pick & (ppos != clen - 1) & (picked != D.NO_NODE)
     )

@@ -278,6 +278,57 @@ def _kernel_spread_dirty(mvals_ref, opcodes_ref, u1_ref, u2_ref, lo_ref, hi_ref,
     bounced_ref[...] = bounced.astype(jnp.int32)
 
 
+def _kernel_stale(mvals_ref, opcodes_ref, sw_ref, lo_ref, hi_ref, chains_ref,
+                  clen_ref, version_ref, committed_ref,
+                  sridx_ref, server_ref, divergent_ref,
+                  *, num_slots: int, r_max: int, n_switches: int):
+    """Replicated-tier match-action stage: each packet matches against its
+    ingress switch's private table copy and carries the divergence bit.
+
+    The per-switch tables ride whole in VMEM (``W`` is the fabric's switch
+    count — a handful); rather than gathering a (Bb, 128, Spad) per-packet
+    row (dynamic-vector gathers are slow on TPU), the tile runs the
+    interval match against *every* switch's table and broadcast-selects by
+    the packet's switch id — W small static min-reduces, all lane-parallel
+    VPU work, bit-identical to the gathered-row jnp oracle because each
+    packet's result only ever reads its own switch's rows.
+    """
+    mvals = mvals_ref[...]            # (Bb, 128) uint32
+    opcodes = opcodes_ref[...]        # (Bb, 128) int32
+    sw = sw_ref[...]                  # (Bb, 128) int32 ingress switch ids
+    lo = lo_ref[...]                  # (W, Spad) uint32, live/dead-masked
+    hi = hi_ref[...]                  # (W, Spad) uint32
+    chains = chains_ref[...]          # (W * r_max, Spad) int32
+    clen = clen_ref[...]              # (W, Spad) int32
+    version = version_ref[...]        # (W, Spad) int32 (u32 bit-cast)
+    committed = committed_ref[...]    # (1, Spad) int32 (u32 bit-cast)
+
+    is_write = (opcodes == 1) | (opcodes == 2)
+    sridx = None
+    server = None
+    divergent = None
+    for w in range(n_switches):
+        ridx_w = _slot_match_tile(mvals, lo[w:w + 1], hi[w:w + 1], num_slots)
+        cols_w = _gather_rows_tile(ridx_w, chains[w * r_max:(w + 1) * r_max])
+        (clen_w,) = _gather_rows_tile(ridx_w, clen[w:w + 1])
+        tail_w = _select_pos_tile(cols_w, clen_w - 1)
+        server_w = jnp.where(is_write, cols_w[0], tail_w)
+        (ver_w,) = _gather_rows_tile(ridx_w, version[w:w + 1])
+        (com_w,) = _gather_rows_tile(ridx_w, committed)
+        div_w = ver_w != com_w
+        if w == 0:
+            sridx, server, divergent = ridx_w, server_w, div_w
+        else:
+            here = sw == w
+            sridx = jnp.where(here, ridx_w, sridx)
+            server = jnp.where(here, server_w, server)
+            divergent = jnp.where(here, div_w, divergent)
+
+    sridx_ref[...] = sridx
+    server_ref[...] = server
+    divergent_ref[...] = divergent.astype(jnp.int32)
+
+
 def _kernel_apply(mvals_ref, opcodes_ref, u1_ref, u2_ref, qkeys_ref,
                   lo_ref, hi_ref, chains_ref, clen_ref, loads_ref, dirty_ref,
                   slabs_ref,
@@ -350,6 +401,81 @@ def _kernel_lookup(qkeys_ref, target_ref, slabs_ref, slot_ref, found_ref,
     slot, found = _slab_lookup_tile(qkeys, target, slabs, slab_len, gather_rows)
     slot_ref[...] = slot
     found_ref[...] = found.astype(jnp.int32)
+
+
+def range_match_stale_pallas(
+    mvals: jnp.ndarray,            # (B,) uint32 matching values
+    opcodes: jnp.ndarray,          # (B,) int32
+    sw: jnp.ndarray,               # (B,) int32 ingress switch ids
+    lo_w: jnp.ndarray,             # (W, Spad) uint32 dead-masked span starts
+    hi_w: jnp.ndarray,             # (W, Spad) uint32 dead-masked span ends
+    chains_w: jnp.ndarray,         # (W * r_max, Spad) int32
+    clen_w: jnp.ndarray,           # (W, Spad) int32
+    version_w: jnp.ndarray,        # (W, Spad) int32 (u32 bit-cast)
+    committed: jnp.ndarray,        # (Spad,) int32 (u32 bit-cast)
+    *,
+    num_slots: int,
+    r_max: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Launch the replicated-directory (stale-table) match-action kernel.
+
+    Contract of :func:`repro.kernels.range_match.ref.range_match_stale_ref`
+    (``chains_w`` arrives switch-major flattened to (W*r_max, Spad));
+    returns ``(sridx, server, divergent)`` with divergent an int32 0/1
+    mask.
+    """
+    B = mvals.shape[0]
+    rows = B // LANES
+    n_switches, spad = lo_w.shape
+
+    grid = (rows // block_rows,)
+    kernel = functools.partial(
+        _kernel_stale, num_slots=num_slots, r_max=r_max,
+        n_switches=n_switches,
+    )
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+    )
+    whole_w = lambda i: (0, 0)
+    tile = lambda i: (i, 0)
+    sridx, server, divergent = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((n_switches, spad), whole_w),
+            pl.BlockSpec((n_switches, spad), whole_w),
+            pl.BlockSpec((n_switches * r_max, spad), whole_w),
+            pl.BlockSpec((n_switches, spad), whole_w),
+            pl.BlockSpec((n_switches, spad), whole_w),
+            pl.BlockSpec((1, spad), whole_w),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+            pl.BlockSpec((block_rows, LANES), tile),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(
+        mvals.reshape(rows, LANES),
+        opcodes.reshape(rows, LANES),
+        sw.reshape(rows, LANES),
+        lo_w,
+        hi_w,
+        chains_w,
+        clen_w,
+        version_w,
+        committed.reshape(1, spad),
+    )
+    return sridx.reshape(B), server.reshape(B), divergent.reshape(B)
 
 
 def range_match_apply_pallas(

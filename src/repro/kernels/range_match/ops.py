@@ -37,6 +37,7 @@ from repro.kernels.range_match.kernel import (
     range_match_spread_pallas,
     range_match_spread_dirty_pallas,
     range_match_apply_pallas,
+    range_match_stale_pallas,
     slab_lookup_pallas,
     LANES,
     DEFAULT_BLOCK_ROWS,
@@ -46,6 +47,7 @@ from repro.kernels.range_match.ref import (
     range_match_spread_ref,
     range_match_spread_dirty_ref,
     range_match_apply_ref,
+    range_match_stale_ref,
     slab_lookup_ref,
 )
 
@@ -391,6 +393,131 @@ def range_match_spread_dirty(
         lo_p, hi_p, chains_p, clen_p, dirty_p, keys, opcodes, load_reg, rng,
         num_slots=directory.num_slots,
         hash_partitioned=bool(directory.hash_partitioned),
+        use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
+    )
+
+
+def pack_coord_tables(coord):
+    """CoordState -> kernel layout for the replicated-tier stale lookup.
+
+    ``coord`` is a ``repro.coordination_tier.state.CoordState`` (duck-typed
+    to keep the kernel package free of a coordination_tier import): the
+    per-switch live masks are baked into the span sentinels (a dead or
+    padded slot can never win), chains go switch-major transposed
+    ``(W * r_max, Spad)``, and the u32 version registers are bit-cast to
+    int32 (only equality is ever tested).  Padded tail slots carry
+    ``version == committed == 0`` so they are never divergent.
+
+    Returns ``(lo_w, hi_w, chains_w, clen_w, version_w, committed)``.
+    """
+    w, s = coord.slot_lo.shape
+    r_max = coord.chains.shape[2]
+    spad = max(LANES, ((s + LANES - 1) // LANES) * LANES)
+    lo = jnp.where(coord.live, coord.slot_lo, jnp.uint32(K.MAX_KEY))
+    hi = jnp.where(coord.live, coord.slot_hi, jnp.uint32(0))
+    lo_p = jnp.concatenate(
+        [lo, jnp.full((w, spad - s), K.MAX_KEY, jnp.uint32)], axis=1
+    )
+    hi_p = jnp.concatenate([hi, jnp.zeros((w, spad - s), jnp.uint32)], axis=1)
+    ch = jnp.swapaxes(coord.chains, 1, 2)                  # (W, r_max, S)
+    ch_p = jnp.concatenate(
+        [ch, jnp.zeros((w, r_max, spad - s), jnp.int32)], axis=2
+    ).reshape(w * r_max, spad)
+    clen_p = jnp.concatenate(
+        [coord.chain_len, jnp.ones((w, spad - s), jnp.int32)], axis=1
+    )
+    ver = jax.lax.bitcast_convert_type(coord.version, jnp.int32)
+    ver_p = jnp.concatenate([ver, jnp.zeros((w, spad - s), jnp.int32)], axis=1)
+    com = jax.lax.bitcast_convert_type(coord.committed, jnp.int32)
+    com_p = jnp.concatenate([com, jnp.zeros((spad - s,), jnp.int32)])
+    return lo_p, hi_p, ch_p, clen_p, ver_p, com_p
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "num_slots", "r_max", "n_switches", "hash_partitioned",
+        "use_pallas", "interpret", "block_rows",
+    ),
+)
+def _range_match_stale_packed(
+    lo_w,
+    hi_w,
+    chains_w,
+    clen_w,
+    version_w,
+    committed,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    *,
+    num_slots: int,
+    r_max: int,
+    n_switches: int,
+    hash_partitioned: bool,
+    use_pallas: bool,
+    interpret: bool,
+    block_rows: int,
+):
+    B = keys.shape[0]
+    mvals = K.matching_value(keys, hash_partitioned=hash_partitioned)
+    sw = (K.hash_key(keys.astype(jnp.uint32)) % jnp.uint32(n_switches)).astype(
+        jnp.int32
+    )
+    tile = LANES * block_rows
+    Bp = ((B + tile - 1) // tile) * tile
+    if Bp != B:
+        z = jnp.zeros((Bp - B,), jnp.int32)
+        mvals = jnp.concatenate([mvals, jnp.zeros((Bp - B,), mvals.dtype)])
+        opcodes = jnp.concatenate([opcodes, z])
+        sw = jnp.concatenate([sw, z])
+
+    if use_pallas:
+        sridx, server, divergent = range_match_stale_pallas(
+            mvals, opcodes.astype(jnp.int32), sw,
+            lo_w, hi_w, chains_w, clen_w, version_w, committed,
+            num_slots=num_slots, r_max=r_max,
+            block_rows=block_rows, interpret=interpret,
+        )
+        divergent = divergent != 0
+    else:
+        sridx, server, divergent = range_match_stale_ref(
+            mvals, opcodes.astype(jnp.int32), sw,
+            lo_w, hi_w,
+            chains_w.reshape(n_switches, r_max, -1),
+            clen_w, version_w, committed,
+            num_slots=num_slots,
+        )
+    return sridx[:B], server[:B], divergent[:B]
+
+
+def range_match_stale(
+    coord,
+    keys: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    *,
+    hash_partitioned: bool = False,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Replicated-tier stale routing hot path.
+
+    Each query is matched against its ingress switch's private table copy
+    (``coord`` a ``coordination_tier.state.CoordState``); the ingress hash,
+    lookup formula, serving-node rule and divergence bit are bit-identical
+    to ``coordination_tier.state.observe_epoch``'s in-loop jnp path —
+    asserted in ``tests/test_coordination_tier.py``.  Returns ``(sridx,
+    server, divergent)``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lo_w, hi_w, chains_w, clen_w, version_w, committed = pack_coord_tables(coord)
+    return _range_match_stale_packed(
+        lo_w, hi_w, chains_w, clen_w, version_w, committed, keys, opcodes,
+        num_slots=coord.slot_lo.shape[1],
+        r_max=coord.chains.shape[2],
+        n_switches=coord.slot_lo.shape[0],
+        hash_partitioned=hash_partitioned,
         use_pallas=use_pallas, interpret=interpret, block_rows=block_rows,
     )
 

@@ -130,6 +130,55 @@ def range_match_spread_dirty_ref(
     return ridx, target, chain, picked, bounced
 
 
+def range_match_stale_ref(
+    mvals: jnp.ndarray,
+    opcodes: jnp.ndarray,
+    sw: jnp.ndarray,
+    lo_w: jnp.ndarray,
+    hi_w: jnp.ndarray,
+    chains_w: jnp.ndarray,
+    clen_w: jnp.ndarray,
+    version_w: jnp.ndarray,
+    committed: jnp.ndarray,
+    *,
+    num_slots: int,
+):
+    """jnp oracle for kernel.range_match_stale_pallas (replicated tier).
+
+    Each query matches against its *ingress switch's* private table copy
+    (``sw`` (B,) int32 switch ids): ``lo_w / hi_w`` (W, Spad) uint32
+    dead-masked spans, ``chains_w`` (W, r_max, Spad) int32, ``clen_w``
+    (W, Spad) int32, ``version_w`` (W, Spad) int32 per-switch slot
+    versions and ``committed`` (Spad,) int32 the quorum-committed
+    versions (uint32 registers bit-cast; only equality is tested).
+
+    Mirrors ``coordination_tier.state.stale_lookup`` + ``_chain_server``:
+    the gathered-row interval match, then the deterministic serving node
+    under the stale table (chain head for writes, tail for reads), plus
+    the divergence bit ``version_w[sw, sridx] != committed[sridx]``.
+    Returns ``(sridx, server, divergent)``.
+    """
+    lo_b = lo_w[sw]                                       # (B, Spad)
+    hi_b = hi_w[sw]
+    v = mvals.astype(jnp.uint32)[:, None]
+    hit = (v >= lo_b) & (v <= hi_b)
+    spad = lo_w.shape[1]
+    iota = jnp.arange(spad, dtype=jnp.int32)
+    sridx = jnp.min(jnp.where(hit, iota[None, :], jnp.int32(spad)), axis=-1)
+    sridx = jnp.minimum(sridx, num_slots - 1)
+
+    chain_b = chains_w[sw, :, sridx]                      # (B, r_max)
+    clen_b = clen_w[sw, sridx]                            # (B,)
+    head = chain_b[:, 0]
+    tail = jnp.take_along_axis(
+        chain_b, jnp.maximum(clen_b - 1, 0)[:, None], axis=1
+    )[:, 0]
+    is_write = (opcodes == 1) | (opcodes == 2)
+    server = jnp.where(is_write, head, tail)
+    divergent = version_w[sw, sridx] != committed[sridx]
+    return sridx, server, divergent
+
+
 def slab_lookup_ref(
     qkeys: jnp.ndarray,
     target: jnp.ndarray,

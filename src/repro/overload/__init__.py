@@ -9,6 +9,7 @@ the model and the conservation invariant.
 """
 
 from repro.overload.state import (
+    ORBIT_EMPTY,
     OUTCOME_ADMITTED,
     OUTCOME_DEFERRED,
     OUTCOME_INVALID,
@@ -17,14 +18,15 @@ from repro.overload.state import (
     OverloadConfig,
     OverloadState,
     conservation_gap,
+    link_orbit,
     make_state,
     step,
     summary,
 )
 
 __all__ = [
-    "STAT_FIELDS", "OverloadConfig", "OverloadState",
+    "ORBIT_EMPTY", "STAT_FIELDS", "OverloadConfig", "OverloadState",
     "OUTCOME_ADMITTED", "OUTCOME_DEFERRED", "OUTCOME_SHED",
     "OUTCOME_INVALID",
-    "conservation_gap", "make_state", "step", "summary",
+    "conservation_gap", "link_orbit", "make_state", "step", "summary",
 ]

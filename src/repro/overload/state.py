@@ -58,6 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import keys as K
+
 
 @dataclasses.dataclass(frozen=True)
 class OverloadConfig:
@@ -75,12 +77,17 @@ class OverloadConfig:
     queue_weight: int = 0
 
 
+# empty sentinel of the hashed retry-orbit register: INT32_MAX so the
+# stamp is a scatter-min (first shed epoch wins, batch-order independent)
+ORBIT_EMPTY = 2**31 - 1
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=(
         "queue", "retry", "timer", "admit_prob", "retry_budget",
         "cum_injected", "cum_admitted", "cum_deferred", "cum_shed",
-        "cum_requeued", "cum_lost",
+        "cum_requeued", "cum_lost", "first_seen",
     ),
     meta_fields=(),
 )
@@ -94,6 +101,9 @@ class OverloadState:
     admit_prob:   (N,)   float32 admission probability (control-plane set)
     retry_budget: (N,)   int32 released retries admitted per epoch (ditto)
     cum_*:        ()     int32 lifetime outcome counters
+    first_seen:   (F,)   int32 hashed retry-orbit birth epochs
+                  (:func:`link_orbit`; (1,) placeholder when the trace
+                  plane's ``link_retries`` is off)
     """
 
     queue: jnp.ndarray
@@ -107,6 +117,7 @@ class OverloadState:
     cum_shed: jnp.ndarray
     cum_requeued: jnp.ndarray
     cum_lost: jnp.ndarray
+    first_seen: jnp.ndarray
 
     @property
     def num_nodes(self) -> int:
@@ -118,11 +129,15 @@ class OverloadState:
         return jnp.sum(self.retry)
 
 
-def make_state(num_nodes: int, cfg: OverloadConfig) -> OverloadState:
+def make_state(num_nodes: int, cfg: OverloadConfig,
+               link_bits: int = 0) -> OverloadState:
     """Fresh overload plane: empty queues, open admission, an effectively
     unlimited retry budget (the *uncontrolled* dynamics — policies that
-    close the loop lower both)."""
+    close the loop lower both).  ``link_bits`` sizes the hashed
+    retry-orbit identity register at ``2**link_bits`` slots (0 keeps the
+    (1,) placeholder and :func:`link_orbit` is a no-op)."""
     L = cfg.max_level
+    F = (1 << link_bits) if link_bits > 0 else 1
     # distinct device buffers per leaf: the whole state is donated through
     # the fused period scan, and XLA rejects donating one buffer twice
     z = lambda: jnp.zeros((), jnp.int32)
@@ -134,6 +149,7 @@ def make_state(num_nodes: int, cfg: OverloadConfig) -> OverloadState:
         retry_budget=jnp.full((num_nodes,), jnp.int32(2**30)),
         cum_injected=z(), cum_admitted=z(), cum_deferred=z(),
         cum_shed=z(), cum_requeued=z(), cum_lost=z(),
+        first_seen=jnp.full((F,), ORBIT_EMPTY, jnp.int32),
     )
 
 
@@ -299,8 +315,59 @@ def step(
         cum_shed=state.cum_shed + shed,
         cum_requeued=state.cum_requeued + requeued,
         cum_lost=state.cum_lost + lost,
+        first_seen=state.first_seen,
     )
     return state2, rejected, service_scale, outcome, stats
+
+
+def link_orbit(
+    state: OverloadState,
+    key: jnp.ndarray,
+    rejected: jnp.ndarray,
+    admitted: jnp.ndarray,
+    epoch,
+) -> tuple[OverloadState, jnp.ndarray]:
+    """Cross-epoch retry linking: the orbit-identity register (pure).
+
+    The retry orbit itself is count-based — a shed query dissolves into a
+    per-node backoff bucket and its re-arrival is a released *count*, so
+    no per-query identity survives the device dynamics.  This register
+    carries the one fact the trace plane needs to stitch attempts back
+    together: a hashed ``key -> birth epoch`` table (the ``ReplState``
+    key-filter pattern).  A rejected query scatter-**min**s the current
+    epoch into its slot (first shed wins, batch-order independent); an
+    admitted query whose slot is live reads its orbit's birth epoch and
+    clears the slot.  Returns ``(state', first_epoch (B,) int32)`` where
+    ``first_epoch`` is the orbit birth epoch (-1 outside any orbit) —
+    recorded per span so the exporter can group attempts by
+    ``(key, first_epoch)`` and report true time-to-success.
+
+    Hash collisions merge orbits (two colliding keys share a birth
+    epoch), the standard sketch trade-off; the register never feeds the
+    metric stream, so enabling it cannot perturb a single routed bit.
+    """
+    F = state.first_seen.shape[0]
+    B = key.shape[0]
+    if F <= 1:
+        return state, jnp.full((B,), -1, jnp.int32)
+    h = (K.hash_key(key.astype(jnp.uint32))
+         & jnp.uint32(F - 1)).astype(jnp.int32)
+    born = state.first_seen[h]                             # pre-epoch view
+    in_orbit = born < ORBIT_EMPTY
+    eid = jnp.full((B,), epoch, jnp.int32)
+    first_epoch = jnp.where(
+        rejected, jnp.minimum(born, eid),
+        jnp.where(admitted & in_orbit, born, -1),
+    )
+    # clear completed orbits first, then stamp this epoch's rejects — a
+    # slot both completing and re-shedding in one batch stays in orbit
+    drop = jnp.int32(F)                  # out-of-range -> scatter drops it
+    success = admitted & in_orbit
+    fs = state.first_seen.at[jnp.where(success, h, drop)].set(
+        ORBIT_EMPTY, mode="drop"
+    )
+    fs = fs.at[jnp.where(rejected, h, drop)].min(eid, mode="drop")
+    return dataclasses.replace(state, first_seen=fs), first_epoch
 
 
 def conservation_gap(state: OverloadState) -> int:

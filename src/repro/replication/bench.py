@@ -156,6 +156,88 @@ def run_replication_matrix(quick: bool, *, policies=BENCH_POLICIES,
     return rows
 
 
+def run_filter_arm(quick: bool, *, verbose: bool = True) -> list[dict]:
+    """The per-key dirty-filter measurement arm (craq on YCSB-A).
+
+    Slot-granular CRAQ bounces every read of a range that saw *any*
+    write this dirty window; the hashed per-key filter
+    (``ClusterConfig.craq_filter_bits`` — ``ReplState.key_filter``)
+    bounces only reads that collide with a written key's hash bit.  One
+    row per filter width over the same ycsb_a stream quantifies the
+    bounce-rate delta the filter buys (identical routing, identical
+    writes — only who bounces changes).
+    """
+    from repro.cluster import (
+        ClusterConfig, EpochDriver, make_policy, summarize,
+    )
+    import dataclasses
+
+    rows = []
+    for fbits in (0, 64):
+        scen = _scenario("ycsb_a", quick)
+        cfg = dataclasses.replace(
+            _cluster_cfg(quick, "craq"), craq_filter_bits=fbits
+        )
+        drv = EpochDriver(scen, make_policy("frozen"), cfg)
+        t0 = time.perf_counter()
+        epochs = drv.run()
+        wall = time.perf_counter() - t0
+        row = summarize(epochs)
+        row.update({
+            "bench": "replication_filter",
+            "wall_s": round(wall, 3),
+            "traces": drv.traces,
+            "backend": "oracle",
+            "filter_bits": fbits,
+        })
+        rows.append(row)
+        if verbose:
+            print(
+                f"[repl-filter]  ycsb_a       frozen        craq     "
+                f"F={fbits:<3d} dirty {row['total_dirty_reads']:5d} "
+                f"read_p99 {row['mean_read_p99']:6.1f} "
+                f"traces {row['traces']}"
+            )
+    return rows
+
+
+def check_filter_arm(rows: list[dict]) -> list[str]:
+    """Gates of the per-key filter arm: the filter must strictly cut the
+    bounce count without touching anything the bounce does not price."""
+    by = {r["filter_bits"]: r for r in rows
+          if r.get("bench") == "replication_filter"}
+    problems: list[str] = []
+    if not by:
+        return problems
+    base, filt = by.get(0), by.get(64)
+    if base is None or filt is None:
+        return ["replication_filter: missing the F=0 or F=64 arm"]
+    if base["total_dirty_reads"] <= 0:
+        problems.append("replication_filter: baseline craq opened no "
+                        "dirty window on ycsb_a")
+    if not filt["total_dirty_reads"] < base["total_dirty_reads"]:
+        problems.append(
+            f"replication_filter: F=64 dirty reads "
+            f"{filt['total_dirty_reads']} !< slot-granular baseline "
+            f"{base['total_dirty_reads']} (the filter bought nothing)"
+        )
+    # fewer bounces = fewer reads forced onto the tail and fewer extra
+    # hops, so the read tail must not get worse under the filter
+    if not filt["mean_read_p99"] <= base["mean_read_p99"]:
+        problems.append(
+            f"replication_filter: F=64 read p99 "
+            f"{filt['mean_read_p99']:.1f} !<= slot-granular baseline "
+            f"{base['mean_read_p99']:.1f}"
+        )
+    for r in rows:
+        if r.get("bench") == "replication_filter" and r["traces"] != 1:
+            problems.append(
+                f"replication_filter: F={r['filter_bits']} step traced "
+                f"{r['traces']}x (expected 1)"
+            )
+    return problems
+
+
 def check_replication(rows: list[dict]) -> list[str]:
     """The replication acceptance gates (see module docstring)."""
     by = {(r["scenario"], r["replication"], r["policy"]): r for r in rows

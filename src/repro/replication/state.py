@@ -48,23 +48,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.keys import hash_key as K_hash
+
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("version", "acked"),
+    data_fields=("version", "acked", "key_filter"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
 class ReplState:
     """The (n_slots, r_max) version/dirty register file (device-resident).
 
-    version: (S,) uint32 committed (tail) version per slot record.
-    acked:   (S, r_max) uint32 highest committed version acked at each
-             chain position.  ``acked < version`` == dirty.
+    version:    (S,) uint32 committed (tail) version per slot record.
+    acked:      (S, r_max) uint32 highest committed version acked at each
+                chain position.  ``acked < version`` == dirty.
+    key_filter: (S, F) bool — the hashed per-key dirty filter.  Bit
+                ``hash(key) % F`` of slot s is set iff some write of the
+                current dirty window touched a key hashing there, so a
+                CRAQ replica bounces only reads that *collide* with an
+                uncommitted write instead of every read of the range.
+                ``F = 0`` (the default) disables the filter with zero
+                storage and reproduces slot-granular bouncing bit for
+                bit.
     """
 
     version: jnp.ndarray
     acked: jnp.ndarray
+    key_filter: jnp.ndarray | None = None
+
+    def __post_init__(self):
+        # back-compat: the two-array construction predates the filter —
+        # normalize to the F=0 (disabled) filter so every consumer sees
+        # a real (S, 0) leaf, never None
+        if self.key_filter is None:
+            object.__setattr__(
+                self, "key_filter",
+                jnp.zeros((self.version.shape[0], 0), bool),
+            )
 
     @property
     def num_slots(self) -> int:
@@ -74,13 +95,18 @@ class ReplState:
     def r_max(self) -> int:
         return self.acked.shape[1]
 
+    @property
+    def filter_bits(self) -> int:
+        return self.key_filter.shape[1]
 
-def make_state(n_slots: int, r_max: int) -> ReplState:
+
+def make_state(n_slots: int, r_max: int, filter_bits: int = 0) -> ReplState:
     """Fresh register file: version 0 everywhere, everything clean
     (the load phase commits before epoch 0, like the YCSB load phase)."""
     return ReplState(
         version=jnp.zeros((n_slots,), jnp.uint32),
         acked=jnp.zeros((n_slots, r_max), jnp.uint32),
+        key_filter=jnp.zeros((n_slots, filter_bits), bool),
     )
 
 
@@ -92,7 +118,12 @@ def dirty_bits(state: ReplState) -> jnp.ndarray:
     return state.acked < state.version[:, None]
 
 
-def advance(state: ReplState, ridx: jnp.ndarray, is_write: jnp.ndarray) -> ReplState:
+def advance(
+    state: ReplState,
+    ridx: jnp.ndarray,
+    is_write: jnp.ndarray,
+    keys: jnp.ndarray | None = None,
+) -> ReplState:
     """One epoch's protocol round (pure, jittable, shape-stable).
 
     ``ridx``: (B,) matched slot per query; ``is_write``: (B,) bool.
@@ -102,13 +133,23 @@ def advance(state: ReplState, ridx: jnp.ndarray, is_write: jnp.ndarray) -> ReplS
     slots written this epoch.  Reads must consult :func:`dirty_bits` of
     the *pre-advance* state (they observe pre-batch protocol state, just
     as they observe the pre-batch store).
+
+    With a non-zero-width ``key_filter`` and the write ``keys`` supplied,
+    the filter is rebuilt from this epoch's writes alone: the previous
+    window's writes just committed (their acks completed), so exactly the
+    bits set by the new dirty window remain — no decay bookkeeping.
     """
     S = state.num_slots
     w = jnp.zeros((S,), jnp.uint32).at[ridx].add(
         jnp.where(is_write, jnp.uint32(1), jnp.uint32(0))
     )
     acked = jnp.broadcast_to(state.version[:, None], state.acked.shape)
-    return ReplState(version=state.version + w, acked=acked)
+    kf = state.key_filter
+    fbits = kf.shape[1]
+    if fbits and keys is not None:
+        hb = (K_hash(keys) % jnp.uint32(fbits)).astype(jnp.int32)
+        kf = jnp.zeros_like(kf).at[ridx, hb].max(is_write)
+    return ReplState(version=state.version + w, acked=acked, key_filter=kf)
 
 
 def summary(state: ReplState) -> dict:
@@ -148,31 +189,45 @@ def apply_events(state: ReplState, events: list[tuple]) -> ReplState:
         return state
     version = np.asarray(state.version).astype(np.uint32).copy()
     acked = np.asarray(state.acked).astype(np.uint32).copy()
+    # the key filter follows the same conservative rules: a membership
+    # change / merge sets every bit (bounce the whole range for one ack
+    # round — safe and self-healing), inherit copies, kill clears
+    kfilter = np.asarray(state.key_filter).astype(bool).copy()
     for ev in events:
         kind = ev[0]
         if kind == "reset":
             acked[ev[1], :] = 0
+            kfilter[ev[1], :] = True
         elif kind == "inherit":
             p, c = ev[1], ev[2]
             version[c] = version[p]
             acked[c, :] = acked[p, :]
+            kfilter[c, :] = kfilter[p, :]
         elif kind == "merge":
             c, p = ev[1], ev[2]
             version[p] = max(version[p], version[c])
             acked[p, :] = 0
+            kfilter[p, :] = True
         elif kind == "kill":
             version[ev[1]] = 0
             acked[ev[1], :] = 0
+            kfilter[ev[1], :] = False
         elif kind == "grow":
             new_s = int(ev[1])
             r = acked.shape[1]
             if new_s > version.shape[0]:
-                version = np.concatenate(
-                    [version, np.zeros((new_s - version.shape[0],), np.uint32)]
-                )
+                pad = new_s - version.shape[0]
+                version = np.concatenate([version, np.zeros((pad,), np.uint32)])
                 acked = np.concatenate(
-                    [acked, np.zeros((new_s - acked.shape[0], r), np.uint32)]
+                    [acked, np.zeros((pad, r), np.uint32)]
+                )
+                kfilter = np.concatenate(
+                    [kfilter, np.zeros((pad, kfilter.shape[1]), bool)]
                 )
         else:
             raise ValueError(f"unknown replication event {ev!r}")
-    return ReplState(version=jnp.asarray(version), acked=jnp.asarray(acked))
+    return ReplState(
+        version=jnp.asarray(version),
+        acked=jnp.asarray(acked),
+        key_filter=jnp.asarray(kfilter),
+    )

@@ -25,7 +25,12 @@ from repro.telemetry.attribution import (
     reconstruct,
     tail_attribution,
 )
-from repro.telemetry.export import chrome_trace, span_tree, write_jsonl
+from repro.telemetry.export import (
+    chrome_trace,
+    link_retries,
+    span_tree,
+    write_jsonl,
+)
 from repro.telemetry.flight import FlightRecorder
 from repro.telemetry.profiler import (
     StageTimers,
@@ -49,7 +54,7 @@ __all__ = [
     "SPAN_I_FIELDS", "SPAN_F_FIELDS", "SI", "SF",
     "collect_spans", "sample_mask", "rate_threshold",
     "BUCKETS", "decompose", "reconstruct", "tail_attribution",
-    "chrome_trace", "span_tree", "write_jsonl",
+    "chrome_trace", "link_retries", "span_tree", "write_jsonl",
     "StageTimers", "kernel_roofline_rows", "fmt_roofline_md",
     "FlightRecorder",
 ]

@@ -15,11 +15,22 @@ numpy arrays) and renders them two ways:
   query (query -> hop children), the machine-readable form the
   ``examples/trace_demo.py`` renderer and tests consume.
 
-Placement caveat: the DES engine reports per-query issue/finish times
-(exact) but not per-hop start times, so child slices are *anchored* —
-the service slice ends one link before the reply lands, the bounce check
-starts one link after issue.  Root span boundaries and every duration
-are exact; only interior hop starts are reconstructed.
+Interior hop placement: when the epoch record carries the DES engine's
+per-hop completion times (``rec["hops"]`` — the driver requests
+``return_hops`` whenever telemetry is on), child slices are **measured**:
+the bounce/redirect version check ends at its hop's exact completion,
+the service slice ends at the final hop's exact completion.  Records
+without hop times (older artifacts, direct ``collect_spans`` use) fall
+back to the anchored reconstruction — the service slice ends one link
+before the reply lands, the bounce check starts one link after issue.
+Root span boundaries and every duration are exact either way.
+
+:func:`link_retries` stitches cross-epoch retry orbits: spans whose
+``first_epoch`` column is live (the overload plane's orbit-identity
+register, ``repro.overload.link_orbit``) group by ``(key, first_epoch)``
+into one orbit tree — re-injection attempts as children, true
+time-to-success measured on the run's cumulative DES clock when the
+orbit completes inside the sampled window.
 """
 
 from __future__ import annotations
@@ -55,6 +66,10 @@ def span_tree(rec: dict, j: int, model: LatencyModel) -> dict:
     outcome = int(si[SI["outcome"]])
     bounced = int(si[SI["bounced"]]) == 1
     chain = [int(n) for n in unpack_chain(si[SI["chain"]][None])[0] if n >= 0]
+    hops_t = rec.get("hops")
+    # measured per-hop completion times (DES exact; 0 marks a dead slot)
+    hop_done = ([t0 + float(t) for t in hops_t[j] if t > 0.0]
+                if hops_t is not None else None)
 
     children = []
     if outcome in (1, 2):
@@ -65,18 +80,26 @@ def span_tree(rec: dict, j: int, model: LatencyModel) -> dict:
     else:
         svc_store = float(sf[SF["svc_store"]])
         if bounced:
+            lookup = float(np.float32(model.lookup))
+            # measured: hop_done is end-of-service at that hop, so the
+            # first live hop's timestamp IS the end of the version
+            # check; anchored fallback: one link after issue
+            c_end = (hop_done[0] if hop_done
+                     else start + link + lookup)
             children.append({
                 "name": f"dirty-check@node{int(si[SI['picked']])}",
                 "node": int(si[SI["picked"]]),
-                "start": start + link,
-                "dur": float(np.float32(model.lookup)),
+                "start": c_end - lookup,
+                "dur": lookup,
                 "kind": "bounce",
             })
+        # measured: the service slice ends at the last hop's exact
+        # completion; anchored fallback: one link before the reply
+        s_end = hop_done[-1] if hop_done else start + lat - link
         children.append({
             "name": f"service@node{int(si[SI['target']])}",
             "node": int(si[SI["target"]]),
-            # anchored: the service slice ends one link before the reply
-            "start": start + lat - link - svc_store,
+            "start": s_end - svc_store,
             "dur": svc_store,
             "kind": "service",
         })
@@ -93,11 +116,57 @@ def span_tree(rec: dict, j: int, model: LatencyModel) -> dict:
         "bounced": bounced,
         "queue_depth": int(si[SI["queue_depth"]]),
         "orbit_level": int(si[SI["orbit_level"]]),
+        "first_epoch": int(si[SI["first_epoch"]]),
         "start": start,
         "latency": lat,
         "components": {b: float(comps[i]) for i, b in enumerate(BUCKETS)},
         "hops": children,
+        "hop_done": hop_done,
     }
+
+
+def link_retries(epochs: list[dict], model: LatencyModel) -> list[dict]:
+    """Stitch cross-epoch retry orbits into one tree per orbit.
+
+    Spans whose ``first_epoch`` column is live (>= 0) belong to a retry
+    orbit — the overload plane's hashed identity register stamped their
+    key's birth epoch (``repro.overload.link_orbit``).  Attempts group by
+    ``(key, first_epoch)`` and sort by absolute start on the run's
+    cumulative DES clock; the orbit tree is the first attempt with the
+    re-injections as children:
+
+    * ``attempts``        — sampled attempt count (span sampling is
+      per-(key, epoch), so under ``sample_rate < 1`` an orbit's middle
+      attempts may be unsampled — stitching is over the sampled subset);
+    * ``time_to_success`` — last admitted attempt's absolute finish minus
+      first attempt's absolute start (the *true* client-visible storm
+      cost), ``None`` while the orbit never completed in-window;
+    * ``retries``         — the attempt trees after the first.
+
+    Hash collisions in the register merge two keys' orbits under one
+    birth epoch; grouping by the (key, first_epoch) *pair* keeps distinct
+    keys apart regardless.
+    """
+    orbits: dict[tuple[int, int], list[dict]] = {}
+    for rec in epochs:
+        for j in range(rec["span_i"].shape[0]):
+            tree = span_tree(rec, j, model)
+            if tree["first_epoch"] >= 0:
+                kid = (tree["key"], tree["first_epoch"])
+                orbits.setdefault(kid, []).append(tree)
+    out = []
+    for (key, fe), attempts in sorted(orbits.items()):
+        attempts.sort(key=lambda t: (t["epoch"], t["start"]))
+        done = [t for t in attempts if t["outcome"] == "admitted"]
+        tts = (done[-1]["start"] + done[-1]["latency"] - attempts[0]["start"]
+               if done else None)
+        root = dict(attempts[0])
+        root["orbit"] = {"key": key, "first_epoch": fe}
+        root["attempts"] = len(attempts)
+        root["time_to_success"] = tts
+        root["retries"] = attempts[1:]
+        out.append(root)
+    return out
 
 
 def chrome_trace(epochs: list[dict], model: LatencyModel, *,

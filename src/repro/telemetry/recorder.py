@@ -56,8 +56,15 @@ class TelemetryRecorder:
     def on_segment(self, e0: int, rows: list, span_i: np.ndarray,
                    span_f: np.ndarray, counts: np.ndarray, lat: np.ndarray,
                    issue: np.ndarray | None, makespans: np.ndarray,
-                   snapshot: dict | None = None) -> None:
-        """Fold one segment's (L, ...) stacked telemetry into the run."""
+                   snapshot: dict | None = None,
+                   hops: np.ndarray | None = None) -> None:
+        """Fold one segment's (L, ...) stacked telemetry into the run.
+
+        ``hops`` (L, B, H), when given, carries the DES engine's exact
+        per-hop completion times (``return_hops``) — the exporter then
+        draws child slices from measured timestamps instead of anchored
+        reconstructions.
+        """
         span_i = np.asarray(span_i)
         span_f = np.asarray(span_f)
         counts = np.asarray(counts)
@@ -82,6 +89,8 @@ class TelemetryRecorder:
                 "comps": comps,
                 "issue": (np.asarray(issue[i])[qid].astype(np.float64)
                           if issue is not None else None),
+                "hops": (np.asarray(hops[i])[qid].astype(np.float64)
+                         if hops is not None else None),
             }
             self.epochs.append(rec)
             self._clock += float(makespans[i])
@@ -136,6 +145,13 @@ class TelemetryRecorder:
     def attribution(self, q: float = 99.9) -> dict:
         return A.tail_attribution(self.all_latency(), self.all_comps(), q)
 
+    def retry_orbits(self) -> list[dict]:
+        """Cross-epoch retry orbits stitched from the sampled spans
+        (:func:`repro.telemetry.export.link_retries`) — one tree per
+        orbit, re-injection attempts as children, true time-to-success
+        when the orbit completed inside the sampled window."""
+        return E.link_retries(self.epochs, self.model)
+
     def summary(self) -> dict:
         out = {
             "epochs_traced": len(self.epochs),
@@ -145,6 +161,15 @@ class TelemetryRecorder:
             "flight_dumps": list(self.flight.dumps),
             "reconstruction_max_err": self.verify_exact(),
         }
+        if self.cfg.link_retries > 0:
+            orbits = self.retry_orbits()
+            done = [o["time_to_success"] for o in orbits
+                    if o["time_to_success"] is not None]
+            out["retry_orbits"] = len(orbits)
+            out["orbits_completed"] = len(done)
+            out["mean_time_to_success"] = (
+                float(np.mean(done)) if done else 0.0
+            )
         out.update(self.timers.summary())
         return out
 

@@ -25,7 +25,9 @@ A span record is two fixed-width rows per slot:
   write chain (``routing.pack_chain``), chain length, CRAQ bounce flag,
   admission outcome (``repro.overload.OUTCOME_*``), queue depth at entry
   and retry-orbit level (both read from the PRE-epoch overload state,
-  exactly as routing observes the pre-epoch store);
+  exactly as routing observes the pre-epoch store), and the retry-orbit
+  birth epoch (``repro.overload.link_orbit`` — -1 outside any orbit;
+  the exporter's cross-epoch stitch key);
 * ``SPAN_F_FIELDS`` (float32) — the latency components: total planned
   service, link traversals, the storage-only service (total minus the
   bounce version-check), its unscaled base (inflation removed), and the
@@ -66,11 +68,17 @@ class TelemetryConfig:
     flight_dir: str | None = None     # postmortem artifact directory (None: cwd)
     profile_stages: bool = True       # wall timers around the pipeline stages
     jax_trace_dir: str | None = None  # jax.profiler.trace() output dir hook
+    # cross-epoch retry linking: hash bits of the overload plane's orbit-
+    # identity register (repro.overload.link_orbit).  0 disables it; set
+    # (say) 12 and the exporter stitches a shed query's re-injection
+    # attempts into one orbit tree with true time-to-success
+    link_retries: int = 0
 
 
 SPAN_I_FIELDS = (
     "epoch", "qid", "key", "opcode", "ridx", "target", "picked", "chain",
     "chain_len", "bounced", "outcome", "queue_depth", "orbit_level",
+    "first_epoch",
 )
 SPAN_F_FIELDS = ("svc_total", "links", "svc_store", "svc_base", "scale")
 SI = {name: i for i, name in enumerate(SPAN_I_FIELDS)}
@@ -114,6 +122,7 @@ def collect_spans(
     threshold: int,
     k_slots: int,
     lookup: float,
+    first_epoch: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Assemble one epoch's span table on device (pure, jittable).
 
@@ -135,6 +144,8 @@ def collect_spans(
     svc_store = svc_total - jnp.where(bounced, jnp.float32(lookup), 0.0)
     svc_base = svc_store / service_scale
 
+    if first_epoch is None:
+        first_epoch = jnp.full((B,), -1, jnp.int32)
     i32 = lambda x: x.astype(jnp.int32)
     ints = jnp.stack(
         [
@@ -151,6 +162,7 @@ def collect_spans(
             i32(outcome),
             i32(queue_depth),
             i32(orbit_level),
+            i32(first_epoch),
         ],
         axis=1,
     )

@@ -1,0 +1,524 @@
+"""The switch-replicated directory tier (PR 9).
+
+Pins the coordination-tier contract:
+
+* **accounting plane** — the tier never perturbs the metric stream it
+  does not price: ``coordination=None`` and a zero-lag tier are
+  bit-identical on every non-coordination field, and the zero-lag arm
+  resolves every query direct (no redirects, no mis-serves);
+* **fused equivalence** — with the tier enabled (lagged), the fused
+  period scan reproduces the per-epoch driver bit for bit, including
+  the coordination observables and the final ``CoordState`` carry, in
+  one compile;
+* **conservation** — ``routed == direct + redirected`` holds exactly on
+  every row, and ``routed`` is the epoch batch;
+* **quorum safety** — under the fault scenarios (lease_expiry /
+  split_brain / quorum_drift) the quorum arm serves zero queries off a
+  wrong owner (divergence is caught and redirected), while the
+  no-quorum baseline measurably mis-serves and never redirects;
+* **convergence** — a chaos interleaving of table rewrites, drift,
+  splits and lease faults always converges within ``CoordManager.bound()``
+  epochs of quiescence;
+* **kernel parity** — ``range_match_stale`` (reference and pallas)
+  reproduces the in-loop ``stale_lookup`` / ``observe_epoch`` routing
+  bit for bit;
+* plus unit semantics of ``install_pending``, ``observe_epoch``, the
+  overload plane's retry-orbit register (``link_orbit``) and the
+  telemetry exporter's measured interior hop placement.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import coordination_tier as CT
+from repro import overload as OVL
+from repro.cluster import (
+    ClusterConfig,
+    EpochDriver,
+    ScenarioConfig,
+    make_policy,
+    make_scenario,
+)
+from repro.cluster.scenarios import SCENARIOS
+from repro.coordination_tier import state as CTS
+from repro.core import keys as K
+from repro.kernels.range_match.ops import range_match_stale
+from repro.telemetry import TelemetryConfig, span_tree
+
+SCFG = ScenarioConfig(n_epochs=6, epoch_ops=256, n_records=512,
+                      value_dim=2, seed=3)
+FAULT_SCFG = ScenarioConfig(n_epochs=10, epoch_ops=256, n_records=512,
+                            value_dim=2, seed=3)
+
+# the coordination observables (stripped for the accounting-plane gate)
+COORD_KEYS = ("routed", "direct", "redirected", "mis_served",
+              "stale_switches", "coordination")
+
+
+def _ccfg(period=2, **kw):
+    return ClusterConfig(num_nodes=8, num_ranges=32, replication=2, r_max=4,
+                         n_clients=16, report_every=period,
+                         imbalance_threshold=1.1, max_moves_per_round=6, **kw)
+
+
+def _run(scen_name, pol, ccfg, *, fused=True, scen_kw=None, scfg=SCFG):
+    scen = make_scenario(scen_name, scfg, **(scen_kw or {}))
+    drv = EpochDriver(scen, make_policy(pol), ccfg, fused=fused)
+    rows = drv.run()
+    return drv, rows
+
+
+def _strip_coord(row) -> dict:
+    d = dataclasses.asdict(row)
+    d = {k: v for k, v in d.items() if k not in COORD_KEYS}
+    # the tier's control notes ride the event log; everything else in the
+    # log (migrations, splits, failures) must still match exactly
+    d["events"] = [e for e in d["events"] if not e.startswith("coord_")]
+    return d
+
+
+# ---------------------------------------------------------------------------
+# accounting plane: the tier never perturbs what it does not price
+# ---------------------------------------------------------------------------
+
+
+def test_zero_lag_tier_matches_tier_off_bitident():
+    """lag_per_hop=0 installs every control write at its staging epoch:
+    the switch copies never diverge, so the metric stream must equal the
+    tier-less run bit for bit and every query resolves direct."""
+    _, rows_off = _run("shifting_hotspot", "full_adaptive", _ccfg(),
+                       scen_kw=dict(theta=1.2, shift_every=2))
+    drv_on, rows_on = _run(
+        "shifting_hotspot", "full_adaptive",
+        _ccfg(coordination=CT.CoordConfig(n_switches=4, lag_per_hop=0)),
+        scen_kw=dict(theta=1.2, shift_every=2))
+    assert len(rows_off) == len(rows_on)
+    for a, b in zip(rows_off, rows_on):
+        assert _strip_coord(a) == _strip_coord(b), (
+            f"zero-lag tier perturbed the metric stream at epoch {a.epoch}")
+    for r in rows_on:
+        assert r.routed == SCFG.epoch_ops
+        assert r.redirected == 0 and r.mis_served == 0
+        assert r.direct == r.routed
+    assert drv_on.traces == 1
+    # the run's last boundary pull stages at an epoch that never executes;
+    # one install tick there lands every copy on the committed table
+    final = CT.install_pending(drv_on.coord,
+                               jnp.int32(int(drv_on.coord.install_at.max())))
+    assert drv_on.coord_mgr.converged(final)
+
+
+def test_fused_bitident_with_lagged_tier():
+    """Fused period scan ≡ per-epoch driver with the tier live (lag 1),
+    including the coordination observables and the final coord carry."""
+    ccfg = _ccfg(coordination=CT.CoordConfig(n_switches=4, lag_per_hop=1))
+    out = {}
+    for fused in (False, True):
+        out[fused] = _run("shifting_hotspot", "full_adaptive", ccfg,
+                          fused=fused, scen_kw=dict(theta=1.2, shift_every=2))
+    (drv_r, rows_r), (drv_f, rows_f) = out[False], out[True]
+    assert len(rows_r) == len(rows_f)
+    for a, b in zip(rows_r, rows_f):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b), (
+            f"metrics diverge at epoch {a.epoch}")
+    for f in dataclasses.fields(CT.CoordState):
+        assert np.array_equal(
+            np.asarray(getattr(drv_r.coord, f.name)),
+            np.asarray(getattr(drv_f.coord, f.name)),
+        ), f"final coord state {f.name} diverges"
+    assert drv_r.coord_mgr.summary() == drv_f.coord_mgr.summary()
+    assert drv_f.traces == 1
+    for r in rows_f:
+        assert r.routed == r.direct + r.redirected
+        assert r.routed == SCFG.epoch_ops
+
+
+# ---------------------------------------------------------------------------
+# fault scenarios: quorum safety vs the trusting baseline
+# ---------------------------------------------------------------------------
+
+
+def _fault_cfg(quorum: bool, period=1):
+    return _ccfg(period, coordination=CT.CoordConfig(
+        n_switches=4, lag_per_hop=1, quorum=quorum))
+
+
+def test_split_brain_quorum_redirects_baseline_misserves():
+    """A rogue switch installs a rotated-ownership table: every query it
+    fronts would be wrong-owner served.  The quorum arm catches all of
+    them (mis == 0, redirects > 0); the baseline serves them wrong."""
+    scen_kw = dict(split_epoch=2, heal_epoch=7, switch=1)
+    drv_q, rows_q = _run("split_brain", "frozen", _fault_cfg(True),
+                         scen_kw=scen_kw, scfg=FAULT_SCFG)
+    drv_b, rows_b = _run("split_brain", "frozen", _fault_cfg(False),
+                         scen_kw=scen_kw, scfg=FAULT_SCFG)
+    q_mis = sum(r.mis_served for r in rows_q)
+    q_red = sum(r.redirected for r in rows_q)
+    b_mis = sum(r.mis_served for r in rows_b)
+    b_red = sum(r.redirected for r in rows_b)
+    assert q_mis == 0, f"quorum arm mis-served {q_mis} queries"
+    assert q_red > 0, "split brain produced no versioned redirects"
+    assert b_mis > 0, "baseline arm never mis-served under split brain"
+    assert b_red == 0, "the no-quorum baseline must never redirect"
+    assert max(r.stale_switches for r in rows_q) >= 1
+    for rows in (rows_q, rows_b):
+        for r in rows:
+            assert r.routed == r.direct + r.redirected
+    # healing re-registers the rogue; frozen policy -> no later churn
+    assert drv_q.coord_mgr.converged(drv_q.coord)
+    assert drv_q.traces == 1 and drv_b.traces == 1
+
+
+def test_lease_expiry_stalls_then_fails_over():
+    """Lease expiry stalls staging (committed runs ahead of every copy)
+    until the failover grace elapses and leadership moves down the
+    chain; the quorum arm still serves zero queries wrong."""
+    drv, rows = _run("lease_expiry", "full_adaptive", _fault_cfg(True),
+                     scen_kw=dict(theta=1.2, shift_every=2, expire_epoch=3),
+                     scfg=FAULT_SCFG)
+    mgr = drv.coord_mgr
+    assert mgr.failovers >= 1, "failover grace never elapsed"
+    assert mgr.leader_pos != 0, "leadership never moved down the chain"
+    assert sum(r.mis_served for r in rows) == 0
+    for r in rows:
+        assert r.routed == r.direct + r.redirected
+    assert drv.traces == 1
+
+
+def test_quorum_drift_widens_bound_never_misserves():
+    drift_cfg = CT.CoordConfig(n_switches=4, lag_per_hop=1, quorum=True,
+                               drift_mult=4)
+    drv, rows = _run("quorum_drift", "full_adaptive",
+                     _ccfg(1, coordination=drift_cfg),
+                     scen_kw=dict(theta=1.2, shift_every=2, drift_epoch=2,
+                                  switch=2),
+                     scfg=FAULT_SCFG)
+    mgr = drv.coord_mgr
+    assert mgr.lag_mult[2] == drift_cfg.drift_mult
+    assert mgr.bound() == (mgr.n_switches - 1) * 1 * drift_cfg.drift_mult
+    assert sum(r.mis_served for r in rows) == 0
+    for r in rows:
+        assert r.routed == r.direct + r.redirected
+    assert drv.traces == 1
+
+
+def test_fault_scenarios_registered():
+    for name, kinds in (
+        ("lease_expiry", {"lease_expire"}),
+        ("split_brain", {"split_brain", "heal_split"}),
+        ("quorum_drift", {"quorum_drift"}),
+    ):
+        assert name in SCENARIOS
+        scen = make_scenario(name, FAULT_SCFG)
+        seen = {k for e in range(FAULT_SCFG.n_epochs)
+                for k, _ in scen.events(e)}
+        assert seen == kinds, (name, seen)
+        assert seen <= set(CT.EVENT_KINDS)
+
+
+# ---------------------------------------------------------------------------
+# chaos / property: convergence within the configured staleness bound
+# ---------------------------------------------------------------------------
+
+
+def _rand_tables(rng, s=16, num_nodes=8, r_max=3):
+    lo = np.sort(rng.integers(0, 2**32 - 2, s, dtype=np.uint64)
+                 ).astype(np.uint32)
+    hi = np.concatenate([lo[1:] - 1, np.array([2**32 - 1], np.uint64)]
+                        ).astype(np.uint32)
+    chains = np.full((s, r_max), -1, np.int32)
+    clen = rng.integers(1, r_max + 1, s).astype(np.int32)
+    for i in range(s):
+        chains[i, :clen[i]] = rng.choice(num_nodes, clen[i], replace=False)
+    return dict(slot_lo=lo, slot_hi=hi, live=np.ones(s, bool),
+                chains=chains, chain_len=clen)
+
+
+def _mutate_tables(rng, tables, num_nodes=8):
+    """A random control write: rewrite ownership (and sometimes bounds /
+    liveness) of a few slots — migrations, splits and failures all look
+    like this to the manager's diff."""
+    s, r_max = tables["chains"].shape
+    for i in rng.choice(s, rng.integers(1, 4), replace=False):
+        cl = int(rng.integers(1, r_max + 1))
+        row = np.full(r_max, -1, np.int32)
+        row[:cl] = rng.choice(num_nodes, cl, replace=False)
+        tables["chains"][i] = row
+        tables["chain_len"][i] = cl
+        if rng.random() < 0.3:
+            tables["live"][i] = not tables["live"][i]
+        if rng.random() < 0.3:
+            tables["slot_hi"][i] = np.uint32(
+                max(int(tables["slot_lo"][i]), int(tables["slot_hi"][i]) - 1))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_chaos_converges_within_bound(seed):
+    """Interleave random table rewrites with drift / split-brain / lease
+    faults for 16 epochs, then quiesce (heal, renew, one last control
+    pull): every switch must hold the committed table within
+    ``CoordManager.bound()`` epochs of the final pull."""
+    rng = np.random.default_rng(seed)
+    tables = _rand_tables(rng)
+    cfg = CT.CoordConfig(n_switches=4, lag_per_hop=2, drift_mult=3,
+                         lease_epochs=3, failover_after=1)
+    mgr = CT.CoordManager(cfg, tables, num_nodes=8)
+    coord = mgr.make_state()
+    split_active = False
+    T = 16
+    for e in range(T):
+        coord = CT.install_pending(coord, jnp.int32(e))
+        r = rng.random()
+        if r < 0.2 and not split_active:
+            coord, _ = mgr.on_event("split_brain", int(rng.integers(4)),
+                                    coord, tables, now=e)
+            split_active = True
+        elif r < 0.35 and split_active:
+            coord, _ = mgr.on_event("heal_split", 0, coord, tables, now=e)
+            split_active = False
+        elif r < 0.45:
+            coord, _ = mgr.on_event("quorum_drift", int(rng.integers(4)),
+                                    coord, tables, now=e)
+        elif r < 0.55:
+            coord, _ = mgr.on_event("lease_expire", 0, coord, tables, now=e)
+        if rng.random() < 0.7:
+            _mutate_tables(rng, tables)
+        coord, _ = mgr.on_control(coord, tables, now=e)
+    # quiesce: resolve every standing fault, then one clean control pull
+    if split_active:
+        coord, _ = mgr.on_event("heal_split", 0, coord, tables, now=T)
+    coord, _ = mgr.on_event("lease_renew", 0, coord, tables, now=T)
+    coord, _ = mgr.on_control(coord, tables, now=T)
+    for e in range(T, T + mgr.bound() + 1):
+        coord = CT.install_pending(coord, jnp.int32(e))
+    assert mgr.converged(coord), (
+        f"seed {seed}: switches still divergent {mgr.bound()} epochs after "
+        f"quiescence ({mgr.summary()})")
+
+
+# ---------------------------------------------------------------------------
+# kernel parity + unit semantics
+# ---------------------------------------------------------------------------
+
+
+def _perturbed_state(rng, w=4, s=24, num_nodes=8, r_max=4):
+    coord = CT.make_state(_rand_tables(rng, s=s, num_nodes=num_nodes,
+                                       r_max=r_max), w)
+    ver = np.zeros((w, s), np.uint32)
+    ver[1, ::2] = 7          # half of switch 1 divergent
+    ver[3, :] = 3            # all of switch 3 divergent
+    ch = np.asarray(coord.chains).copy()
+    ch[1] = np.where(ch[1] >= 0, (ch[1] + 1) % num_nodes, ch[1])
+    lv = np.asarray(coord.live).copy()
+    lv[2, 5] = False         # a dead row only switch 2 has retired
+    lo = np.asarray(coord.slot_lo).copy()
+    lo[3, 2] = lo[3, 2] + np.uint32(3)   # a shifted bound on switch 3
+    return dataclasses.replace(
+        coord, version=jnp.asarray(ver), chains=jnp.asarray(ch),
+        live=jnp.asarray(lv), slot_lo=jnp.asarray(lo))
+
+
+def test_stale_kernel_matches_inloop_reference():
+    """range_match_stale (ref and pallas) ≡ the observe_epoch routing
+    formula: same sridx, same serving node, same divergence bit."""
+    rng = np.random.default_rng(11)
+    coord = _perturbed_state(rng)
+    B = 512
+    keys = jnp.asarray(rng.integers(0, 2**32 - 2, B, dtype=np.uint64),
+                       jnp.uint32)
+    ops = jnp.asarray(rng.choice([K.OP_GET, K.OP_PUT, K.OP_DEL], B),
+                      jnp.int32)
+    sw = CT.ingress_switch(keys, coord.n_switches)
+    mv = K.matching_value(keys, hash_partitioned=False)
+    sridx = CT.stale_lookup(coord, sw, mv)
+    is_write = (ops == K.OP_PUT) | (ops == K.OP_DEL)
+    server = CTS._chain_server(coord.chains[sw, sridx],
+                               coord.chain_len[sw, sridx], is_write)
+    div = coord.version[sw, sridx] != coord.committed[sridx]
+    for use_pallas in (False, True):
+        k_sridx, k_server, k_div = range_match_stale(
+            coord, keys, ops, use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(k_sridx),
+                                      np.asarray(sridx), err_msg=str(use_pallas))
+        np.testing.assert_array_equal(np.asarray(k_server),
+                                      np.asarray(server), err_msg=str(use_pallas))
+        np.testing.assert_array_equal(np.asarray(k_div),
+                                      np.asarray(div), err_msg=str(use_pallas))
+
+
+def _two_switch_state():
+    tables = dict(
+        slot_lo=np.array([0, 8], np.uint32),
+        slot_hi=np.array([7, 2**32 - 1], np.uint32),
+        live=np.ones(2, bool),
+        chains=np.array([[0], [1]], np.int32),
+        chain_len=np.ones(2, np.int32),
+    )
+    coord = CT.make_state(tables, 2)
+    # switch 1 holds a swapped-ownership table stamped past the commit
+    ch = np.asarray(coord.chains).copy()
+    ch[1] = ch[1][::-1]
+    ver = np.zeros((2, 2), np.uint32)
+    ver[1] = 9
+    return dataclasses.replace(coord, chains=jnp.asarray(ch),
+                               version=jnp.asarray(ver))
+
+
+def test_observe_epoch_accounting_unit():
+    coord = _two_switch_state()
+    keys = jnp.arange(16, dtype=jnp.uint32)
+    ops = jnp.where(keys % 3 == 0, jnp.int32(K.OP_PUT), jnp.int32(K.OP_GET))
+    true_node = jnp.where(keys < 8, 0, 1).astype(jnp.int32)
+    q = SimpleNamespace(key=keys, opcode=ops)
+    decision = SimpleNamespace(chain=true_node[:, None],
+                               chain_len=jnp.ones(16, jnp.int32))
+    sw = np.asarray(CT.ingress_switch(keys, 2))
+    n1 = int((sw == 1).sum())
+    assert 0 < n1 < 16, "hash degenerate for this key set"
+
+    _, red, via, cs = CT.observe_epoch(coord, q, decision, jnp.int32(0),
+                                       quorum=True)
+    red, via, cs = np.asarray(red), np.asarray(via), np.asarray(cs)
+    np.testing.assert_array_equal(red, sw == 1)   # every rogue-switch query
+    assert cs[0] == 16 and cs[1] == 16 - n1 and cs[2] == n1
+    assert cs[0] == cs[1] + cs[2]                 # conservation
+    assert cs[3] == 0                             # quorum: no mis-serves
+    assert cs[4] == 1                             # one divergent switch
+    # the redirect bounces via the stale (wrong) owner
+    np.testing.assert_array_equal(via[sw == 1],
+                                  1 - np.asarray(true_node)[sw == 1])
+
+    _, red_b, _, cs_b = CT.observe_epoch(coord, q, decision, jnp.int32(0),
+                                         quorum=False)
+    assert not np.asarray(red_b).any()
+    assert cs_b[2] == 0 and np.asarray(cs_b)[3] == n1  # all served wrong
+
+
+def test_install_pending_per_switch_epochs():
+    coord = _two_switch_state()
+    new_chains = np.array([[1], [0]], np.int32)
+    coord = dataclasses.replace(
+        coord,
+        pend_chains=jnp.asarray(new_chains),
+        pend_version=jnp.asarray(np.array([4, 4], np.uint32)),
+        install_at=jnp.asarray(np.array([2, 5], np.int32)),
+    )
+    c3 = CT.install_pending(coord, jnp.int32(3))
+    assert np.array_equal(np.asarray(c3.chains[0]), new_chains)
+    assert np.asarray(c3.version)[0].tolist() == [4, 4]
+    assert int(c3.install_at[0]) == int(CT.INSTALL_NEVER)
+    assert int(c3.install_at[1]) == 5         # switch 1 still waiting
+    assert np.asarray(c3.version)[1].tolist() == [9, 9]
+    c5 = CT.install_pending(c3, jnp.int32(5))
+    assert np.array_equal(np.asarray(c5.chains[1]), new_chains)
+    assert (np.asarray(c5.install_at) == int(CT.INSTALL_NEVER)).all()
+
+
+# ---------------------------------------------------------------------------
+# satellites: retry-orbit register + measured interior hops
+# ---------------------------------------------------------------------------
+
+
+def test_link_orbit_register_semantics():
+    cfg = OVL.OverloadConfig()
+    st = OVL.make_state(4, cfg, link_bits=4)
+    assert st.first_seen.shape == (16,)
+    k = jnp.asarray([5, 9], jnp.uint32)
+    T, F = jnp.array([True]), jnp.array([False])
+
+    # first shed stamps the birth epoch; an untracked admit reports -1
+    st, fe = OVL.link_orbit(st, k, jnp.array([True, False]),
+                            jnp.array([False, True]), 3)
+    assert np.asarray(fe).tolist() == [3, -1]
+    # re-shed later: scatter-min keeps the first epoch
+    st, fe = OVL.link_orbit(st, k[:1], T, F, 5)
+    assert int(fe[0]) == 3
+    # admitted while in orbit: reports the birth epoch and clears
+    st, fe = OVL.link_orbit(st, k[:1], F, T, 6)
+    assert int(fe[0]) == 3
+    st, fe = OVL.link_orbit(st, k[:1], F, T, 7)
+    assert int(fe[0]) == -1, "orbit register was not cleared on success"
+
+    # same-batch complete + re-shed on one register slot: the report reads
+    # the pre-update register (a collision merges the orbits, as
+    # documented), while the clear runs before the stamp so the slot
+    # itself re-enters orbit at the new epoch
+    h = np.asarray(K.hash_key(jnp.arange(4096, dtype=jnp.uint32))) & 15
+    a = 5
+    b = next(int(x) for x in np.where(h == h[a])[0] if x != a)
+    kk = jnp.asarray([a, b], jnp.uint32)
+    st, _ = OVL.link_orbit(st, kk[:1], T, F, 2)          # a in orbit @2
+    st, fe = OVL.link_orbit(st, kk, jnp.array([False, True]),
+                            jnp.array([True, False]), 8)
+    assert np.asarray(fe).tolist() == [2, 2]
+    st, fe = OVL.link_orbit(st, kk[1:], F, T, 9)
+    assert int(fe[0]) == 8
+
+    # link_bits=0 -> single-slot sentinel register, linking disabled
+    st0 = OVL.make_state(4, cfg, link_bits=0)
+    st0b, fe = OVL.link_orbit(st0, k, jnp.array([True, True]),
+                              jnp.array([False, False]), 3)
+    assert (np.asarray(fe) == -1).all()
+    assert np.array_equal(np.asarray(st0b.first_seen),
+                          np.asarray(st0.first_seen))
+
+
+def test_span_measured_hops_and_retry_orbits():
+    """S3 + S2 end to end: admitted spans carry the DES engine's exact
+    per-hop completions (service slice ends at the final hop; reply lands
+    one link later), the anchored fallback still renders records without
+    hop times, and shed spans stitch into cross-epoch retry orbits."""
+    scen = make_scenario(
+        "shifting_hotspot",
+        ScenarioConfig(n_epochs=4, epoch_ops=256, n_records=512,
+                       value_dim=2, seed=7),
+        theta=1.4, shift_every=2)
+    cfg = _ccfg(2, overload=OVL.OverloadConfig(queue_cap=4, service_rate=2,
+                                               max_level=3),
+                telemetry=TelemetryConfig(sample_rate=1.0, max_spans=1024,
+                                          link_retries=10))
+    drv = EpochDriver(scen, make_policy("frozen"), cfg, fused=True)
+    drv.run()
+    model = drv.telemetry.model
+    link = float(np.float32(model.link))
+    n_measured = 0
+    for rec in drv.telemetry.epochs:
+        for j in range(rec["span_i"].shape[0]):
+            tree = span_tree(rec, j, model)
+            if tree["outcome"] != "admitted":
+                continue
+            hd = tree["hop_done"]
+            if hd:
+                n_measured += 1
+                svc = tree["hops"][-1]
+                assert svc["kind"] == "service"
+                assert np.isclose(svc["start"] + svc["dur"], hd[-1],
+                                  rtol=1e-5, atol=1e-3)
+                assert np.isclose(hd[-1] + link,
+                                  tree["start"] + tree["latency"],
+                                  rtol=1e-5, atol=1e-3)
+            # anchored fallback: a record without hop times still renders
+            rec2 = dict(rec)
+            rec2["hops"] = None
+            t2 = span_tree(rec2, j, model)
+            assert t2["hop_done"] is None
+            svc2 = t2["hops"][-1]
+            assert np.isclose(svc2["start"] + svc2["dur"],
+                              t2["start"] + t2["latency"] - link,
+                              rtol=1e-5, atol=1e-3)
+    assert n_measured > 0, "no admitted span carried measured hop times"
+
+    orbits = drv.telemetry.retry_orbits()
+    assert orbits, "the retry storm linked no cross-epoch orbits"
+    for o in orbits:
+        assert o["attempts"] >= 1
+        assert o["orbit"]["first_epoch"] >= 0
+        assert o["epoch"] >= o["orbit"]["first_epoch"]
+        for retry in o["retries"]:
+            assert (retry["epoch"], retry["start"]) >= (o["epoch"], o["start"])
+        if o["time_to_success"] is not None:
+            assert o["time_to_success"] > 0

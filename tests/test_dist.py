@@ -156,6 +156,9 @@ def pair(scen_name, pol, ccfg, scen_kw=None):
     if drv_r.ovl is not None:
         for la, lb in zip(jax.tree.leaves(drv_r.ovl), jax.tree.leaves(drv_f.ovl)):
             assert np.array_equal(np.asarray(la), np.asarray(lb)), scen_name
+    if drv_r.coord is not None:
+        for la, lb in zip(jax.tree.leaves(drv_r.coord), jax.tree.leaves(drv_f.coord)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), scen_name
     if drv_r.telemetry is not None:
         er, ef = drv_r.telemetry.epochs, drv_f.telemetry.epochs
         assert len(er) == len(ef)
@@ -165,6 +168,7 @@ def pair(scen_name, pol, ccfg, scen_kw=None):
     assert drv_f.traces == 1, (scen_name, drv_f.traces)
     assert drv_f.host_syncs <= drv_r.host_syncs, scen_name
     print("ok", scen_name, pol, drv_f.host_syncs, drv_r.host_syncs)
+    return rows_f
 """
 
 
@@ -194,6 +198,24 @@ def test_fused_dist_parity_craq_ycsb_a():
     run_sub(FUSED_PAIR + """
 pair("ycsb_a", "full_adaptive",
      ClusterConfig(**base, replication_mode="craq"))
+""")
+
+
+def test_fused_dist_parity_coordination_tier():
+    """Fused ≡ per-epoch on the dist backend with the replicated switch
+    tier live through a split-brain fault: the coord carry, redirect
+    accounting and quorum safety are device-count invariant."""
+    run_sub(FUSED_PAIR + """
+from repro.coordination_tier import CoordConfig
+rows = pair("split_brain", "full_adaptive",
+            ClusterConfig(**base,
+                          coordination=CoordConfig(n_switches=4, lag_per_hop=1)),
+            scen_kw=dict(theta=1.2, shift_every=2, split_epoch=2,
+                         heal_epoch=5, switch=1))
+for r in rows:
+    assert r.routed == r.direct + r.redirected, r.epoch
+assert sum(r.mis_served for r in rows) == 0
+assert sum(r.redirected for r in rows) > 0
 """)
 
 
