@@ -595,6 +595,9 @@ def main(argv=None):
             json.dump({"quick": args.quick, "service": args.service,
                        "rows": rows}, f, indent=1)
         print(f"wrote {args.json} ({len(rows)} rows)")
+        from benchmarks import history
+        history.append("balance", {"quick": args.quick,
+                                   "service": args.service, "rows": rows})
 
     if not args.no_check:
         problems = (check_acceptance(rows, quick=args.quick)

@@ -291,6 +291,8 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
         print(f"wrote {args.json} ({len(rows)} rows)")
+        from benchmarks import history
+        history.append("coord_tier", {"quick": args.quick, "rows": rows})
 
     if not args.no_check:
         problems = check_coordination(rows)

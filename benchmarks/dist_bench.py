@@ -219,6 +219,8 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump({"quick": args.quick, "rows": rows}, f, indent=1)
         print(f"wrote {args.json} ({len(rows)} rows)")
+        from benchmarks import history
+        history.append("dist", {"quick": args.quick, "rows": rows})
 
     if not args.no_check:
         problems = problems + check(rows)

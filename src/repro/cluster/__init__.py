@@ -30,7 +30,7 @@ from repro.cluster.metrics import (
     summarize,
 )
 from repro.coordination_tier import CoordConfig
-from repro.telemetry import TelemetryConfig
+from repro.telemetry import SLO, MetricsConfig, TelemetryConfig
 from repro.cluster.policies import (
     POLICIES,
     FullAdaptivePolicy,
@@ -48,7 +48,7 @@ __all__ = [
     "EpochMetrics", "imbalance_stats", "imbalance_stats_batch",
     "latency_percentiles", "latency_percentiles_batch",
     "masked_p99_batch", "masked_p99_batch_loop", "p999_batch", "summarize",
-    "CoordConfig", "TelemetryConfig",
+    "CoordConfig", "TelemetryConfig", "MetricsConfig", "SLO",
     "POLICIES", "Policy", "PolicyConfig", "MigratePolicy", "ReplicatePolicy",
     "FullAdaptivePolicy", "OverloadAdaptivePolicy", "make_policy",
     "SCENARIOS", "Scenario", "ScenarioConfig", "make_scenario",

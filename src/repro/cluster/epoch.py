@@ -82,6 +82,8 @@ from repro import coordination_tier as CT
 from repro import overload as OVL
 from repro import replication as RPL
 from repro import telemetry as TEL
+from repro.telemetry import metrics as MTR
+from repro.telemetry import slo as SLOM
 
 from repro.cluster.metrics import (
     EpochMetrics,
@@ -173,6 +175,15 @@ class ClusterConfig:
     # and PRNG draws always follow the TRUE routing decision, so a
     # zero-lag tier is also bit-identical to None
     coordination: CT.CoordConfig | None = None
+    # the fleet metrics plane (repro.telemetry.metrics): None disables it
+    # and the run is bit-identical to pre-metrics behaviour; a
+    # MetricsConfig carries a fixed-shape (window, n_series) time-series
+    # ring through the device step (donated through the fused scan, like
+    # the overload/coordination registers), with SLO burn-rate alerting
+    # evaluated on-device at each segment boundary.  Pure observer: no
+    # PRNG consumed, no store/counter effects — the EpochMetrics stream
+    # is bit-identical with the ring on OR off
+    metrics: MTR.MetricsConfig | None = None
     # hashed per-key CRAQ dirty filter width (repro.replication): a craq
     # replica bounces only reads whose key *collides* with an uncommitted
     # write instead of every read of a dirty range.  0 (the default)
@@ -391,6 +402,42 @@ class EpochDriver:
             self._tel_threshold = 0
             self.telemetry = None
             self._timers = TEL.StageTimers(enabled=False)
+        # the fleet metrics plane: a (window, n_series) f32 ring carried
+        # (and donated) through the fused scan; None == empty pytree
+        # slot, the same discipline as the overload/coordination planes
+        self.met_cfg = cfg.metrics
+        self._met_pos = 0   # host mirror of metrics.pos (fold positions)
+        if self.met_cfg is not None:
+            n_sw = (self.coord_mgr.n_switches
+                    if self.coord_mgr is not None else 0)
+            self.met_layout = MTR.build_layout(
+                cfg.num_nodes, n_switches=n_sw,
+                topk=min(self.met_cfg.topk, n_slots),
+            )
+            for s in self.met_cfg.slos:
+                if s.series not in self.met_layout.index:
+                    raise ValueError(
+                        f"SLO {s.name!r} names unknown series "
+                        f"{s.series!r}"
+                    )
+                need = s.slow_window + self.period
+                if self.met_cfg.window < need:
+                    raise ValueError(
+                        f"metrics window {self.met_cfg.window} too "
+                        f"short for SLO {s.name!r}: needs >= "
+                        f"slow_window + period = {need} epochs of "
+                        "retained history"
+                    )
+            self.metrics = MTR.make_state(
+                self.met_cfg.window, self.met_layout.n_series
+            )
+            self.met_engine = SLOM.AlertEngine(
+                self.met_cfg.slos, on_fire=self._on_slo_fire
+            )
+        else:
+            self.met_layout = None
+            self.metrics = None
+            self.met_engine = None
         self.key = jax.random.PRNGKey(cfg.seed)
 
         self._traces = 0
@@ -527,6 +574,10 @@ class EpochDriver:
         ccfg = self.coord_cfg
         hp = bool(getattr(self.directory, "hash_partitioned", False))
         fbits = cfg.craq_filter_bits
+        # the metrics plane (trace constants; record_epoch consumes no
+        # PRNG and the None path compiles the identical program)
+        mcfg = self.met_cfg
+        met_topk = self.met_layout.topk if mcfg is not None else 0
 
         def route_chunk(directory, load_reg, dirty, kf, qs, rng_c,
                         queue_pen):
@@ -546,8 +597,8 @@ class EpochDriver:
                 picked = bounced = None
             return dec, directory, load_reg, picked, bounced
 
-        def body(store, directory, load_reg, sketch, repl, ovl, coord, q,
-                 rng, eid):
+        def body(store, directory, load_reg, sketch, repl, ovl, coord,
+                 metrics, q, rng, eid):
             if ocfg is not None:
                 # fold_in (not a wider split) so the disabled path's
                 # r_route/r_plan streams are untouched — routing and the
@@ -697,20 +748,29 @@ class EpochDriver:
                 )
             else:
                 spans = None
+            if mcfg is not None:
+                # the fleet metrics row: post-step ovl, post-observe
+                # coord, post-advance repl — end-of-epoch state, like
+                # the flight ring's snapshots.  Pure observer.
+                metrics = MTR.record_epoch(
+                    metrics, node_ops=node_ops, ovl=ovl, ostats=ostats,
+                    cstats=cstats, coord=coord, repl=repl, sketch=sketch,
+                    keys=q.key, ridx=decision.ridx, topk=met_topk,
+                )
             return (store, directory, load_reg, sketch, repl, ovl, coord,
-                    plan, node_ops, retries, bounced_out, ostats, cstats,
-                    spans)
+                    metrics, plan, node_ops, retries, bounced_out, ostats,
+                    cstats, spans)
 
         return body
 
     def _build_oracle_step(self, mp: RPL.ModePlan):
         body = self._make_oracle_body(mp)
 
-        def step(store, directory, load_reg, sketch, repl, ovl, coord, q,
-                 rng, eid):
+        def step(store, directory, load_reg, sketch, repl, ovl, coord,
+                 metrics, q, rng, eid):
             self._traces += 1  # python side effect: counts traces, not calls
             return body(store, directory, load_reg, sketch, repl, ovl,
-                        coord, q, rng, eid)
+                        coord, metrics, q, rng, eid)
 
         return jax.jit(step)
 
@@ -728,15 +788,16 @@ class EpochDriver:
         body = self._make_oracle_body(mp)
 
         def period(store, directory, load_reg, sketch, repl, ovl, coord,
-                   qs, rngs, live, eids):
+                   metrics, qs, rngs, live, eids):
             def scan_body(carry, xs):
-                store, directory, load_reg, sketch, repl, ovl, coord = carry
+                (store, directory, load_reg, sketch, repl, ovl, coord,
+                 metrics) = carry
                 q, rng, lv, eid = xs
                 (store2, directory2, load_reg2, sketch2, repl2, ovl2,
-                 coord2, plan, node_ops, retries, bounced, ostats, cstats,
-                 spans) = body(
+                 coord2, metrics2, plan, node_ops, retries, bounced,
+                 ostats, cstats, spans) = body(
                     store, directory, load_reg, sketch, repl, ovl, coord,
-                    q, rng, eid
+                    metrics, q, rng, eid
                 )
                 keep = lambda new, old: jnp.where(lv, new, old)
                 store2 = jax.tree.map(keep, store2, store)
@@ -745,7 +806,8 @@ class EpochDriver:
                           keep(sketch2, sketch),
                           jax.tree.map(keep, repl2, repl),
                           jax.tree.map(keep, ovl2, ovl),
-                          jax.tree.map(keep, coord2, coord))
+                          jax.tree.map(keep, coord2, coord),
+                          jax.tree.map(keep, metrics2, metrics))
                 ovf = jnp.sum(store2.overflow)
                 # spans ride the ys stack (None == empty pytree when the
                 # trace plane is off — the program is unchanged)
@@ -754,21 +816,22 @@ class EpochDriver:
 
             carry, outs = jax.lax.scan(
                 scan_body,
-                (store, directory, load_reg, sketch, repl, ovl, coord),
+                (store, directory, load_reg, sketch, repl, ovl, coord,
+                 metrics),
                 (qs, rngs, live, eids),
             )
             return (*carry, *outs)
 
         # donate the big buffers: store slabs, load registers, sketch, the
         # replication register file (version/dirty tables), the overload
-        # queue/retry registers and the coordination tier's per-switch
-        # table copies (each an empty pytree when disabled — donating one
-        # is then a no-op).
+        # queue/retry registers, the coordination tier's per-switch
+        # table copies and the metrics ring (each an empty pytree when
+        # disabled — donating one is then a no-op).
         # The directory is NOT donated — several of its freshly-grafted
         # tables (e.g. the zeroed read/write counters) can alias the same
         # constant buffer, which XLA rejects as a double donation; it is
         # also tiny next to the slabs, so nothing is lost.
-        return jax.jit(period, donate_argnums=(0, 2, 3, 4, 5, 6))
+        return jax.jit(period, donate_argnums=(0, 2, 3, 4, 5, 6, 7))
 
     def _make_dist_observe(self):
         """The dist observe stage — everything after the sharded apply,
@@ -786,9 +849,11 @@ class EpochDriver:
         tel_thr = self._tel_threshold
         ccfg = self.coord_cfg
         hp = bool(getattr(self.directory, "hash_partitioned", False))
+        mcfg = self.met_cfg
+        met_topk = self.met_layout.topk if mcfg is not None else 0
 
         def observe(q, ridx, target, chain, chain_len, sketch, rng, repl,
-                    picked, bounced, ovl, r_ovl, eid, coord):
+                    picked, bounced, ovl, r_ovl, eid, coord, metrics):
             """Post-processing of the dist apply's decision."""
             B = target.shape[0]
             decision = C.RoutingDecision(
@@ -876,8 +941,17 @@ class EpochDriver:
                 )
             else:
                 spans = None
-            return (sketch, plan, node_ops, repl, ovl, coord, ostats,
-                    cstats, spans)
+            if mcfg is not None:
+                # same end-of-epoch placement as the oracle body — the
+                # observe stage runs replicated on the global batch, so
+                # the ring row is identical on every device
+                metrics = MTR.record_epoch(
+                    metrics, node_ops=node_ops, ovl=ovl, ostats=ostats,
+                    cstats=cstats, coord=coord, repl=repl, sketch=sketch,
+                    keys=q.key, ridx=ridx, topk=met_topk,
+                )
+            return (sketch, plan, node_ops, repl, ovl, coord, metrics,
+                    ostats, cstats, spans)
 
         return observe
 
@@ -907,8 +981,8 @@ class EpochDriver:
 
         observe = jax.jit(observe)
 
-        def step(store, directory, load_reg, sketch, repl, ovl, coord, q,
-                 rng, eid):
+        def step(store, directory, load_reg, sketch, repl, ovl, coord,
+                 metrics, q, rng, eid):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
             load_reg = jax.device_put(load_reg, rep)
@@ -916,6 +990,8 @@ class EpochDriver:
             repl = jax.device_put(repl, rep)
             if coord is not None:
                 coord = jax.device_put(coord, rep)
+            if metrics is not None:
+                metrics = jax.device_put(metrics, rep)
             if ovl is not None:
                 ovl = jax.device_put(ovl, rep)
                 r_ovl = jax.random.fold_in(rng, 0x0F10AD)
@@ -947,16 +1023,17 @@ class EpochDriver:
                 # placeholders keep observe's signature mode-independent
                 picked = m["target"]
                 bounced = jnp.zeros((B,), jnp.bool_)
-            (sketch, plan, node_ops, repl, ovl, coord, ostats, cstats,
-             spans) = observe(
+            (sketch, plan, node_ops, repl, ovl, coord, metrics, ostats,
+             cstats, spans) = observe(
                 q, m["ridx"], m["target"], m["chain"], m["chain_len"], sketch,
                 r_plan, repl, picked, bounced, ovl, r_ovl, eid, coord,
+                metrics,
             )
             if not spread:
                 load_reg = load_reg + node_ops.astype(jnp.uint32)
             return (store, directory, load_reg, sketch, repl, ovl, coord,
-                    plan, node_ops, m["bucket_overflow"], bounced, ostats,
-                    cstats, spans)
+                    metrics, plan, node_ops, m["bucket_overflow"], bounced,
+                    ostats, cstats, spans)
 
         return step
 
@@ -996,7 +1073,7 @@ class EpochDriver:
         shd = NamedSharding(self._mesh, PartitionSpec(self._dist_cfg.axis))
 
         def period(store, directory, load_reg, sketch, repl, ovl, coord,
-                   qs, rngs, live, eids):
+                   metrics, qs, rngs, live, eids):
             store = jax.device_put(store, shd)
             directory = jax.device_put(directory, rep)
             load_reg = jax.device_put(load_reg, rep)
@@ -1006,9 +1083,11 @@ class EpochDriver:
                 ovl = jax.device_put(ovl, rep)
             if coord is not None:
                 coord = jax.device_put(coord, rep)
+            if metrics is not None:
+                metrics = jax.device_put(metrics, rep)
             return self._dist_period(
                 store, directory, load_reg, sketch, repl, ovl, coord,
-                qs, rngs, live, eids,
+                metrics, qs, rngs, live, eids,
             )
 
         return period
@@ -1084,10 +1163,11 @@ class EpochDriver:
                 # tier on; the same scenario drives the no-tier baseline
                 # arm, which simply ignores them
                 if self.coord_mgr is not None:
-                    self.coord, notes = self.coord_mgr.on_event(
-                        kind, node, self.coord,
-                        self.controller.table_snapshot(), now=e,
-                    )
+                    with self._timers.stage("coord_control"):
+                        self.coord, notes = self.coord_mgr.on_event(
+                            kind, node, self.coord,
+                            self.controller.table_snapshot(), now=e,
+                        )
                     events.extend(notes)
         self._sync_repl()
         if self.coord_mgr is not None and tables_changed:
@@ -1095,9 +1175,10 @@ class EpochDriver:
             # propagate along the switch chain (stale copies keep routing
             # to the spliced chain until their install lands — priced as
             # redirects, never served wrong under quorum reads)
-            self.coord, notes = self.coord_mgr.on_control(
-                self.coord, self.controller.table_snapshot(), now=e,
-            )
+            with self._timers.stage("coord_control"):
+                self.coord, notes = self.coord_mgr.on_control(
+                    self.coord, self.controller.table_snapshot(), now=e,
+                )
             events.extend(notes)
         return events, mig_entries, mig_bytes
 
@@ -1225,19 +1306,24 @@ class EpochDriver:
             self.directory = self.controller.refresh(self.directory)
         self._sync_repl()
         if self.coord_mgr is not None:
-            snap = self.controller.table_snapshot()
-            if grew:
-                # pool growth changes every table shape: full fabric
-                # resync at the new width (the step recompiles anyway —
-                # `traces` counts the growth, not a hidden retrace)
-                self.coord = self.coord_mgr.rebuild(snap)
-            else:
-                # the period's control writes enter the switch chain:
-                # commit now, install per-switch with chain-position lag
-                self.coord, cnotes = self.coord_mgr.on_control(
-                    self.coord, snap, now=now
-                )
-                events.extend(cnotes)
+            # the sync/stage/lease path is host control work like the
+            # policy consult — timed under its own stage so the period
+            # breakdown accounts for the coordination tier
+            with self._timers.stage("coord_control"):
+                snap = self.controller.table_snapshot()
+                if grew:
+                    # pool growth changes every table shape: full fabric
+                    # resync at the new width (the step recompiles anyway
+                    # — `traces` counts the growth, not a hidden retrace)
+                    self.coord = self.coord_mgr.rebuild(snap)
+                else:
+                    # the period's control writes enter the switch chain:
+                    # commit now, install per-switch with chain-position
+                    # lag
+                    self.coord, cnotes = self.coord_mgr.on_control(
+                        self.coord, snap, now=now
+                    )
+                    events.extend(cnotes)
         if self.auto_period and now < self.scenario.cfg.n_epochs:
             # the pull at the final boundary has no next period to tune:
             # retuning there would append a period choice that never
@@ -1360,15 +1446,16 @@ class EpochDriver:
         with self._timers.stage("route_apply"):
             out = self._step(
                 self.store, self.directory, self.load_reg, self.sketch,
-                self.repl, self.ovl, self.coord, q, rng, jnp.int32(e)
+                self.repl, self.ovl, self.coord, self.metrics, q, rng,
+                jnp.int32(e)
             )
             if self._timers.enabled:
                 # profiling measures execution, not dispatch; values are
                 # untouched (an explicit, wall-time-only observer effect)
                 jax.block_until_ready(out)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, self.coord, plan, node_ops, retries, bounced, ostats,
-         cstats, spans) = out
+         self.ovl, self.coord, self.metrics, plan, node_ops, retries,
+         bounced, ostats, cstats, spans) = out
 
         self.host_syncs += 1   # the DES engine pulls the plan to the host
         issue = hops = None
@@ -1481,6 +1568,12 @@ class EpochDriver:
                 np.asarray([mk]), self._state_snapshot(),
                 hops=None if hops is None else np.asarray(hops)[None],
             )
+        # fold the host-computed columns into the ring row the device
+        # just wrote, then evaluate the SLO burn rates — L == 1 here, so
+        # the cells and values are bitwise the fused path's (parity
+        # contract on every ring leaf).  After on_segment: a burn alert's
+        # flight dump must include this epoch's ring entry.
+        self._fold_metrics(e, 1, [p50], [p99], [p999], [imb])
         return row
 
     def _state_snapshot(self) -> dict:
@@ -1517,6 +1610,57 @@ class EpochDriver:
         if self.ovl is None:
             return {}
         return OVL.summary(self.ovl)
+
+    # -- the fleet metrics plane -------------------------------------------
+    def _fold_metrics(self, e0: int, L: int, p50s, p99s, p999s, imbs
+                      ) -> None:
+        """Segment-boundary metrics work: fold the host-computed latency/
+        imbalance columns into the ``L`` ring rows the device just wrote,
+        then evaluate the SLO burn rates on device and feed the alert
+        engine (one extra host sync, gated on the plane so the disabled
+        path's sync count is untouched)."""
+        if self.metrics is None:
+            return
+        with self._timers.stage("metrics"):
+            vals = np.stack([
+                np.asarray(p50s, np.float64).reshape(-1)[:L],
+                np.asarray(p99s, np.float64).reshape(-1)[:L],
+                np.asarray(p999s, np.float64).reshape(-1)[:L],
+                np.asarray(imbs, np.float64).reshape(-1)[:L],
+            ], axis=1)
+            self.metrics = MTR.fold_host(
+                self.metrics, self._met_pos, vals, self.met_layout.host_cols
+            )
+            self._met_pos += L
+            if self.met_cfg.slos:
+                res = SLOM.evaluate_segment(
+                    self.metrics, self.met_layout, self.met_cfg.slos, L
+                )
+                self.host_syncs += 1   # the burn-rate arrays come home
+                self.met_engine.observe(e0, res)
+
+    def _on_slo_fire(self, spec, ev: dict) -> None:
+        """Rising-edge hook: a burn alert is an invariant breach — dump
+        the PR-7 flight ring with the SLO context in the reason."""
+        if self.telemetry is not None:
+            self.telemetry.breach(
+                f"slo_burn:{spec.name}:epoch {ev['epoch']} "
+                f"value {ev['value']:.2f} > {spec.bound} "
+                f"fast {ev['fast_burn']:.2f} slow {ev['slow_burn']:.2f}"
+            )
+
+    def metrics_view(self) -> dict:
+        """Chronological host view of the metrics ring (one sync)."""
+        if self.metrics is None:
+            raise ValueError("metrics plane disabled (metrics=None)")
+        self.host_syncs += 1
+        return MTR.series_view(self.metrics, self.met_layout)
+
+    def alert_timeline(self) -> list[dict]:
+        """The SLO alert timeline so far (empty when no SLOs fired)."""
+        if self.met_engine is None:
+            return []
+        return list(self.met_engine.timeline)
 
     # -- the fused period loop ---------------------------------------------
     def _segment_len(self, e0: int, n: int) -> int:
@@ -1565,15 +1709,16 @@ class EpochDriver:
         with self._timers.stage("route_apply"):
             out = self._period_fn(
                 self.store, self.directory, self.load_reg, self.sketch,
-                self.repl, self.ovl, self.coord, qs, rngs, live, eids,
+                self.repl, self.ovl, self.coord, self.metrics, qs, rngs,
+                live, eids,
             )
             if self._timers.enabled:
                 # profiling measures execution, not dispatch; values are
                 # untouched (an explicit, wall-time-only observer effect)
                 jax.block_until_ready(out)
         (self.store, self.directory, self.load_reg, self.sketch, self.repl,
-         self.ovl, self.coord, plan, node_ops, retries, ovf, bounced,
-         ostats, cstats, spans) = out
+         self.ovl, self.coord, self.metrics, plan, node_ops, retries, ovf,
+         bounced, ostats, cstats, spans) = out
         return (jax.tree.map(lambda x: x[:L], plan),
                 node_ops[:L], retries[:L], ovf[:L], bounced[:L], ostats[:L],
                 cstats[:L],
@@ -1601,10 +1746,11 @@ class EpochDriver:
                 )
                 rng = jax.random.fold_in(self.key, e0 + i)
                 (self.store, self.directory, self.load_reg, self.sketch,
-                 self.repl, self.ovl, self.coord, plan, node_ops, retries,
-                 bounced, ostats, cstats, spans) = self._step(
+                 self.repl, self.ovl, self.coord, self.metrics, plan,
+                 node_ops, retries, bounced, ostats, cstats,
+                 spans) = self._step(
                     self.store, self.directory, self.load_reg, self.sketch,
-                    self.repl, self.ovl, self.coord, q, rng,
+                    self.repl, self.ovl, self.coord, self.metrics, q, rng,
                     jnp.int32(e0 + i)
                 )
                 plans.append(plan)
@@ -1757,6 +1903,9 @@ class EpochDriver:
                     np.asarray(cnt), lat, issue, mks,
                     self._state_snapshot(), hops=hops,
                 )
+        # after on_segment: a burn alert firing in this segment dumps a
+        # flight ring that already holds the segment's entries
+        self._fold_metrics(e0, L, p50s, p99s, p999s, imbs)
         return rows
 
     def run(self) -> list[EpochMetrics]:

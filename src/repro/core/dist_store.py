@@ -503,21 +503,22 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
     ``pre(repl, ovl) -> (dirty, queue_pen)`` derives the routing inputs
     from the carried state exactly as the per-epoch driver does between
     steps; ``observe(q, ridx, target, chain, chain_len, sketch, r_plan,
-    repl, picked, bounced, ovl, r_ovl, eid, coord) -> (sketch, plan,
-    node_ops, repl, ovl, coord, ostats, cstats, spans)`` is the per-epoch
-    observe body verbatim (``coord`` the replicated coordination-tier
-    carry — an empty pytree / None when the tier is off).  ``fold_ovl``
-    mirrors the driver's overload-rng fold (a fold_in, not a wider split,
-    so the disabled path's rng streams are untouched).
+    repl, picked, bounced, ovl, r_ovl, eid, coord, metrics) -> (sketch,
+    plan, node_ops, repl, ovl, coord, metrics, ostats, cstats, spans)``
+    is the per-epoch observe body verbatim (``coord`` the replicated
+    coordination-tier carry, ``metrics`` the replicated fleet metrics
+    ring — each an empty pytree / None when its plane is off).
+    ``fold_ovl`` mirrors the driver's overload-rng fold (a fold_in, not
+    a wider split, so the disabled path's rng streams are untouched).
 
     Signature of the returned jitted fn (donated like the oracle period
-    scan — store slabs, load/sketch/repl/overload registers and the
-    coordination tier's switch tables; the directory is NOT donated, see
-    ``EpochDriver._build_oracle_period``):
+    scan — store slabs, load/sketch/repl/overload registers, the
+    coordination tier's switch tables and the metrics ring; the
+    directory is NOT donated, see ``EpochDriver._build_oracle_period``):
 
-      (store, directory, load_reg, sketch, repl, ovl, coord,
+      (store, directory, load_reg, sketch, repl, ovl, coord, metrics,
        qs, rngs, live, eids)
-        -> (store, directory, load_reg, sketch, repl, ovl, coord,
+        -> (store, directory, load_reg, sketch, repl, ovl, coord, metrics,
             plans, node_ops, bucket_overflow, overflow_totals, bounced,
             ostats, cstats, spans)
 
@@ -538,11 +539,12 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
         )
 
     def period_device(store, directory, load_reg, sketch, repl, ovl, coord,
-                      qs, rngs, live, eids):
+                      metrics, qs, rngs, live, eids):
         me = jax.lax.axis_index(axis)
 
         def scan_body(carry, xs):
-            store, directory, load_reg, sketch, repl, ovl, coord = carry
+            (store, directory, load_reg, sketch, repl, ovl, coord,
+             metrics) = carry
             q, rng, lv, eid = xs
             B = q.opcode.shape[0]
             Bl = B // n_shards
@@ -569,10 +571,10 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
                 # (exactly the per-epoch step's substitution)
                 picked_g = target
                 bounced_g = jnp.zeros((B,), jnp.bool_)
-            (sketch2, plan, node_ops, repl2, ovl2, coord2, ostats, cstats,
-             spans) = observe(
+            (sketch2, plan, node_ops, repl2, ovl2, coord2, metrics2,
+             ostats, cstats, spans) = observe(
                 q, ridx, target, chain, clen, sketch, r_plan, repl,
-                picked_g, bounced_g, ovl, r_ovl, eid, coord,
+                picked_g, bounced_g, ovl, r_ovl, eid, coord, metrics,
             )
             if not spread:
                 # tail-read path: registers tracked for parity (same units)
@@ -583,7 +585,8 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
                       keep(load_reg2, load_reg), keep(sketch2, sketch),
                       jax.tree.map(keep, repl2, repl),
                       jax.tree.map(keep, ovl2, ovl),
-                      jax.tree.map(keep, coord2, coord))
+                      jax.tree.map(keep, coord2, coord),
+                      jax.tree.map(keep, metrics2, metrics))
             # global overflow total (the store is sharded, one node per
             # device — psum of the local sum is jnp.sum(store.overflow))
             ovf = jax.lax.psum(jnp.sum(store2.overflow), axis)
@@ -592,7 +595,8 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
 
         carry, outs = jax.lax.scan(
             scan_body,
-            (store, directory, load_reg, sketch, repl, ovl, coord),
+            (store, directory, load_reg, sketch, repl, ovl, coord,
+             metrics),
             (qs, rngs, live, eids),
         )
         return (*carry, *outs)
@@ -603,11 +607,11 @@ def make_dist_period(mesh, directory_template: Directory, cfg: DistConfig,
     # queries stay whole on every device (the observe stage needs the
     # full batch; the data plane slices its share by axis index)
     in_specs = (store_spec, P(), P(), P(), P(), P(), P(), P(), P(), P(),
-                P())
-    out_specs = (store_spec, P(), P(), P(), P(), P(), P(),
+                P(), P())
+    out_specs = (store_spec, P(), P(), P(), P(), P(), P(), P(),
                  P(), P(), P(), P(), P(), P(), P(), P())
     fn = shard_map_compat(period_device, mesh, in_specs, out_specs)
-    return jax.jit(fn, donate_argnums=(0, 2, 3, 4, 5, 6))
+    return jax.jit(fn, donate_argnums=(0, 2, 3, 4, 5, 6, 7))
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):

@@ -14,6 +14,11 @@ p999* and *which pipeline stage burns the time*:
     profiler.py    — pipeline stage timers + kernel roofline rows
     flight.py      — ring-buffer flight recorder with postmortem dumps
     recorder.py    — the per-run host accumulator the driver feeds
+    metrics.py     — the fleet metrics plane: a (window, n_series) ring
+                     carried/donated through the fused scan
+    slo.py         — declarative SLOs + multi-window burn-rate alerts
+    incident.py    — one-command postmortem artifacts
+    dashboard.py   — terminal sparkline view over a persisted ring
 
 Enable with ``ClusterConfig(telemetry=TelemetryConfig(...))``; the
 driver then exposes ``EpochDriver.telemetry``.
@@ -32,6 +37,15 @@ from repro.telemetry.export import (
     write_jsonl,
 )
 from repro.telemetry.flight import FlightRecorder
+from repro.telemetry import incident
+from repro.telemetry.metrics import (
+    MetricsConfig,
+    MetricsState,
+    build_layout,
+    series_view,
+    to_openmetrics,
+)
+from repro.telemetry.slo import SLO, AlertEngine
 from repro.telemetry.profiler import (
     StageTimers,
     fmt_roofline_md,
@@ -57,4 +71,6 @@ __all__ = [
     "chrome_trace", "link_retries", "span_tree", "write_jsonl",
     "StageTimers", "kernel_roofline_rows", "fmt_roofline_md",
     "FlightRecorder",
+    "MetricsConfig", "MetricsState", "build_layout", "series_view",
+    "to_openmetrics", "SLO", "AlertEngine", "incident",
 ]

@@ -1,0 +1,286 @@
+"""The fleet metrics plane: a device-resident time-series ring.
+
+TurboKV's switches double as *monitoring stations* (paper §5.1); P4COM
+argues the aggregation itself belongs on the hop path.  This module is
+that idea for the reproduction: one fixed-shape ``(window, n_series)``
+float32 ring buffer rides the fused period ``lax.scan`` next to the
+store slabs (carried AND donated, exactly like the overload and
+coordination registers), sampling every epoch:
+
+* per-node series — routed ops, admission-queue depth, retry backlog,
+  admission probability (zeros when the overload plane is off);
+* fleet overload counters — the ``OVL.STAT_FIELDS`` row plus a derived
+  loss rate;
+* coordination-tier series — the ``CT.CSTAT_FIELDS`` row, the derived
+  redirect share, and the per-switch staleness lag (how many slots each
+  switch's table copy holds at a non-committed version);
+* CRAQ dirty-window series — dirty slot count, max and mean dirty-chain
+  width from the replication register file;
+* top-k hot-range heat — count-min sketch estimates of this epoch's
+  keys scatter-maxed onto their routed slots, then ``lax.top_k`` (the
+  paper's heavy-hitter monitoring role, exported instead of staying
+  policy-internal).
+
+Four columns (p50/p99/p999/imbalance) cannot be produced on device —
+DES latency is simulated host-side after the scan — so the driver folds
+them into the freshly written rows at each segment boundary
+(:func:`fold_host`); the per-epoch reference loop folds one row at a
+time, which is bitwise the same cells and values, keeping the fused ≡
+per-epoch parity contract extended to every ring leaf.
+
+Contracts (asserted in tests + the metrics bench gate):
+
+* ``metrics=None`` compiles the identical device program and produces
+  the bit-identical ``EpochMetrics`` stream (empty-pytree discipline,
+  like ``overload=None`` / ``coordination=None``);
+* recording consumes **no PRNG** and touches no store/counter state, so
+  the metric stream is also bit-identical with the ring ON — the plane
+  is a pure observer;
+* the ring keeps a fixed shape across ``split_overflowed`` pool growth
+  (per-slot detail is aggregated into fixed-width series), so
+  ``traces == 1 + growth_events`` still holds with the ring carried.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the columns the host folds in after the DES call (everything else is
+# written on device by record_epoch)
+HOST_FIELDS = ("p50", "p99", "p999", "imbalance")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """Static knobs of the metrics plane (trace constants)."""
+
+    window: int = 64          # ring length in epochs
+    topk: int = 4             # hot-range heat series count
+    # declarative SLO specs (repro.telemetry.slo.SLO), evaluated as
+    # fast+slow multi-window burn rates at every segment boundary
+    slos: tuple = ()
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("ring", "pos"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class MetricsState:
+    """The device-resident ring: ``ring[pos % window]`` is the last row.
+
+    ``pos`` counts recorded (live) epochs monotonically — the absolute
+    epoch id of row ``r`` in the current window is recoverable as
+    ``pos - n + i`` over the chronological view (:func:`series_view`).
+    """
+
+    ring: jnp.ndarray   # (window, n_series) f32
+    pos: jnp.ndarray    # () i32 — epochs recorded so far
+
+
+class SeriesLayout:
+    """Host-side name <-> column map for one driver geometry.
+
+    Built once at driver init (``build_layout``); the column order is
+    the exact concatenation order of :func:`record_epoch`, asserted by
+    construction: both enumerate the same blocks.
+    """
+
+    def __init__(self, names: tuple, *, num_nodes: int, n_switches: int,
+                 topk: int):
+        self.names = tuple(names)
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.num_nodes = num_nodes
+        self.n_switches = n_switches
+        self.topk = topk
+        self.host_cols = tuple(self.index[f] for f in HOST_FIELDS)
+
+    @property
+    def n_series(self) -> int:
+        return len(self.names)
+
+
+def build_layout(num_nodes: int, *, n_switches: int = 0,
+                 topk: int = 4) -> SeriesLayout:
+    """The series schema for one cluster geometry.
+
+    ``n_switches == 0`` (coordination tier off) omits the per-switch lag
+    block; everything else is always present (zeros when the producing
+    subsystem is disabled) so one layout serves every arm of a bench.
+    """
+    from repro import coordination_tier as CT
+    from repro import overload as OVL
+
+    names: list[str] = []
+    for fam in ("node_load", "queue_depth", "retry_backlog", "admit_prob"):
+        names.extend(f"{fam}/{i}" for i in range(num_nodes))
+    names.extend(f"ovl_{f}" for f in OVL.STAT_FIELDS)
+    names.append("loss_rate")
+    names.extend(f"coord_{f}" for f in CT.CSTAT_FIELDS)
+    names.append("redirect_share")
+    names.extend(f"switch_lag/{w}" for w in range(n_switches))
+    names.extend(("craq_dirty_slots", "craq_dirty_width_max",
+                  "craq_dirty_width_mean"))
+    for j in range(topk):
+        names.append(f"heat_val/{j}")
+    for j in range(topk):
+        names.append(f"heat_slot/{j}")
+    names.extend(HOST_FIELDS)
+    return SeriesLayout(tuple(names), num_nodes=num_nodes,
+                        n_switches=n_switches, topk=topk)
+
+
+def make_state(window: int, n_series: int) -> MetricsState:
+    return MetricsState(
+        ring=jnp.zeros((window, n_series), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def record_epoch(state: MetricsState, *, node_ops, ovl, ostats, cstats,
+                 coord, repl, sketch, keys, ridx, topk: int
+                 ) -> MetricsState:
+    """Write one epoch's row into the ring (pure, jittable — runs inside
+    the oracle body and the dist observe stage, shared verbatim so the
+    backends and the fused/per-epoch pairs stay the same math).
+
+    Consumes no PRNG; reads post-step ``ovl``, post-observe ``coord``
+    and post-advance ``repl`` (end-of-epoch state, like the flight ring's
+    snapshots).  ``ovl``/``coord`` may be None — their series record as
+    zeros / are absent from the layout respectively.
+    """
+    from repro.core.stats import sketch_query
+
+    f32 = jnp.float32
+    N = node_ops.shape[0]
+    parts = [node_ops.astype(f32)]
+    if ovl is not None:
+        parts.append(ovl.queue.astype(f32))
+        parts.append(ovl.retry.sum(axis=1).astype(f32))
+        parts.append(ovl.admit_prob.astype(f32))
+    else:
+        z = jnp.zeros((N,), f32)
+        parts.extend((z, z, z))
+    ost = ostats.astype(f32)
+    parts.append(ost)
+    parts.append((ost[5] / jnp.maximum(ost[0], 1.0))[None])   # loss_rate
+    cst = cstats.astype(f32)
+    parts.append(cst)
+    parts.append((cst[2] / jnp.maximum(cst[0], 1.0))[None])   # redirect share
+    if coord is not None:
+        # per-switch staleness lag: slots whose table copy sits at a
+        # non-committed version (the quantity the install chain drains)
+        lag = jnp.sum(coord.version != coord.committed[None, :], axis=1)
+        parts.append(lag.astype(f32))
+    # CRAQ dirty-window width per slot, aggregated to fixed shape so the
+    # ring survives split_overflowed pool growth without a reshape
+    width = jnp.sum(
+        repl.acked < repl.version[:, None], axis=1
+    ).astype(f32)                                             # (n_slots,)
+    dirty_slots = jnp.sum(width > 0).astype(f32)
+    parts.append(jnp.stack([
+        dirty_slots,
+        jnp.max(width),
+        jnp.sum(width) / jnp.maximum(dirty_slots, 1.0),
+    ]))
+    # top-k hot-range heat: this epoch's keys against the count-min
+    # sketch, scatter-maxed onto their routed slots (drop mode: unserved
+    # queries carry an out-of-range ridx and must not alias slot 0)
+    n_slots = repl.version.shape[0]
+    est = sketch_query(sketch, keys).astype(f32)
+    slot_heat = jnp.zeros((n_slots,), f32).at[ridx].max(est, mode="drop")
+    heat_val, heat_slot = jax.lax.top_k(slot_heat, topk)
+    parts.append(heat_val)
+    parts.append(heat_slot.astype(f32))
+    parts.append(jnp.zeros((len(HOST_FIELDS),), f32))  # host-fed later
+    row = jnp.concatenate(parts)
+    window = state.ring.shape[0]
+    ring = state.ring.at[state.pos % window].set(row)
+    return MetricsState(ring=ring, pos=state.pos + 1)
+
+
+def fold_host(state: MetricsState, start_pos: int, vals: np.ndarray,
+              host_cols: tuple) -> MetricsState:
+    """Fold the host-computed latency/imbalance columns into the ``L``
+    rows the device just wrote (positions ``start_pos .. start_pos+L-1``).
+
+    One eager batched update per segment; the per-epoch loop calls it
+    with L == 1 — same cells, same float32 values, bitwise."""
+    vals = np.asarray(vals, np.float32)
+    L = vals.shape[0]
+    window = state.ring.shape[0]
+    rows = (start_pos + jnp.arange(L)) % window
+    cols = jnp.asarray(host_cols, jnp.int32)
+    ring = state.ring.at[rows[:, None], cols[None, :]].set(jnp.asarray(vals))
+    return dataclasses.replace(state, ring=ring)
+
+
+# ---------------------------------------------------------------------------
+# host views / export
+# ---------------------------------------------------------------------------
+
+def series_view(state: MetricsState, layout: SeriesLayout) -> dict:
+    """Chronological host view of the ring: the retained epochs oldest
+    first, with their absolute epoch ids (one device->host sync — the
+    caller does the bookkeeping)."""
+    ring = np.asarray(state.ring, np.float32)
+    pos = int(state.pos)
+    window = ring.shape[0]
+    n = min(pos, window)
+    start = pos - n
+    rows = (start + np.arange(n)) % window
+    return {
+        "names": list(layout.names),
+        "epochs": [int(start + i) for i in range(n)],
+        "values": ring[rows],
+        "window": window,
+        "pos": pos,
+    }
+
+
+def _metric_parts(name: str) -> tuple[str, str | None]:
+    if "/" in name:
+        fam, idx = name.rsplit("/", 1)
+        return fam, idx
+    return name, None
+
+
+def to_openmetrics(view: dict, *, prefix: str = "turbokv") -> str:
+    """OpenMetrics-style text exposition of the LATEST ring row (every
+    series a gauge; indexed families get an ``idx`` label)."""
+    lines: list[str] = []
+    if not view["epochs"]:
+        return "# EOF\n"
+    last = np.asarray(view["values"])[-1]
+    lines.append(f"# TYPE {prefix}_epoch gauge")
+    lines.append(f"{prefix}_epoch {view['epochs'][-1]}")
+    seen: set[str] = set()
+    for name, val in zip(view["names"], last):
+        fam, idx = _metric_parts(name)
+        metric = f"{prefix}_{fam}"
+        if fam not in seen:
+            seen.add(fam)
+            lines.append(f"# TYPE {metric} gauge")
+        label = "" if idx is None else f'{{idx="{idx}"}}'
+        lines.append(f"{metric}{label} {float(val):g}")
+    lines.append("# EOF")
+    return "\n".join(lines) + "\n"
+
+
+def write_view(path: str, view: dict, *, alerts: list | None = None) -> str:
+    """Persist a series view (plus an optional alert timeline) as JSON —
+    the dashboard CLI's input format."""
+    doc = dict(view)
+    doc["values"] = np.asarray(view["values"], np.float64).tolist()
+    if alerts is not None:
+        doc["alerts"] = alerts
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path

@@ -8,9 +8,11 @@ Two halves, both feeding the ROADMAP's dist-fusion / roofline items:
   context; enabled they also block on the device step's output so the
   timer measures execution, not dispatch (an explicit observer effect —
   values are unchanged, only wall time is).
-* :func:`kernel_roofline_rows` — lower + compile the three routing hot
+* :func:`kernel_roofline_rows` — lower + compile the five routing hot
   kernels (``range_match`` / ``range_match_spread`` /
-  ``range_match_spread_dirty``), feed the compiled HLO through
+  ``range_match_spread_dirty`` / ``range_match_apply`` — PR 8's fused
+  route→apply — / ``range_match_stale`` — PR 9's replicated-tier stale
+  lookup), feed the compiled HLO through
   ``launch/hlo_stats.analyze_hlo`` and place each against the
   ``launch/mesh`` TPU v5e peaks (197 TF/s bf16, 819 GB/s HBM).  Off-TPU
   the reference (non-Pallas) implementation is analyzed — it is
@@ -70,15 +72,17 @@ class StageTimers:
 # kernel roofline
 # ---------------------------------------------------------------------------
 
-KERNELS = ("range_match", "range_match_spread", "range_match_spread_dirty")
+KERNELS = ("range_match", "range_match_spread", "range_match_spread_dirty",
+           "range_match_apply", "range_match_stale")
 
 
 def _kernel_thunks(*, batch, num_ranges, num_nodes, replication, r_max,
-                   n_slots, use_pallas, seed):
+                   n_slots, use_pallas, seed, capacity=1024, n_switches=4):
     import jax
     import jax.numpy as jnp
 
     from repro import core as C
+    from repro.coordination_tier import state as CTS
     from repro.kernels.range_match import ops as KOPS
 
     directory = C.make_directory(num_ranges, num_nodes, replication,
@@ -91,6 +95,16 @@ def _kernel_thunks(*, batch, num_ranges, num_nodes, replication, r_max,
     load_reg = jnp.zeros((num_nodes,), jnp.uint32)
     dirty = jnp.zeros((directory.num_slots, r_max), jnp.bool_)
     r2 = jax.random.fold_in(rng, 1)
+    # PR 8's fused route->apply also binary-searches each serving node's
+    # sorted slab: give it a populated (N, C) keys table.
+    store_keys = jnp.sort(jax.random.randint(
+        jax.random.fold_in(rng, 2), (num_nodes, capacity), 0,
+        np.iinfo(np.int32).max, dtype=jnp.int32).astype(jnp.uint32), axis=1)
+    # PR 9's replicated-tier stale lookup routes against per-switch table
+    # copies; every switch starts at the controller's committed snapshot.
+    tables = {k: np.asarray(getattr(directory, k)) for k in
+              ("slot_lo", "slot_hi", "live", "chains", "chain_len")}
+    coord = CTS.make_state(tables, n_switches)
     kw = dict(use_pallas=use_pallas)
     return {
         "range_match": lambda: KOPS.range_match(
@@ -99,6 +113,10 @@ def _kernel_thunks(*, batch, num_ranges, num_nodes, replication, r_max,
             directory, keys, opcodes, load_reg, r2, **kw),
         "range_match_spread_dirty": lambda: KOPS.range_match_spread_dirty(
             directory, keys, opcodes, load_reg, dirty, r2, **kw),
+        "range_match_apply": lambda: KOPS.range_match_apply(
+            directory, keys, opcodes, load_reg, dirty, store_keys, r2, **kw),
+        "range_match_stale": lambda: KOPS.range_match_stale(
+            coord, keys, opcodes, **kw),
     }
 
 
@@ -179,6 +197,8 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
     rows = kernel_roofline_rows(batch=args.batch, use_pallas=args.pallas)
+    missing = set(KERNELS) - {r["kernel"] for r in rows}
+    assert not missing, f"roofline table missing kernels: {sorted(missing)}"
     print(fmt_roofline_md(rows))
     if args.json:
         with open(args.json, "w") as f:

@@ -159,6 +159,10 @@ def pair(scen_name, pol, ccfg, scen_kw=None):
     if drv_r.coord is not None:
         for la, lb in zip(jax.tree.leaves(drv_r.coord), jax.tree.leaves(drv_f.coord)):
             assert np.array_equal(np.asarray(la), np.asarray(lb)), scen_name
+    if drv_r.metrics is not None:
+        for la, lb in zip(jax.tree.leaves(drv_r.metrics),
+                          jax.tree.leaves(drv_f.metrics)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), scen_name
     if drv_r.telemetry is not None:
         er, ef = drv_r.telemetry.epochs, drv_f.telemetry.epochs
         assert len(er) == len(ef)
@@ -216,6 +220,36 @@ for r in rows:
     assert r.routed == r.direct + r.redirected, r.epoch
 assert sum(r.mis_served for r in rows) == 0
 assert sum(r.redirected for r in rows) > 0
+""")
+
+
+def test_fused_dist_metrics_plane_parity():
+    """The PR-10 extension of the dist parity gate: with the fleet
+    metrics ring carried (and donated) through the fused shard_map period
+    scan, every ring leaf must match the per-epoch dist driver bit for
+    bit, SLO burn evaluation included — and metrics=None must still
+    produce the bit-identical EpochMetrics stream on the dist backend."""
+    run_sub(FUSED_PAIR + """
+from repro.telemetry.metrics import MetricsConfig
+from repro.telemetry.slo import SLO
+ovl = OverloadConfig(queue_cap=48, service_rate=80, inflation=3.0,
+                     queue_weight=2)
+mcfg = MetricsConfig(window=32, topk=4,
+                     slos=(SLO(name="p999_fleet", series="p999", bound=50.0,
+                               objective=0.9, fast_window=2, slow_window=4),))
+rows_on = pair("shifting_hotspot", "overload_adaptive",
+               ClusterConfig(**base, overload=ovl, metrics=mcfg),
+               scen_kw=dict(theta=1.2, shift_every=2))
+# pure-observer on the dist backend: metrics=None rows are bit-identical
+scen = make_scenario("shifting_hotspot", scfg, theta=1.2, shift_every=2)
+drv_off = EpochDriver(scen, make_policy("overload_adaptive"),
+                      ClusterConfig(**base, overload=ovl, metrics=None),
+                      backend="dist", mesh=mesh, fused=True)
+rows_off = drv_off.run()
+assert len(rows_off) == len(rows_on)
+for a, b in zip(rows_off, rows_on):
+    assert dataclasses.asdict(a) == dataclasses.asdict(b), a.epoch
+assert drv_off.traces == 1
 """)
 
 

@@ -1,0 +1,349 @@
+"""The fleet metrics plane (PR 10): repro.telemetry.{metrics,slo,incident}.
+
+Pins the tentpole contracts:
+
+* **pure observer** — ``metrics=None`` produces the bit-identical
+  ``EpochMetrics`` stream (empty-pytree discipline, no PRNG consumed),
+  and the fused step still compiles exactly once with the ring carried;
+* **ring parity** — every leaf of the ``(window, n_series)`` ring is
+  bitwise equal between the fused period scan and the per-epoch
+  reference loop (host-folded latency columns included);
+* **growth-proof shape** — the ring survives ``split_overflowed`` pool
+  growth without reshaping, so ``traces == 1 + growth_events`` holds
+  with the metrics plane on;
+* **exact alerting** — the on-device multi-window burn-rate evaluation
+  fires at exactly the epochs the independent numpy oracle
+  (:func:`repro.telemetry.slo.reference_alerts`) derives from the same
+  float32 series, and the rising edge reaches the PR-7 flight recorder;
+* the satellites: driver-side SLO validation, incident-report
+  completeness, the OpenMetrics/dashboard/export surfaces, and the
+  ``AlertEngine`` edge semantics.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterConfig,
+    EpochDriver,
+    ScenarioConfig,
+    TelemetryConfig,
+    make_policy,
+    make_scenario,
+)
+from repro.overload import OverloadConfig
+from repro.telemetry import dashboard, incident
+from repro.telemetry import metrics as MTR
+from repro.telemetry import slo as SLOM
+from repro.telemetry.metrics import MetricsConfig
+from repro.telemetry.slo import SLO, AlertEngine
+
+SCFG = ScenarioConfig(n_epochs=8, epoch_ops=256, n_records=512,
+                      value_dim=2, seed=3)
+
+
+def _ccfg(period=2, **kw):
+    return ClusterConfig(num_nodes=8, num_ranges=32, replication=2, r_max=4,
+                         n_clients=16, report_every=period,
+                         imbalance_threshold=1.1, max_moves_per_round=6, **kw)
+
+
+def _drive(metrics, fused=True, period=2, pol="full_adaptive", **ccfg_kw):
+    scen = make_scenario("shifting_hotspot", SCFG, theta=1.2, shift_every=2)
+    drv = EpochDriver(scen, make_policy(pol),
+                      _ccfg(period, metrics=metrics, **ccfg_kw), fused=fused)
+    return drv, drv.run()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: pure observer + every-ring-leaf parity
+# ---------------------------------------------------------------------------
+
+def test_metrics_none_bit_parity_and_single_trace():
+    mcfg = MetricsConfig(window=32, topk=4)
+    drv_off, rows_off = _drive(None)
+    drv_on, rows_on = _drive(mcfg)
+    assert len(rows_off) == len(rows_on)
+    for a, b in zip(rows_off, rows_on):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b), a.epoch
+    assert drv_off.traces == 1 and drv_on.traces == 1
+    assert drv_off.metrics is None and drv_off.met_layout is None
+    # the ring actually recorded: one row per live epoch
+    assert int(drv_on.metrics.pos) == SCFG.n_epochs
+
+
+def test_fused_ring_bitident_to_per_epoch():
+    mcfg = MetricsConfig(window=32, topk=4)
+    drv_f, rows_f = _drive(mcfg, fused=True)
+    drv_r, rows_r = _drive(mcfg, fused=False)
+    for a, b in zip(rows_r, rows_f):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b), a.epoch
+    np.testing.assert_array_equal(np.asarray(drv_f.metrics.ring),
+                                  np.asarray(drv_r.metrics.ring))
+    assert int(drv_f.metrics.pos) == int(drv_r.metrics.pos)
+    # host-folded latency columns landed in the device rows (non-zero
+    # where the DES produced them) and agree with the metric stream
+    view = drv_f.metrics_view()
+    col = view["names"].index("p999")
+    np.testing.assert_array_equal(
+        np.asarray(view["values"])[:, col],
+        np.asarray([r.p999 for r in rows_f], np.float32))
+
+
+def test_ring_parity_with_overload_plane():
+    ovl = OverloadConfig(queue_cap=48, service_rate=80, inflation=3.0,
+                         queue_weight=2)
+    mcfg = MetricsConfig(window=32, topk=4)
+    drv_f, _ = _drive(mcfg, fused=True, pol="overload_adaptive", overload=ovl)
+    drv_r, _ = _drive(mcfg, fused=False, pol="overload_adaptive",
+                      overload=ovl)
+    np.testing.assert_array_equal(np.asarray(drv_f.metrics.ring),
+                                  np.asarray(drv_r.metrics.ring))
+    # the overload series are live, not zero-padding
+    view = drv_f.metrics_view()
+    vals = np.asarray(view["values"])
+    admit = [i for i, n in enumerate(view["names"])
+             if n.startswith("admit_prob/")]
+    assert vals[:, admit].max() > 0
+
+
+def test_ring_survives_pool_growth_traces_counts_growth():
+    scfg = ScenarioConfig(n_epochs=10, epoch_ops=512, n_records=2048,
+                          read_ratio=0.3, value_dim=2)
+    scen = make_scenario("keyspace_growth", scfg)
+    drv = EpochDriver(
+        scen, make_policy("full_adaptive"),
+        ClusterConfig(num_nodes=4, num_ranges=8, n_slots=8, capacity=128,
+                      split_overflow=True, report_every=2,
+                      metrics=MetricsConfig(window=16, topk=4)))
+    rows = drv.run()
+    grows = [e for r in rows for e in r.events if e.startswith("grow_pool:")]
+    assert grows, "pool never grew under capacity pressure"
+    assert drv.traces == 1 + drv.growth_events
+    # the ring kept its fixed shape across the growth and kept recording
+    assert drv.metrics.ring.shape == (16, drv.met_layout.n_series)
+    assert int(drv.metrics.pos) == scfg.n_epochs
+
+
+def test_ring_wraps_past_window():
+    mcfg = MetricsConfig(window=4, topk=4)   # window < n_epochs: wraps
+    drv, rows = _drive(mcfg)
+    view = drv.metrics_view()
+    assert view["epochs"] == [4, 5, 6, 7]    # last `window` epochs only
+    col = view["names"].index("p50")
+    np.testing.assert_array_equal(
+        np.asarray(view["values"])[:, col],
+        np.asarray([r.p50 for r in rows[-4:]], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate alerts: exact vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def _slo(bound, **kw):
+    kw.setdefault("objective", 0.9)
+    kw.setdefault("fast_window", 2)
+    kw.setdefault("slow_window", 4)
+    return SLO(name="p999_fleet", series="p999", bound=bound, **kw)
+
+
+def test_alert_firing_epochs_match_reference_exactly():
+    # bound below the steady tail: the breach is forced and sustained
+    mcfg = MetricsConfig(window=32, slos=(_slo(10.0),))
+    drv, rows = _drive(mcfg)
+    vals = np.asarray([r.p999 for r in rows], np.float32)
+    ref = SLOM.reference_alerts(vals, mcfg.slos[0])
+    fired = drv.met_engine.firing_epochs("p999_fleet")
+    assert fired, "forced breach never fired"
+    assert fired == ref["fire_epochs"]
+    # the timeline event carries the burn rates of the firing epoch
+    ev = drv.met_engine.timeline[0]
+    e = ev["epoch"]
+    assert ev["state"] == "fire"
+    assert ev["fast_burn"] == pytest.approx(float(ref["fast"][e]))
+    assert ev["slow_burn"] == pytest.approx(float(ref["slow"][e]))
+    assert drv.alert_timeline() == drv.met_engine.timeline
+
+
+def test_alert_fire_and_resolve_match_reference_per_epoch_too():
+    # per-epoch driver walks the same segments with L=1: identical edges
+    mcfg = MetricsConfig(window=32, slos=(_slo(10.0),))
+    drv_f, _ = _drive(mcfg, fused=True)
+    drv_r, _ = _drive(mcfg, fused=False)
+    assert drv_f.met_engine.timeline == drv_r.met_engine.timeline
+
+
+def test_no_alert_when_bound_above_tail():
+    mcfg = MetricsConfig(window=32, slos=(_slo(1e9),))
+    drv, _ = _drive(mcfg)
+    assert drv.met_engine.timeline == []
+    assert drv.alert_timeline() == []
+
+
+def test_burn_alert_triggers_flight_recorder(tmp_path):
+    mcfg = MetricsConfig(window=32, slos=(_slo(10.0),))
+    drv, _ = _drive(mcfg, telemetry=TelemetryConfig(
+        sample_rate=1 / 4, flight_dir=str(tmp_path), flight_epochs=4))
+    assert any(b.startswith("slo_burn:p999_fleet")
+               for b in drv.telemetry.breaches)
+    assert drv.telemetry.flight.dumps
+    data = json.load(open(drv.telemetry.flight.dumps[0]))
+    assert data["reason"].startswith("slo_burn:p999_fleet")
+
+
+def test_driver_validates_slo_series_and_window():
+    with pytest.raises(ValueError, match="unknown series"):
+        _drive(MetricsConfig(window=32, slos=(
+            SLO(name="x", series="nope", bound=1.0),)))
+    with pytest.raises(ValueError, match="too"):
+        # window must retain slow_window + period epochs
+        _drive(MetricsConfig(window=4, slos=(_slo(10.0, slow_window=16),)))
+
+
+def test_slo_spec_validation():
+    with pytest.raises(ValueError, match="objective"):
+        SLO(name="a", series="p999", bound=1.0, objective=1.0)
+    with pytest.raises(ValueError, match="cmp"):
+        SLO(name="a", series="p999", bound=1.0, cmp="ge")
+    with pytest.raises(ValueError, match="fast_window"):
+        SLO(name="a", series="p999", bound=1.0, fast_window=8, slow_window=4)
+    assert SLO(name="a", series="p999", bound=1.0,
+               objective=0.98).budget == pytest.approx(0.02)
+
+
+def test_reference_burn_clamps_to_available_history():
+    spec = _slo(5.0)
+    vals = np.array([10.0, 10.0, 1.0, 1.0], np.float32)
+    burn = SLOM.reference_burn(vals, spec, 4)
+    # epoch 0 has one epoch of history: frac 1/1, not 1/4
+    assert burn[0] == pytest.approx(1.0 / spec.budget)
+    assert burn[3] == pytest.approx(0.5 / spec.budget)
+
+
+def test_alert_engine_edge_semantics():
+    fired = []
+    eng = AlertEngine((_slo(1.0),), on_fire=lambda s, ev: fired.append(ev))
+    mk = lambda firing: {"p999_fleet": {
+        "firing": np.array(firing),
+        "fast": np.zeros(len(firing), np.float32),
+        "slow": np.zeros(len(firing), np.float32),
+        "value": np.zeros(len(firing), np.float32)}}
+    eng.observe(0, mk([False, True]))     # rising at epoch 1
+    eng.observe(2, mk([True, False]))     # falling at epoch 3
+    eng.observe(4, mk([True]))            # rising again at epoch 4
+    states = [(e["epoch"], e["state"]) for e in eng.timeline]
+    assert states == [(1, "fire"), (3, "resolve"), (4, "fire")]
+    assert eng.firing_epochs("p999_fleet") == [1, 4]
+    assert len(fired) == 2
+    s = eng.summary()
+    assert s["fires"] == 2 and s["active"] == {"p999_fleet": True}
+
+
+# ---------------------------------------------------------------------------
+# incident reports + export surfaces
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def breached_driver(tmp_path_factory):
+    out = tmp_path_factory.mktemp("incident")
+    mcfg = MetricsConfig(window=32, slos=(_slo(10.0),))
+    drv, rows = _drive(mcfg, telemetry=TelemetryConfig(
+        sample_rate=1 / 4, flight_dir=str(out), flight_epochs=4))
+    return drv, rows, out
+
+
+def test_incident_report_complete(breached_driver):
+    drv, rows, out = breached_driver
+    doc = incident.report(drv, out_dir=str(out), tag="t")
+    assert doc["alerts"]["fires"] >= 1
+    assert doc["epochs_recorded"] == SCFG.n_epochs
+    assert doc["slos"][0]["name"] == "p999_fleet"
+    assert any(b.startswith("slo_burn:") for b in doc["breaches"])
+    assert doc["flight_dumps"]
+    assert "share" in doc["p999_attribution"]
+    assert "retry_orbits" in doc
+    assert doc["stage_timers"]["stage_s"]
+    assert doc["metrics"]["last"]["p999"] == pytest.approx(rows[-1].p999)
+    # both artifacts landed and the JSON round-trips
+    jdoc = json.load(open(doc["paths"][0]))
+    assert jdoc["scenario"] == "shifting_hotspot"
+    md = open(doc["paths"][1]).read()
+    assert "# Incident report" in md and "| fire |" in md.replace(
+        "fire |", "fire |")
+
+
+def test_incident_requires_metrics_plane():
+    drv, _ = _drive(None)
+    with pytest.raises(ValueError, match="metrics plane"):
+        incident.build(drv)
+
+
+def test_openmetrics_and_view_roundtrip(breached_driver):
+    drv, rows, out = breached_driver
+    view = drv.metrics_view()
+    om = MTR.to_openmetrics(view)
+    assert om.endswith("# EOF\n")
+    assert f"turbokv_epoch {SCFG.n_epochs - 1}" in om
+    assert "turbokv_p999 " in om
+    assert 'turbokv_node_load{idx="0"}' in om
+    # one # TYPE line per family, not per indexed series
+    assert om.count("# TYPE turbokv_node_load gauge") == 1
+    path = MTR.write_view(str(out / "view.json"), view,
+                          alerts=drv.alert_timeline())
+    doc = json.load(open(path))
+    assert doc["names"] == view["names"]
+    assert doc["alerts"][0]["state"] == "fire"
+
+
+def test_dashboard_renders_ring_and_alerts(breached_driver):
+    drv, rows, out = breached_driver
+    path = MTR.write_view(str(out / "dash.json"), drv.metrics_view(),
+                          alerts=drv.alert_timeline())
+    text = dashboard.render(json.load(open(path)))
+    assert "fleet metrics" in text
+    assert "node_load" in text and "p999" in text
+    assert "fire" in text
+    # family filter + CLI main round-trip
+    outfile = str(out / "dash.txt")
+    assert dashboard.main(["--view", path, "--series", "p999",
+                           "--out", outfile]) == 0
+    body = open(outfile).read()
+    assert "p999" in body and "node_load" not in body
+
+
+def test_sparkline_downsamples_and_bounds():
+    assert dashboard.sparkline([]) == ""
+    assert dashboard.sparkline([1.0, 1.0, 1.0]) == "▁▁▁"
+    s = dashboard.sparkline(np.arange(1000.0), width=10)
+    assert len(s) == 10
+    assert s[0] == "▁" and s[-1] == "█"
+    # spike in a long flat series stays visible (bucket max, not mean)
+    flat = np.zeros(500)
+    flat[250] = 100.0
+    assert "█" in dashboard.sparkline(flat, width=10)
+
+
+def test_fold_host_batched_equals_per_epoch():
+    layout = MTR.build_layout(4, n_switches=0, topk=2)
+    vals = np.arange(12, dtype=np.float32).reshape(3, 4) * 1.5
+    s_batch = MTR.fold_host(MTR.make_state(8, layout.n_series), 0, vals,
+                            layout.host_cols)
+    s_loop = MTR.make_state(8, layout.n_series)
+    for i in range(3):
+        s_loop = MTR.fold_host(s_loop, i, vals[i:i + 1], layout.host_cols)
+    np.testing.assert_array_equal(np.asarray(s_batch.ring),
+                                  np.asarray(s_loop.ring))
+
+
+def test_layout_blocks_and_switch_lag_presence():
+    lay = MTR.build_layout(4, n_switches=0, topk=2)
+    assert not any(n.startswith("switch_lag") for n in lay.names)
+    lay2 = MTR.build_layout(4, n_switches=3, topk=2)
+    assert [n for n in lay2.names if n.startswith("switch_lag")] == [
+        "switch_lag/0", "switch_lag/1", "switch_lag/2"]
+    assert lay2.n_series == lay.n_series + 3
+    # host columns resolve to the trailing block
+    assert lay.host_cols == tuple(range(lay.n_series - 4, lay.n_series))

@@ -469,6 +469,63 @@ def test_flight_recorder_ring_and_dedupe(tmp_path):
     assert json.load(open(p1))["epochs"][0]["arr"] == [0, 1]
 
 
+def test_flight_dump_dedup_across_mixed_reasons(tmp_path):
+    # interleaved breach kinds each dump exactly once — the dedup key is
+    # the kind prefix, not the full reason, and kinds don't shadow each
+    # other no matter the arrival order
+    fr = FlightRecorder(4, str(tmp_path), tag="mix")
+    fr.record({"epoch": 0})
+    seq = ["slo_p999:epoch 1", "conservation:gap 3", "slo_p999:epoch 2",
+           "slo_burn:p999_fleet:epoch 2", "conservation:gap 4",
+           "slo_burn:p999_fleet:epoch 3", "slo_p999:epoch 5"]
+    paths = [fr.dump(r) for r in seq]
+    assert [p is not None for p in paths] == [
+        True, True, False, True, False, False, False]
+    assert len(fr.dumps) == 3
+    kinds = [json.load(open(p))["reason"].split(":", 1)[0]
+             for p in fr.dumps]
+    assert kinds == ["slo_p999", "conservation", "slo_burn"]
+    # artifacts are distinct files, numbered in dump order
+    assert len(set(fr.dumps)) == 3
+
+
+def test_flight_ring_wrap_at_exactly_window(tmp_path):
+    # epoch window boundary: after exactly `window` records the ring is
+    # full but nothing has been evicted; record window+1 and the oldest
+    # entry (and only it) falls out
+    w = 5
+    fr = FlightRecorder(w, str(tmp_path), tag="wrap")
+    for i in range(w):
+        fr.record({"epoch": i})
+    assert [e["epoch"] for e in fr.ring] == list(range(w))
+    p_full = fr.dump("at_window:full")
+    assert json.load(open(p_full))["epochs_recorded"] == w
+    fr.record({"epoch": w})
+    assert len(fr.ring) == w
+    assert [e["epoch"] for e in fr.ring] == list(range(1, w + 1))
+    p_wrap = fr.dump("post_wrap:one past")
+    assert json.load(open(p_wrap))["epochs"][0]["epoch"] == 1
+
+
+def test_masked_p99_batch_all_masked_row():
+    # an entirely masked-out matrix: every row reports 0.0, bitwise equal
+    # to the per-row loop oracle, and the +inf padding never leaks a
+    # warning or a NaN through the discarded lanes
+    lat = np.linspace(1.0, 2.0, 4 * 8).reshape(4, 8)
+    mask = np.zeros((4, 8), bool)
+    with np.errstate(invalid="raise", over="raise"):
+        got = masked_p99_batch(lat, mask)
+    np.testing.assert_array_equal(got, np.zeros(4))
+    np.testing.assert_array_equal(got, masked_p99_batch_loop(lat, mask))
+    # one live row among all-masked rows keeps its exact percentile
+    mask[2, :3] = True
+    got2 = masked_p99_batch(lat, mask)
+    np.testing.assert_array_equal(
+        got2, masked_p99_batch_loop(lat, mask))
+    assert got2[2] == np.percentile(lat[2, :3], 99)
+    assert got2[0] == got2[1] == got2[3] == 0.0
+
+
 def test_slo_breach_dumps_flight_ring(tmp_path):
     tel = TelemetryConfig(sample_rate=1 / 4, slo_p999=1e-3,
                           flight_dir=str(tmp_path), flight_epochs=4)
